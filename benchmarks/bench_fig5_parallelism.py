@@ -1,0 +1,108 @@
+"""Paper Fig. 5 analogue: throughput vs spatial-parallelism degree.
+
+The paper replicates feature-computation units across AIE columns
+(1/4/8/25/50 units) and measures simulator throughput, observing near-linear
+scaling to 25 units. Our spatial axis is TPU chips; since this container has
+one CPU device, the scaling numbers come from the same source as the paper's:
+a model (roofline over compiled HLO) rather than wall-clock. A subprocess
+lowers the sharded feature pipeline over 1..64 fake devices, parses the
+compiled module per device count, and reports model throughput:
+
+    tput(P) = stream_bytes / max(compute_s, memory_s, collective_s)
+
+We also emit single-device wall-clock scaling over the stream length
+(linearity in N — what the AIE simulator's steady-state assumption implies).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+
+from benchmarks.common import emit, time_fn
+
+_SUBPROC = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+import json, sys
+sys.path.insert(0, {repo!r})
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+from repro.core import random_gaussians, look_at_camera
+from repro.core.pipeline import sharded_features
+from repro.core.gaussians import GAUSSIAN_RECORD_BYTES
+from benchmarks import roofline as R
+
+N = 1_048_576  # 1M-Gaussian stream (paper's scene: 389,434)
+g = jax.eval_shape(lambda k: random_gaussians(k, N), jax.random.PRNGKey(0))
+cam = look_at_camera((0, 1.0, -6.0), (0,0,0), width=1024, height=1024)
+out = {{}}
+for p in [1, 4, 8, 16, 32, 64]:
+    mesh = jax.make_mesh((p,), ("gs",), axis_types=(jax.sharding.AxisType.Auto,))
+    fn = sharded_features(mesh, ("gs",))
+    with mesh:
+        compiled = jax.jit(fn).lower(g, cam).compile()
+    rep = R.analyze(compiled.as_text(), num_partitions=p)
+    bound = max(rep.compute_s, rep.memory_s, rep.collective_s)
+    tput = N * GAUSSIAN_RECORD_BYTES / bound / 1e9  # GB/s of gaussian records
+    out[p] = dict(compute_s=rep.compute_s, memory_s=rep.memory_s,
+                  collective_s=rep.collective_s, tput_gbps=tput)
+print("JSON" + json.dumps(out))
+"""
+
+
+def main() -> None:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(repo, "src")
+
+    # 1) model-based scaling over device count (paper Fig. 5 axis)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROC.format(repo=repo, src=src)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    line = [l for l in proc.stdout.splitlines() if l.startswith("JSON")]
+    if not line:
+        raise RuntimeError(f"fig5 subprocess failed: {proc.stderr[-2000:]}")
+    data = json.loads(line[0][4:])
+    base = data["1"]["tput_gbps"]
+    for p, d in data.items():
+        emit(
+            f"fig5/roofline_tput/p{p}",
+            d["memory_s"] * 1e6,
+            f"{d['tput_gbps']:.1f}GBps;scaling={d['tput_gbps'] / base:.1f}x",
+        )
+
+    # 2) single-device wall-clock linearity in stream length
+    import jax.numpy as jnp
+
+    from repro.core import features as F
+    from repro.core import look_at_camera, random_gaussians
+    from repro.core.gaussians import GAUSSIAN_RECORD_BYTES
+
+    cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=512, height=512)
+    f = jax.jit(lambda g: F.compute_features_fused(g, cam))
+    t_base = None
+    for n in [16_384, 65_536, 262_144]:
+        g = random_gaussians(jax.random.PRNGKey(n), n)
+        t = time_fn(f, g, warmup=1, iters=3)
+        if t_base is None:
+            t_base = t / n
+        emit(
+            f"fig5/stream_scaling/n{n}",
+            t,
+            f"{n * GAUSSIAN_RECORD_BYTES / t:.0f}MBps;per_gaussian_ns={t * 1000 / n:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

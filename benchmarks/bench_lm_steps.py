@@ -1,0 +1,51 @@
+"""LM substrate step benchmarks: smoke-config train/decode wall time per arch.
+
+Not a paper table — tracks the substrate's CPU-measurable health and feeds
+the 'useful-flops' sanity check (analytic flops / wall time is reported as
+derived GFLOP/s)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import params as P
+from repro.models.api import family_module
+
+B, T = 2, 128
+
+
+def main() -> None:
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        mod = family_module(cfg)
+        params = P.init_tree(jax.random.PRNGKey(0), mod.param_defs(cfg))
+        key = jax.random.PRNGKey(1)
+        batch = {
+            "tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+        if cfg.family == "vlm":
+            from repro.models.vlm import VIT_DIM
+
+            batch["patches"] = jax.random.normal(key, (B, cfg.num_patches, VIT_DIM))
+            batch["tokens"] = batch["tokens"][:, : T - cfg.num_patches]
+            batch["labels"] = batch["labels"][:, : T - cfg.num_patches]
+
+        grad_fn = jax.jit(jax.value_and_grad(lambda p: mod.loss_fn(cfg, p, batch)))
+        t_train = time_fn(grad_fn, params, warmup=1, iters=3)
+        emit(f"lm/{arch}/train_step", t_train, f"B{B}xT{T}")
+
+        state = mod.init_decode_state(cfg, B, 64)
+        tok = jnp.zeros((B,), jnp.int32)
+        dec = jax.jit(lambda s, t: mod.decode_step(cfg, params, s, t))
+        t_dec = time_fn(dec, state, tok, warmup=1, iters=5)
+        emit(f"lm/{arch}/decode_step", t_dec, f"B{B}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Table I analogue: per-kernel cost of computing one Gaussian's features.
+
+The paper reports cycles per Gaussian for each of the 7 (post-partitioning)
+kernels under Naive vs in-tile-optimized (Stream/Window) execution. We report
+microseconds per 100-Gaussian batch (the paper's simulator input size) for:
+
+  naive      — per-Gaussian scalar loops (paper Listing 1 semantics)
+  staged     — SoA-vectorized stage (paper Listing 2 / in-tile optimized)
+
+``derived`` column: ns/Gaussian and the naive/staged speedup per stage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import look_at_camera, random_gaussians
+from repro.core import features as F
+
+N = 100  # paper: "100 Gaussian samples were randomly generated"
+
+
+def naive_stage_fns(cam, sh_degree=3):
+    """Per-stage naive (vmap-of-scalar-loops) implementations."""
+    return {
+        "cov3D": lambda g: jax.vmap(F._naive_cov3d_single)(g.quats, g.scales()),
+        "projection": lambda g: F.stage_projection(g.positions, cam),
+        "Jacobian": lambda g: F.stage_jacobian(
+            F.stage_projection(g.positions, cam)[0], cam
+        ),
+        "cov2D": lambda g: jax.vmap(F._naive_cov2d_single, in_axes=(0, 0, None))(
+            jax.vmap(F._naive_cov3d_single)(g.quats, g.scales()),
+            F.stage_jacobian(F.stage_projection(g.positions, cam)[0], cam),
+            cam.r_cw,
+        ),
+        "cov2D_inv": lambda g: F.stage_cov2d_inv(
+            jax.vmap(F._naive_cov2d_single, in_axes=(0, 0, None))(
+                jax.vmap(F._naive_cov3d_single)(g.quats, g.scales()),
+                F.stage_jacobian(F.stage_projection(g.positions, cam)[0], cam),
+                cam.r_cw,
+            )
+        ),
+        "dir_vec": lambda g: F.stage_ray_dir(g.positions, cam),
+        "color": lambda g: jax.vmap(
+            lambda sh_n, d_n: jnp.maximum(_naive_color(sh_n, d_n, sh_degree), 0.0)
+        )(g.sh, F.stage_ray_dir(g.positions, cam)),
+    }
+
+
+def _naive_color(sh_n, d_n, sh_degree):
+    from repro.core.sh import sh_basis
+
+    basis = sh_basis(d_n)
+    acc = jnp.zeros((3,), dtype=sh_n.dtype)
+    for k in range((sh_degree + 1) ** 2):
+        acc = acc + sh_n[k] * basis[k]
+    return acc + 0.5
+
+
+def main() -> None:
+    g = random_gaussians(jax.random.PRNGKey(0), N)
+    cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=128, height=128)
+
+    staged = F.staged_stage_fns(cam)
+    naive = naive_stage_fns(cam)
+
+    for stage in ["color", "dir_vec", "cov2D", "Jacobian", "cov2D_inv", "projection", "cov3D"]:
+        t_naive = time_fn(jax.jit(naive[stage]), g)
+        t_staged = time_fn(jax.jit(staged[stage]), g)
+        speedup = t_naive / max(t_staged, 1e-9)
+        emit(
+            f"table1/{stage}/naive",
+            t_naive,
+            f"{t_naive * 1000 / N:.0f}ns_per_gaussian",
+        )
+        emit(
+            f"table1/{stage}/staged",
+            t_staged,
+            f"{t_staged * 1000 / N:.0f}ns_per_gaussian;speedup={speedup:.1f}x",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Paper Table II analogue: end-to-end feature-computation throughput (MB/s).
+
+The paper measures MB/s of Gaussian records (59 f32 = 236 B each) through the
+feature pipeline for Non-AIE (PS only) / Naive / Stream / Window methods,
+finding ~45 MB/s on hardware (PL DataMover-bound) vs near-linear scaling in
+the AIE simulator. Our ladder on this container (CPU wall-clock):
+
+  naive        — per-Gaussian scalar loops, stage-at-a-time (paper Naive)
+  staged       — SoA-vectorized, stage-at-a-time w/ HBM round trips
+                 (paper Stream/Window in-tile optimized)
+  fused        — whole pipeline in one jit (beyond-paper fusion)
+  fused_pallas — the Pallas kernel in interpret mode (correctness path on
+                 CPU; compiled Mosaic on real TPU — see the roofline model
+                 for the TPU-target number)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import features as F
+from repro.core import look_at_camera, random_gaussians
+from repro.core.gaussians import GAUSSIAN_RECORD_BYTES
+from repro.kernels.gaussian_features.ops import gaussian_features_packed
+
+N = 200_000
+
+
+def staged_separate_jits(cam):
+    """Stage-at-a-time execution: each stage its own jit (HBM round trips)."""
+    j_cov3d = jax.jit(lambda q, s: F.stage_cov3d(q, s))
+    j_proj = jax.jit(lambda p: F.stage_projection(p, cam))
+    j_jac = jax.jit(lambda pc: F.stage_jacobian(pc, cam))
+    j_cov2d = jax.jit(lambda c3, jc: F.stage_cov2d(c3, jc, cam))
+    j_inv = jax.jit(F.stage_cov2d_inv)
+    j_dir = jax.jit(lambda p: F.stage_ray_dir(p, cam))
+    j_color = jax.jit(lambda sh, r: F.stage_color(sh, r))
+
+    def run(g):
+        cov3d = j_cov3d(g.quats, g.scales())
+        p_cam, uv, depth = j_proj(g.positions)
+        jac = j_jac(p_cam)
+        cov2d = j_cov2d(cov3d, jac)
+        conic, radius = j_inv(cov2d)
+        rdir = j_dir(g.positions)
+        color = j_color(g.sh, rdir)
+        return uv, conic, radius, color, depth
+
+    return run
+
+
+def naive_separate_jits(cam):
+    """Paper Naive: per-Gaussian scalar loops AND stage-at-a-time round trips."""
+    j_cov3d = jax.jit(jax.vmap(F._naive_cov3d_single))
+    j_proj = jax.jit(lambda p: F.stage_projection(p, cam))
+    j_jac = jax.jit(lambda pc: F.stage_jacobian(pc, cam))
+    j_cov2d = jax.jit(
+        jax.vmap(F._naive_cov2d_single, in_axes=(0, 0, None)), static_argnums=()
+    )
+    j_inv = jax.jit(F.stage_cov2d_inv)
+    j_dir = jax.jit(lambda p: F.stage_ray_dir(p, cam))
+    j_color = jax.jit(lambda sh, r: F.stage_color(sh, r))
+
+    def run(g):
+        cov3d = j_cov3d(g.quats, g.scales())
+        p_cam, uv, depth = j_proj(g.positions)
+        jac = j_jac(p_cam)
+        cov2d = j_cov2d(cov3d, jac, cam.r_cw)
+        conic, radius = j_inv(cov2d)
+        rdir = j_dir(g.positions)
+        color = j_color(g.sh, rdir)
+        return uv, conic, radius, color, depth
+
+    return run
+
+
+def main() -> None:
+    g = random_gaussians(jax.random.PRNGKey(0), N)
+    cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=1024, height=1024)
+    mb = N * GAUSSIAN_RECORD_BYTES / 1e6
+
+    run_naive = naive_separate_jits(cam)
+    t_naive = time_fn(run_naive, g, warmup=1, iters=3)
+    emit("table2/naive", t_naive, f"{mb / (t_naive / 1e6):.1f}MBps")
+
+    run_staged = staged_separate_jits(cam)
+    t_staged = time_fn(run_staged, g, warmup=1, iters=3)
+    emit("table2/staged", t_staged, f"{mb / (t_staged / 1e6):.1f}MBps")
+
+    t_fused = time_fn(
+        jax.jit(lambda g: F.compute_features_fused(g, cam)), g, warmup=1, iters=3
+    )
+    emit("table2/fused", t_fused, f"{mb / (t_fused / 1e6):.1f}MBps")
+
+    t_pallas = time_fn(
+        lambda g: gaussian_features_packed(g, cam), g, warmup=1, iters=3
+    )
+    emit(
+        "table2/fused_pallas_interpret",
+        t_pallas,
+        f"{mb / (t_pallas / 1e6):.1f}MBps",
+    )
+
+
+if __name__ == "__main__":
+    main()

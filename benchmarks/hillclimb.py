@@ -1,0 +1,237 @@
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512"
+    " --xla_disable_hlo_passes=all-reduce-promotion",
+)
+
+"""Perf-iteration driver for the three hillclimb cells (EXPERIMENTS.md §Perf).
+
+    python -m benchmarks.hillclimb --cell A --variant baseline
+    python -m benchmarks.hillclimb --cell A --variant baseline --diag   # top collectives/buffers
+
+Variants toggle one hypothesis each (sharding mode, remat policy, chunk
+sizes, dispatch resharding, ...). Every run prints the three roofline terms
+so before/after lands directly in the §Perf log.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from benchmarks import roofline as R
+
+CELLS = {
+    "A": ("qwen3-moe-235b-a22b", "train_4k"),
+    "B": ("qwen2-7b", "prefill_32k"),
+    "C": ("gsplat", "features_1m"),
+}
+
+
+def lower_lm(arch, shape_name, mode, cfg_overrides):
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.api import SHAPES
+
+    cfg = get_config(arch, **cfg_overrides)
+    mesh = make_production_mesh()
+    compiled = lower_cell(cfg, SHAPES[shape_name], mesh, mode=mode)
+    return compiled, mesh, cfg
+
+
+GSPLAT_N = 1_048_576
+
+
+def lower_gsplat(variant_opts):
+    """Cell C: the paper's feature pipeline, 1M Gaussians over 256 chips."""
+    import jax.numpy as jnp
+
+    from repro.core import look_at_camera, random_gaussians
+    from repro.core.pipeline import sharded_features, sharded_render
+    from repro.launch.mesh import make_production_mesh
+
+    n = GSPLAT_N
+    mesh = make_production_mesh()  # (data, model) = (16, 16)
+    axes = ("data", "model")  # gaussians sharded over the full mesh
+    g = jax.eval_shape(lambda k: random_gaussians(k, n), jax.random.PRNGKey(0))
+    cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=1024, height=1024)
+    feature_path = variant_opts.get("feature_path", "staged")
+    fn = sharded_features(mesh, axes, feature_path=feature_path)
+    with mesh:
+        compiled = jax.jit(fn).lower(g, cam).compile()
+    return compiled, mesh, None
+
+
+def analyze_gsplat_naive():
+    """Paper-faithful 'Naive' for cell C: each of the 7 stages is its own
+    program with HBM-resident inputs/outputs (the analogue of one kernel per
+    AIE tile streaming intermediates). Terms are summed over stages."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import features as F
+    from repro.core import look_at_camera
+    from repro.launch.mesh import make_production_mesh
+
+    n = GSPLAT_N
+    mesh = make_production_mesh()
+    cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=1024, height=1024)
+    sh_spec = NamedSharding(mesh, P(("data", "model")))
+
+    def arr(*shape):
+        return jax.ShapeDtypeStruct((n,) + shape, jnp.float32)
+
+    stages = {
+        "cov3D": (lambda q, s: F.stage_cov3d(q, s), (arr(4), arr(3))),
+        "projection": (lambda p: F.stage_projection(p, cam), (arr(3),)),
+        "Jacobian": (lambda pc: F.stage_jacobian(pc, cam), (arr(3),)),
+        "cov2D": (lambda c6, j: F.stage_cov2d(c6, j, cam), (arr(6), arr(2, 3))),
+        "cov2D_inv": (F.stage_cov2d_inv, (arr(3),)),
+        "dir_vec": (lambda p: F.stage_ray_dir(p, cam), (arr(3),)),
+        "color": (lambda sh, r: F.stage_color(sh, r), (arr(16, 3), arr(3))),
+    }
+    totals = {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0}
+    with mesh:
+        for name, (fn, specs) in stages.items():
+            shardings = tuple(sh_spec for _ in specs)
+            compiled = jax.jit(fn, in_shardings=shardings).lower(*specs).compile()
+            rep = R.analyze(compiled.as_text(), num_partitions=mesh.devices.size)
+            totals["flops"] += rep.flops
+            totals["hbm_bytes"] += rep.hbm_bytes
+            totals["collective_bytes"] += rep.collective_bytes
+    return totals, mesh
+
+
+def diag(hlo: str, num_partitions: int, top: int = 12) -> None:
+    """Print the largest collective / traffic contributors with multipliers."""
+    stats = R.parse_hlo(hlo, num_partitions)
+    comps = R.split_computations(hlo)
+    entry = R.find_entry(hlo)
+
+    mults: dict[str, float] = {}
+
+    def visit(name, mult):
+        if name not in stats:
+            return
+        mults[name] = mults.get(name, 0) + mult
+        for callee, kind in stats[name].calls:
+            m = mult * (
+                stats[name].while_trips.get(callee, 1.0)
+                if kind == "while_body"
+                else 1.0
+            )
+            visit(callee, m)
+
+    visit(entry, 1.0)
+
+    rows = []
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 0)
+        if mult == 0:
+            continue
+        for line in lines:
+            m = re.search(
+                r"%([\w\.\-]+) = .*?(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(",
+                line,
+            )
+            if m:
+                b = R._collective_bytes(line, m.group(2), num_partitions)
+                shape = R._SHAPE_RE.search(line.split("=", 1)[1])
+                rows.append(
+                    (b * mult, m.group(2), shape.group(0) if shape else "?", cname, mult)
+                )
+    rows.sort(key=lambda r: -r[0])
+    print("top collectives (bytes x trips):")
+    for b, op, shape, cname, mult in rows[:top]:
+        print(f"  {b/1e9:8.2f} GB  {op:20s} {shape:28s} x{mult:<5.0f} in {cname[:40]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--diag", action="store_true")
+    args = ap.parse_args()
+
+    arch, shape_name = CELLS[args.cell]
+
+    # variant registry: (sharding mode, config overrides, gsplat opts)
+    VARIANTS = {
+        # --- cell A (MoE train, collective-bound) ---
+        "baseline": ("fsdp_sp", {}, {}),
+        "tp_mode": ("tensor_parallel", {}, {}),
+        "remat_dots": ("fsdp_sp", {"remat": "dots"}, {}),
+        "cap1.0": ("fsdp_sp", {"capacity_factor": 1.0}, {}),
+        # --- cell B (dense prefill, memory-bound) ---
+        "chunk2k": ("fsdp_sp", {"attn_chunk": 2048}, {}),
+        "chunk512": ("fsdp_sp", {"attn_chunk": 512}, {}),
+        "remat_none": ("fsdp_sp", {"remat": "none"}, {}),
+        # --- cell C (gsplat pipeline) ---
+        "naive": (None, {}, {}),  # 7 stage-at-a-time programs (paper Naive)
+        "staged": (None, {}, {"feature_path": "staged"}),
+        "fused": (None, {}, {"feature_path": "fused"}),
+    }
+    mode, overrides, gopts = VARIANTS[args.variant]
+
+    t0 = time.time()
+    if args.cell == "C" and args.variant == "naive":
+        totals, mesh = analyze_gsplat_naive()
+        n_dev = mesh.devices.size
+        per_g = totals["hbm_bytes"] / (GSPLAT_N / n_dev)
+        print(
+            json.dumps(
+                {
+                    "cell": "C",
+                    "variant": "naive(7-stage-streaming)",
+                    "memory_s": totals["hbm_bytes"] / R.HBM_BW,
+                    "hbm_bytes_per_gaussian": per_g,
+                    "tput_GBps_per_chip": 236.0 * R.HBM_BW / per_g / 1e9,
+                    "compile_s": round(time.time() - t0, 1),
+                }
+            )
+        )
+        return
+    if args.cell == "C":
+        compiled, mesh, cfg = lower_gsplat(gopts)
+        model_flops = None
+    else:
+        compiled, mesh, cfg = lower_lm(arch, shape_name, mode, overrides)
+        from repro.models.api import SHAPES
+
+        model_flops = R.model_flops_global(cfg, SHAPES[shape_name])
+
+    n_dev = mesh.devices.size
+    hlo = compiled.as_text()
+    rep = R.analyze(hlo, num_partitions=n_dev, model_flops_global=model_flops)
+    print(
+        json.dumps(
+            {
+                "cell": args.cell,
+                "variant": args.variant,
+                "compute_s": rep.compute_s,
+                "memory_s": rep.memory_s,
+                "collective_s": rep.collective_s,
+                "bottleneck": rep.bottleneck,
+                "useful_ratio": rep.useful_ratio,
+                "compile_s": round(time.time() - t0, 1),
+            },
+            indent=1,
+        )
+    )
+    if args.diag:
+        diag(hlo, n_dev)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Generate EXPERIMENTS.md dry-run / roofline tables from results/dryrun/*.json.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.report [--results results/dryrun]
+Prints markdown to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "qwen2-7b",
+    "h2o-danube-1.8b",
+    "tinyllama-1.1b",
+    "starcoder2-7b",
+    "mamba2-1.3b",
+    "qwen3-moe-30b-a3b",
+    "qwen3-moe-235b-a22b",
+    "zamba2-2.7b",
+    "whisper-small",
+    "internvl2-2b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str) -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(results_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        mesh = r.get("mesh_tag") or r.get("mesh")
+        out[(r["arch"], r["shape"], mesh)] = r
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 0.01:
+        return f"{x:.2f}"
+    return f"{x:.2e}"
+
+
+def roofline_table(cells: dict, mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck "
+        "| MODEL_FLOPS/dev | useful ratio | bytes/dev (args+tmp) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | SKIP: {r['reason'][:40]} | — | — | — |"
+                )
+                continue
+            if r.get("status") != "ok":
+                lines.append(f"| {arch} | {shape} | FAILED | | | | | | |")
+                continue
+            rf = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            dev_bytes = (mem.get("argument_size_in_bytes") or 0) + (
+                mem.get("temp_size_in_bytes") or 0
+            )
+            useful = rf.get("useful_ratio")
+            lines.append(
+                "| {a} | {s} | {c} | {m} | {k} | **{b}** | {mf:.2e} | {u} | {db:.1f} GB |".format(
+                    a=arch,
+                    s=shape,
+                    c=_fmt_s(rf["compute_s"]),
+                    m=_fmt_s(rf["memory_s"]),
+                    k=_fmt_s(rf["collective_s"]),
+                    b=rf["bottleneck"],
+                    mf=rf.get("model_flops") or 0,
+                    u=f"{useful:.2f}" if useful else "—",
+                    db=dev_bytes / 1e9,
+                )
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(cells: dict) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile (s) | collectives in HLO | HLO size |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for mesh in ["pod16x16", "pod2x16x16"]:
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                r = cells.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if r.get("status") == "skipped":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | SKIP ({r['reason'][:48]}) | — | — | — |"
+                    )
+                    continue
+                cc = r.get("collective_op_counts", {})
+                csum = ", ".join(
+                    f"{k.split('-')[-1] if k != 'all-to-all' else 'a2a'}:{v}"
+                    for k, v in cc.items()
+                    if v
+                )
+                lines.append(
+                    "| {a} | {s} | {m} | {st} | {t:.0f} | {c} | {h:.1f} MB |".format(
+                        a=arch,
+                        s=shape,
+                        m=mesh,
+                        st=r["status"].upper(),
+                        t=r.get("compile_seconds", 0),
+                        c=csum or "none",
+                        h=r.get("hlo_bytes", 0) / 1e6,
+                    )
+                )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--section", default="all", choices=["all", "roofline", "dryrun"])
+    args = ap.parse_args()
+    cells = load(args.results)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run status (both meshes)\n")
+        print(dryrun_table(cells))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline terms — single pod 16x16 (256 chips)\n")
+        print(roofline_table(cells, "pod16x16"))
+        print()
+        print("### Roofline terms — multi-pod 2x16x16 (512 chips)\n")
+        print(roofline_table(cells, "pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark aggregator. One section per paper table/figure + substrate.
+
+Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_fig5_parallelism,
+        bench_lm_steps,
+        bench_table1_kernels,
+        bench_table2_throughput,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        bench_table1_kernels,
+        bench_table2_throughput,
+        bench_fig5_parallelism,
+        bench_lm_steps,
+    ):
+        try:
+            mod.main()
+        except Exception:
+            print(f"# {mod.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro — production-grade JAX reproduction of "Exploring the Versal AI
+Engine for 3D Gaussian Splatting" (Shimamura et al., 2025) plus the
+multi-pod LM substrate for the assigned architecture pool. See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,161 @@
+"""Checkpointing: sharded-tree save/restore with resharding on load.
+
+Layout per checkpoint:  <dir>/step_<N>/
+    manifest.json   — tree structure, shapes, dtypes, crc32 per tensor, step
+    <key>.npy       — one file per leaf (flattened '/'-joined key path)
+
+Design notes for 1000+ node scale (this container is single-host):
+  * each leaf is written from the fully-addressable host value; on a real
+    multi-host pod each host would write only its owned shards (the manifest
+    format already records per-leaf shape/dtype so a per-shard layout is a
+    drop-in change — e.g. tensorstore/OCDBT);
+  * restore takes *abstract* targets + shardings, so a checkpoint written on
+    one mesh restores onto any other (elastic scaling / failover reshard);
+  * the async writer overlaps serialization with the next training step and
+    is awaited before the next save (bounded queue of 1);
+  * integrity: crc32 per tensor, manifest written last (atomic rename), a
+    checkpoint without a manifest is ignored by ``latest_step``.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import zlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_part(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_part(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    """Synchronous sharded-tree save. Returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:09d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {"step": step, "tensors": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["tensors"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    abstract_tree,
+    shardings=None,
+    *,
+    verify: bool = True,
+):
+    """Load a checkpoint onto (possibly different) shardings.
+
+    Args:
+      abstract_tree: pytree of ShapeDtypeStructs (or arrays) giving targets.
+      shardings: matching pytree of Shardings (or None leaves -> default).
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_abstract = _flatten_with_paths(abstract_tree)
+    flat_shard = _flatten_with_paths(shardings) if shardings is not None else {}
+
+    loaded = {}
+    for key, target in flat_abstract.items():
+        meta = manifest["tensors"][key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise IOError(f"checksum mismatch for {key} in {path}")
+        if tuple(arr.shape) != tuple(target.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs target {target.shape}"
+            )
+        arr = arr.astype(target.dtype)
+        sh = flat_shard.get(key)
+        loaded[key] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+
+    # Rebuild the tree in the abstract tree's structure.
+    paths, treedef = jax.tree_util.tree_flatten_with_path(abstract_tree)
+    leaves = ["/".join(_path_part(p) for p in path) for path, _ in paths]
+    return jax.tree_util.tree_unflatten(treedef, [loaded[k] for k in leaves])
+
+
+class CheckpointManager:
+    """Async writer + keep-last-k garbage collection."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: concurrent.futures.Future | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save_async(self, step: int, tree) -> None:
+        self.wait()
+        # device_get on the main thread (arrays may be donated/overwritten next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._pending = self._pool.submit(self._save_and_gc, step, host_tree)
+
+    def _save_and_gc(self, step: int, host_tree) -> None:
+        save_checkpoint(self.directory, step, host_tree)
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for old in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{old:09d}"), ignore_errors=True
+            )
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None

@@ -1,0 +1,5 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config"]

@@ -1,0 +1,37 @@
+"""internvl2-2b [arXiv:2404.16821; hf]: 24L d_model=2048 16H (GQA kv=8)
+d_ff=8192 vocab=92553 — InternViT frontend (stubbed to precomputed patch
+embeddings) + InternLM2-style decoder."""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b",
+        family="vlm",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=8192,
+        vocab_size=92553,
+        num_patches=256,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        num_patches=8,
+        remat="none",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,44 @@
+"""mamba2-1.3b [arXiv:2405.21060]: 48L d_model=2048 attention-free,
+vocab=50280, ssm_state=128 — SSD (state-space duality)."""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b",
+        family="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=0,
+        n_kv_heads=0,
+        d_head=0,
+        d_ff=0,
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=128,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b-smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        n_heads=0,
+        n_kv_heads=0,
+        d_head=0,
+        d_ff=0,
+        vocab_size=256,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=32,
+        remat="none",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,41 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B]: 48L d_model=2048 32H (GQA kv=4)
+per-expert d_ff=768 vocab=151936, MoE 128 experts top-8."""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        family="moe",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        d_head=128,
+        d_ff=0,
+        vocab_size=151936,
+        num_experts=128,
+        experts_per_token=8,
+        moe_d_ff=768,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=0,
+        vocab_size=256,
+        num_experts=8,
+        experts_per_token=2,
+        moe_d_ff=32,
+        remat="none",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,43 @@
+"""Maps architecture ids (with dashes, as assigned) to config modules."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.api import ModelConfig
+
+ARCH_IDS = [
+    "qwen2-7b",
+    "h2o-danube-1.8b",
+    "tinyllama-1.1b",
+    "starcoder2-7b",
+    "mamba2-1.3b",
+    "qwen3-moe-30b-a3b",
+    "qwen3-moe-235b-a22b",
+    "zamba2-2.7b",
+    "whisper-small",
+    "internvl2-2b",
+]
+
+
+def _module(arch_id: str):
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(arch_id: str, **overrides) -> ModelConfig:
+    cfg = _module(arch_id).full_config()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch_id: str, **overrides) -> ModelConfig:
+    cfg = _module(arch_id).smoke_config()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg

@@ -1,0 +1,39 @@
+"""starcoder2-7b [arXiv:2402.19173; hf]: 32L d_model=4608 36H (GQA kv=4)
+d_ff=18432 vocab=49152 — GQA with RoPE. (The released model uses LayerNorm
+with biases; we keep the framework-wide RMSNorm and note the simplification
+in DESIGN.md — the compute/communication structure is unchanged.)"""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4608,
+        n_heads=36,
+        n_kv_heads=4,
+        d_head=128,
+        d_ff=18432,
+        vocab_size=49152,
+        qkv_bias=True,
+        rope_theta=1e5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        qkv_bias=True,
+        remat="none",
+        compute_dtype="float32",
+    )

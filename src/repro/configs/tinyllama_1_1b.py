@@ -1,0 +1,34 @@
+"""tinyllama-1.1b [arXiv:2401.02385; hf]: 22L d_model=2048 32H (GQA kv=4)
+d_ff=5632 vocab=32000 — llama2-architecture small model."""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="tinyllama-1.1b",
+        family="dense",
+        n_layers=22,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=4,
+        d_head=64,
+        d_ff=5632,
+        vocab_size=32000,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="tinyllama-1.1b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        remat="none",
+        compute_dtype="float32",
+    )

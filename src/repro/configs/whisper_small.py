@@ -1,0 +1,43 @@
+"""whisper-small [arXiv:2212.04356]: 12L enc + 12L dec, d_model=768 12H
+d_ff=3072 vocab=51865 — encoder-decoder; conv audio frontend is a stub
+(precomputed frame embeddings of length 1500)."""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="encdec",
+        n_layers=12,
+        n_encoder_layers=12,
+        encoder_seq=1500,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_head=64,
+        d_ff=3072,
+        vocab_size=51865,
+        qkv_bias=True,
+        use_rope=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-smoke",
+        family="encdec",
+        n_layers=2,
+        n_encoder_layers=2,
+        encoder_seq=32,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        qkv_bias=True,
+        use_rope=False,
+        remat="none",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,47 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf]: 54L d_model=2560 32H (kv=32, MHA)
+d_ff=10240 vocab=32000, ssm_state=64 — Mamba2 backbone + one shared
+attention block applied every 6 layers."""
+
+from repro.models.api import ModelConfig
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        n_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=80,
+        d_ff=10240,
+        vocab_size=32000,
+        ssm_state=64,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=128,
+        hybrid_attn_every=6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b-smoke",
+        family="hybrid",
+        n_layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=32,
+        hybrid_attn_every=2,
+        remat="none",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,25 @@
+"""Core 3DGS library — the paper's contribution as composable JAX modules."""
+
+from repro.core.camera import Camera, look_at_camera, orbit_cameras
+from repro.core.features import (
+    GaussianFeatures,
+    compute_features_fused,
+    compute_features_naive,
+    compute_features_staged,
+)
+from repro.core.gaussians import GaussianParams, random_gaussians
+from repro.core.render import render, render_jit
+
+__all__ = [
+    "Camera",
+    "GaussianFeatures",
+    "GaussianParams",
+    "compute_features_fused",
+    "compute_features_naive",
+    "compute_features_staged",
+    "look_at_camera",
+    "orbit_cameras",
+    "random_gaussians",
+    "render",
+    "render_jit",
+]

@@ -1,0 +1,107 @@
+"""Camera model + per-camera precomputation.
+
+The paper's task-partitioning trick (Eq. 4) precomputes ``K = J @ R_cw`` so the
+2D covariance costs two small matmuls instead of four. ``J`` depends on the
+per-Gaussian camera-space position, so the *camera-only* part that can be
+hoisted is ``R_cw`` itself plus the focal scalars that parameterize ``J``; the
+fused kernel receives those as tiny scalar operands (the TPU analogue of the
+AIE's local-memory constants) and forms ``K`` per Gaussian in registers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Camera:
+    """Pinhole camera.
+
+    Attributes:
+      r_cw: (3, 3) world->camera rotation.
+      t_cw: (3,) world->camera translation (p_c = r_cw @ p_w + t_cw).
+      fx, fy: focal lengths in pixels (scalars, stored as 0-d arrays).
+      cx, cy: principal point in pixels.
+      width, height: static python ints (image size).
+    """
+
+    r_cw: jax.Array
+    t_cw: jax.Array
+    fx: jax.Array
+    fy: jax.Array
+    cx: jax.Array
+    cy: jax.Array
+    width: int = dataclasses.field(metadata=dict(static=True))
+    height: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def cam_pos(self) -> jax.Array:
+        """World-space camera center: -R_cw^T t_cw."""
+        return -self.r_cw.T @ self.t_cw
+
+    def tan_fov(self) -> tuple[jax.Array, jax.Array]:
+        return (
+            0.5 * self.width / self.fx,
+            0.5 * self.height / self.fy,
+        )
+
+
+def look_at_camera(
+    eye: Any,
+    target: Any,
+    up: Any = (0.0, 1.0, 0.0),
+    *,
+    width: int = 128,
+    height: int = 128,
+    focal: float | None = None,
+    dtype: Any = jnp.float32,
+) -> Camera:
+    """Build a camera looking from ``eye`` toward ``target`` (OpenCV convention:
+    +z forward, +x right, +y down)."""
+    eye = np.asarray(eye, dtype=np.float64)
+    target = np.asarray(target, dtype=np.float64)
+    up = np.asarray(up, dtype=np.float64)
+
+    fwd = target - eye
+    fwd = fwd / (np.linalg.norm(fwd) + 1e-12)
+    right = np.cross(fwd, up)
+    right = right / (np.linalg.norm(right) + 1e-12)
+    down = np.cross(fwd, right)
+    # Rows of R_cw are the camera axes expressed in world coordinates.
+    r_cw = np.stack([right, down, fwd], axis=0)
+    t_cw = -r_cw @ eye
+    if focal is None:
+        focal = 1.2 * max(width, height)
+    return Camera(
+        r_cw=jnp.asarray(r_cw, dtype=dtype),
+        t_cw=jnp.asarray(t_cw, dtype=dtype),
+        fx=jnp.asarray(focal, dtype=dtype),
+        fy=jnp.asarray(focal, dtype=dtype),
+        cx=jnp.asarray(width / 2.0, dtype=dtype),
+        cy=jnp.asarray(height / 2.0, dtype=dtype),
+        width=width,
+        height=height,
+    )
+
+
+def orbit_cameras(
+    num: int,
+    *,
+    radius: float = 6.0,
+    height_offset: float = 1.5,
+    width: int = 128,
+    height: int = 128,
+) -> list[Camera]:
+    """A ring of cameras orbiting the origin — synthetic multi-view training set."""
+    cams = []
+    for i in range(num):
+        theta = 2.0 * np.pi * i / num
+        eye = (radius * np.cos(theta), height_offset, radius * np.sin(theta))
+        cams.append(look_at_camera(eye, (0.0, 0.0, 0.0), width=width, height=height))
+    return cams

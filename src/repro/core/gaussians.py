@@ -1,0 +1,147 @@
+"""Gaussian parameter containers (SoA layout).
+
+The paper processes Gaussians as a flat stream of records:
+    position p_w (3), rotation quaternion q (4), scale s (3),
+    spherical-harmonic coefficients sh (48 = 16 basis x 3 channels),
+    opacity alpha (1)                                -> 59 floats / Gaussian.
+
+We keep a struct-of-arrays (SoA) layout throughout: on the Versal AIE the
+paper streams records and vectorizes *within* a record; on TPU we put one
+Gaussian per VPU lane, so every field must be a contiguous array over the
+Gaussian axis (see DESIGN.md section 2, adaptation note 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Bytes per Gaussian in the paper's record format (59 f32 values).
+GAUSSIAN_RECORD_FLOATS = 3 + 4 + 3 + 48 + 1
+GAUSSIAN_RECORD_BYTES = GAUSSIAN_RECORD_FLOATS * 4
+
+# Feature-output record (paper: u, cov2D upper-tri/conic, color, depth, radius,
+# opacity): 2 + 3 + 3 + 1 + 1 + 1 = 11 f32 values.
+FEATURE_RECORD_FLOATS = 11
+FEATURE_RECORD_BYTES = FEATURE_RECORD_FLOATS * 4
+
+NUM_SH_BASES = 16  # degree <= 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GaussianParams:
+    """SoA Gaussian cloud.
+
+    Attributes:
+      positions: (N, 3) world-space means.
+      quats:     (N, 4) rotation quaternions (w, x, y, z); need not be
+                 pre-normalized, all consumers normalize.
+      log_scales:(N, 3) log of per-axis standard deviations (log-space keeps
+                 the training parameterization positive).
+      sh:        (N, 16, 3) real spherical-harmonic coefficients, degree <= 3.
+      opacity_logit: (N,) pre-sigmoid opacity.
+    """
+
+    positions: jax.Array
+    quats: jax.Array
+    log_scales: jax.Array
+    sh: jax.Array
+    opacity_logit: jax.Array
+
+    @property
+    def num_gaussians(self) -> int:
+        return self.positions.shape[0]
+
+    def scales(self) -> jax.Array:
+        return jnp.exp(self.log_scales)
+
+    def opacities(self) -> jax.Array:
+        return jax.nn.sigmoid(self.opacity_logit)
+
+    def astype(self, dtype: Any) -> "GaussianParams":
+        return jax.tree.map(lambda x: x.astype(dtype), self)
+
+
+def random_gaussians(
+    key: jax.Array,
+    num: int,
+    *,
+    extent: float = 2.0,
+    base_scale: float = 0.03,
+    dtype: Any = jnp.float32,
+) -> GaussianParams:
+    """Random cloud matching the paper's synthetic 100-sample evaluation setup."""
+    kp, kq, ks, kh, ko = jax.random.split(key, 5)
+    positions = jax.random.uniform(kp, (num, 3), minval=-extent, maxval=extent)
+    quats = jax.random.normal(kq, (num, 4))
+    quats = quats / (jnp.linalg.norm(quats, axis=-1, keepdims=True) + 1e-8)
+    log_scales = jnp.log(base_scale) + 0.3 * jax.random.normal(ks, (num, 3))
+    sh = 0.3 * jax.random.normal(kh, (num, NUM_SH_BASES, 3))
+    # Bias the DC term so colors land in a visible range after the +0.5 shift.
+    sh = sh.at[:, 0, :].add(0.8)
+    opacity_logit = jax.random.normal(ko, (num,)) + 1.5
+    return GaussianParams(
+        positions=positions.astype(dtype),
+        quats=quats.astype(dtype),
+        log_scales=log_scales.astype(dtype),
+        sh=sh.astype(dtype),
+        opacity_logit=opacity_logit.astype(dtype),
+    )
+
+
+def pack_records(g: GaussianParams) -> jax.Array:
+    """Pack to the paper's flat (N, 59) record stream (for IO-oriented benches)."""
+    n = g.num_gaussians
+    return jnp.concatenate(
+        [
+            g.positions,
+            g.quats,
+            g.log_scales,
+            g.sh.reshape(n, NUM_SH_BASES * 3),
+            g.opacity_logit[:, None],
+        ],
+        axis=-1,
+    )
+
+
+def unpack_records(records: jax.Array) -> GaussianParams:
+    """Inverse of :func:`pack_records`."""
+    n = records.shape[0]
+    return GaussianParams(
+        positions=records[:, 0:3],
+        quats=records[:, 3:7],
+        log_scales=records[:, 7:10],
+        sh=records[:, 10:58].reshape(n, NUM_SH_BASES, 3),
+        opacity_logit=records[:, 58],
+    )
+
+
+def pad_to_multiple(g: GaussianParams, multiple: int) -> tuple[GaussianParams, int]:
+    """Pad the cloud so N % multiple == 0 (padded entries have opacity -> 0).
+
+    Returns the padded params and the original count. Padding Gaussians are
+    placed behind the camera guard plane (z<=0 after view transform is culled
+    by the feature pipeline anyway) and given -30 opacity logit so they are
+    numerically invisible to the rasterizer.
+    """
+    n = g.num_gaussians
+    pad = (-n) % multiple
+    if pad == 0:
+        return g, n
+
+    def _pad(x, fill):
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    padded = GaussianParams(
+        positions=_pad(g.positions, 0.0),
+        quats=_pad(g.quats, 1.0),
+        log_scales=_pad(g.log_scales, -10.0),
+        sh=_pad(g.sh, 0.0),
+        opacity_logit=_pad(g.opacity_logit, -30.0),
+    )
+    return padded, n

@@ -1,0 +1,59 @@
+"""End-to-end 3DGS rendering: feature computation -> sort -> rasterize."""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as feat_lib
+from repro.core import rasterize as rast_lib
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianParams
+
+FEATURE_PATHS = {
+    "naive": feat_lib.compute_features_naive,
+    "staged": feat_lib.compute_features_staged,
+    "fused": feat_lib.compute_features_fused,
+}
+
+
+def render(
+    g: GaussianParams,
+    cam: Camera,
+    *,
+    sh_degree: int = 3,
+    background: Sequence[float] = (0.0, 0.0, 0.0),
+    feature_path: str = "fused",
+    pixel_chunk: int | None = 4096,
+) -> jax.Array:
+    """Render one view. Returns (H, W, 3) in [0, ~1]."""
+    if feature_path == "pallas":
+        # Imported lazily to keep core importable without the kernels package.
+        from repro.kernels.gaussian_features import ops as gf_ops
+
+        feats = gf_ops.gaussian_features(g, cam, sh_degree=sh_degree)
+    else:
+        feats = FEATURE_PATHS[feature_path](g, cam, sh_degree=sh_degree)
+    return rast_lib.rasterize(
+        feats,
+        cam.height,
+        cam.width,
+        background=background,
+        pixel_chunk=pixel_chunk,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("sh_degree", "feature_path", "pixel_chunk"))
+def render_jit(
+    g: GaussianParams,
+    cam: Camera,
+    sh_degree: int = 3,
+    feature_path: str = "fused",
+    pixel_chunk: int | None = 4096,
+) -> jax.Array:
+    return render(
+        g, cam, sh_degree=sh_degree, feature_path=feature_path, pixel_chunk=pixel_chunk
+    )

@@ -1,0 +1,84 @@
+"""Real spherical harmonics, degree <= 3 (16 basis functions).
+
+Constants follow the INRIA 3DGS reference implementation, so the paper's
+``color`` kernel (Eq. 3) is reproduced bit-for-bit in fp32:
+    c(r) = clamp( 0.5 + sum_k sh[k] * Y_k(r), 0 )
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SH_C0 = 0.28209479177387814
+SH_C1 = 0.4886025119029199
+SH_C2 = (
+    1.0925484305920792,
+    -1.0925484305920792,
+    0.31539156525252005,
+    -1.0925484305920792,
+    0.5462742152960396,
+)
+SH_C3 = (
+    -0.5900435899266435,
+    2.890611442640554,
+    -0.4570457994644658,
+    0.3731763325901154,
+    -0.4570457994644658,
+    1.445305721320277,
+    -0.5900435899266435,
+)
+
+NUM_BASES = 16
+
+
+def sh_basis(dirs: jax.Array) -> jax.Array:
+    """Evaluate the 16 real SH basis functions at unit directions.
+
+    Args:
+      dirs: (..., 3) unit vectors.
+
+    Returns:
+      (..., 16) basis values, ordered (l, m) = (0,0), (1,-1), (1,0), (1,1),
+      (2,-2) ... (3,3) — matching the 3DGS coefficient layout.
+    """
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+
+    b = [
+        jnp.full_like(x, SH_C0),
+        -SH_C1 * y,
+        SH_C1 * z,
+        -SH_C1 * x,
+        SH_C2[0] * xy,
+        SH_C2[1] * yz,
+        SH_C2[2] * (2.0 * zz - xx - yy),
+        SH_C2[3] * xz,
+        SH_C2[4] * (xx - yy),
+        SH_C3[0] * y * (3.0 * xx - yy),
+        SH_C3[1] * xy * z,
+        SH_C3[2] * y * (4.0 * zz - xx - yy),
+        SH_C3[3] * z * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+        SH_C3[4] * x * (4.0 * zz - xx - yy),
+        SH_C3[5] * z * (xx - yy),
+        SH_C3[6] * x * (xx - 3.0 * yy),
+    ]
+    return jnp.stack(b, axis=-1)
+
+
+def eval_sh_color(sh: jax.Array, dirs: jax.Array, degree: int = 3) -> jax.Array:
+    """View-dependent color from SH coefficients (paper Eq. 3).
+
+    Args:
+      sh:   (..., 16, 3) coefficients.
+      dirs: (..., 3) unit view directions (Gaussian center - camera center).
+      degree: max SH degree actually used (0..3); higher coefficients ignored.
+
+    Returns:
+      (..., 3) colors, shifted by +0.5 and clamped at 0 (reference behavior).
+    """
+    nb = (degree + 1) ** 2
+    basis = sh_basis(dirs)[..., :nb]
+    rgb = jnp.einsum("...k,...kc->...c", basis, sh[..., :nb, :])
+    return jnp.maximum(rgb + 0.5, 0.0)

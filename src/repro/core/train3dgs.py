@@ -1,0 +1,238 @@
+"""3DGS training substrate: loss (L1 + D-SSIM), densification, pruning.
+
+The paper trains Gaussians with the standard 3DGS recipe ("custom training
+code" on the INRIA tandt_db dataset); this module implements that recipe in
+JAX with *fixed-capacity* functional densification so every step is jittable
+(no shape polymorphism — required for the multi-device training path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import GaussianParams
+
+# ---------------------------------------------------------------------------
+# SSIM + loss
+# ---------------------------------------------------------------------------
+
+
+def _gaussian_window(size: int = 11, sigma: float = 1.5) -> jax.Array:
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-(x * x) / (2.0 * sigma * sigma))
+    g = g / g.sum()
+    return jnp.outer(g, g)
+
+
+def ssim(img0: jax.Array, img1: jax.Array, *, window_size: int = 11) -> jax.Array:
+    """Mean SSIM between two (H, W, C) images (per-channel depthwise window)."""
+    c1, c2 = 0.01**2, 0.03**2
+    channels = img0.shape[-1]
+    win = _gaussian_window(window_size)
+    # Depthwise conv: NHWC, HWIO with feature_group_count=C.
+    kernel = jnp.tile(win[:, :, None, None], (1, 1, 1, channels))
+
+    def filt(x):
+        return jax.lax.conv_general_dilated(
+            x[None],
+            kernel,
+            window_strides=(1, 1),
+            padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=channels,
+        )[0]
+
+    mu0, mu1 = filt(img0), filt(img1)
+    mu00, mu11, mu01 = mu0 * mu0, mu1 * mu1, mu0 * mu1
+    s00 = filt(img0 * img0) - mu00
+    s11 = filt(img1 * img1) - mu11
+    s01 = filt(img0 * img1) - mu01
+    num = (2.0 * mu01 + c1) * (2.0 * s01 + c2)
+    den = (mu00 + mu11 + c1) * (s00 + s11 + c2)
+    return jnp.mean(num / den)
+
+
+def gsplat_loss(
+    rendered: jax.Array, target: jax.Array, *, lambda_dssim: float = 0.2
+) -> jax.Array:
+    """(1 - lambda) * L1 + lambda * D-SSIM — the 3DGS training loss."""
+    l1 = jnp.mean(jnp.abs(rendered - target))
+    dssim = (1.0 - ssim(rendered, target)) / 2.0
+    return (1.0 - lambda_dssim) * l1 + lambda_dssim * dssim
+
+
+# ---------------------------------------------------------------------------
+# Densification / pruning state machine (fixed capacity, fully jittable)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DensifyConfig:
+    grad_threshold: float = 2e-4  # avg screen-space grad norm to densify
+    split_scale_threshold: float = 0.05  # world extent above which we split
+    split_shrink: float = 1.6  # reference: new scales = old / 1.6
+    min_opacity: float = 0.005  # prune below this
+    opacity_reset_value: float = 0.01
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DensifyState:
+    """Running statistics between densification events."""
+
+    active: jax.Array  # (N,) bool — slot in use
+    grad_accum: jax.Array  # (N,) accumulated ||d(uv)|| per Gaussian
+    count: jax.Array  # (N,) number of frames the Gaussian was visible
+
+
+def init_densify_state(capacity: int, num_initial: int) -> DensifyState:
+    active = jnp.arange(capacity) < num_initial
+    return DensifyState(
+        active=active,
+        grad_accum=jnp.zeros((capacity,), jnp.float32),
+        count=jnp.zeros((capacity,), jnp.float32),
+    )
+
+
+def accumulate_grad_stats(
+    state: DensifyState, uv_grad: jax.Array, visible: jax.Array
+) -> DensifyState:
+    """Accumulate per-Gaussian screen-space gradient norms (3DGS heuristic)."""
+    norm = jnp.linalg.norm(uv_grad, axis=-1)
+    return DensifyState(
+        active=state.active,
+        grad_accum=state.grad_accum + norm * visible,
+        count=state.count + visible,
+    )
+
+
+def _inverse_sigmoid(x: float) -> float:
+    import math
+
+    return math.log(x / (1.0 - x))
+
+
+def densify_and_prune(
+    params: GaussianParams,
+    state: DensifyState,
+    key: jax.Array,
+    cfg: DensifyConfig = DensifyConfig(),
+) -> tuple[GaussianParams, DensifyState]:
+    """One densification event: prune -> clone/split into free slots.
+
+    Fixed capacity: new Gaussians are written into inactive slots, highest
+    gradient first; if the pool is full, lowest-priority candidates are
+    dropped (graceful saturation instead of reallocation).
+    """
+    n = params.num_gaussians
+    avg_grad = state.grad_accum / jnp.maximum(state.count, 1.0)
+
+    # --- prune ---------------------------------------------------------
+    active = state.active & (params.opacities() >= cfg.min_opacity)
+
+    # --- candidate selection --------------------------------------------
+    candidates = active & (avg_grad > cfg.grad_threshold)
+    max_scale = jnp.max(params.scales(), axis=-1)
+    is_split = candidates & (max_scale >= cfg.split_scale_threshold)
+    priority = jnp.where(candidates, avg_grad, -jnp.inf)
+
+    # Highest-priority candidates first; free slots in index order.
+    cand_order = jnp.argsort(-priority)  # (N,) candidate indices, best first
+    free_order = jnp.argsort(active, stable=True)  # inactive slots first
+    num_free = jnp.sum(~active)
+    num_cand = jnp.sum(candidates)
+    k = jnp.minimum(num_free, num_cand)  # dynamic, used via masking
+
+    slot_rank = jnp.arange(n)
+    write_valid = slot_rank < k  # rank r gets candidate cand_order[r]
+    src = cand_order  # (N,) source gaussian per rank
+    dst = free_order  # (N,) destination slot per rank
+
+    # New parameters: clones copy; splits sample along the principal axis and
+    # shrink. (Principal axis ~ largest-scale column of R.)
+    from repro.core.features import quat_to_rotmat
+
+    src_params = jax.tree.map(lambda x: x[src], params)
+    rot = quat_to_rotmat(src_params.quats)  # (N, 3, 3)
+    axis_idx = jnp.argmax(src_params.log_scales, axis=-1)  # (N,)
+    principal = jnp.take_along_axis(
+        rot, axis_idx[:, None, None], axis=2
+    )[..., 0]  # column axis_idx of R -> (N, 3)
+    sigma = jnp.max(src_params.scales(), axis=-1, keepdims=True)
+    noise = jax.random.normal(key, (n, 1)) * sigma
+    split_src = is_split[src]
+
+    new_positions = jnp.where(
+        split_src[:, None],
+        src_params.positions + principal * noise,
+        src_params.positions,
+    )
+    new_log_scales = jnp.where(
+        split_src[:, None],
+        src_params.log_scales - jnp.log(cfg.split_shrink),
+        src_params.log_scales,
+    )
+    new_params = GaussianParams(
+        positions=new_positions,
+        quats=src_params.quats,
+        log_scales=new_log_scales,
+        sh=src_params.sh,
+        opacity_logit=src_params.opacity_logit,
+    )
+
+    # Scatter the first-k ranked writes into their destination slots.
+    def scatter(field_old, field_new):
+        gathered_old = field_old[dst]
+        merged = jnp.where(
+            write_valid.reshape((n,) + (1,) * (field_old.ndim - 1)),
+            field_new,
+            gathered_old,
+        )
+        return field_old.at[dst].set(merged)
+
+    out_params = GaussianParams(
+        positions=scatter(params.positions, new_params.positions),
+        quats=scatter(params.quats, new_params.quats),
+        log_scales=scatter(params.log_scales, new_params.log_scales),
+        sh=scatter(params.sh, new_params.sh),
+        opacity_logit=scatter(params.opacity_logit, new_params.opacity_logit),
+    )
+
+    # The originals of split Gaussians also shrink (reference behavior).
+    shrunk = jnp.where(
+        is_split[:, None],
+        out_params.log_scales - jnp.log(cfg.split_shrink),
+        out_params.log_scales,
+    )
+    out_params = dataclasses.replace(out_params, log_scales=shrunk)
+
+    new_active = active.at[dst].set(active[dst] | write_valid)
+    new_state = DensifyState(
+        active=new_active,
+        grad_accum=jnp.zeros_like(state.grad_accum),
+        count=jnp.zeros_like(state.count),
+    )
+    # Deactivated slots are made invisible.
+    out_params = dataclasses.replace(
+        out_params,
+        opacity_logit=jnp.where(new_active, out_params.opacity_logit, -30.0),
+    )
+    return out_params, new_state
+
+
+def reset_opacity(
+    params: GaussianParams, state: DensifyState, cfg: DensifyConfig = DensifyConfig()
+) -> GaussianParams:
+    """Clamp opacity down periodically (reference: fights floaters)."""
+    cap = _inverse_sigmoid(cfg.opacity_reset_value)
+    new_logit = jnp.where(
+        state.active,
+        jnp.minimum(params.opacity_logit, cap),
+        params.opacity_logit,
+    )
+    return dataclasses.replace(params, opacity_logit=new_logit)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLMData, SyntheticMultiView
+
+__all__ = ["SyntheticLMData", "SyntheticMultiView"]

@@ -1,0 +1,79 @@
+"""Int8 error-feedback gradient compression for the data-parallel all-reduce.
+
+1-bit/8-bit SGD-style compression (Seide et al. '14; error feedback per
+Karimireddy et al. '19, arXiv:1901.09847): each device quantizes its local
+gradient shard to int8 with a per-block fp32 scale, all-reduces the int8
+payload (8/32 = 4x less DP traffic; on the multi-pod mesh this is the
+cross-DCN ``pod`` axis where bandwidth is scarcest), dequantizes the sum,
+and accumulates the quantization residual into an error buffer that is added
+back the next step — preserving convergence.
+
+Used via ``shard_map`` around the gradient sync (pure-DP axes); the 2D
+TP/FSDP shardings are untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), flat.shape[0]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales, orig_len)."""
+    flat, n = _pad_to_block(x)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), n
+
+
+def dequantize_int8(
+    q: jax.Array, scale: jax.Array, n: int, shape: Sequence[int]
+) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return out.reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, err: jax.Array):
+    """Error-feedback compressed psum over ``axis_name`` (inside shard_map).
+
+    Returns (summed fp32 tensor, new error buffer).
+    """
+    corrected = x.astype(jnp.float32) + err
+    q, scale, n = quantize_int8(corrected)
+    deq_local = dequantize_int8(q, scale, n, x.shape)
+    new_err = corrected - deq_local
+    # The wire payload is the int8 q (+ tiny fp32 per-block scales): devices
+    # all-gather the quantized shards and dequantize+sum locally. (A psum of
+    # dequantized fp32 would void the bandwidth win.)
+    q_all = jax.lax.all_gather(q, axis_name)  # (P, nblocks, BLOCK) int8
+    s_all = jax.lax.all_gather(scale, axis_name)  # (P, nblocks, 1) fp32
+    total = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    out = total.reshape(-1)[:n].reshape(x.shape)
+    return out, new_err
+
+
+def init_error_buffers(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_tree_psum(grads, axis_name: str, err_tree):
+    """Apply compressed_psum leaf-wise over a gradient tree."""
+    outs = jax.tree.map(
+        lambda g, e: compressed_psum(g, axis_name, e), grads, err_tree
+    )
+    summed = jax.tree.map(lambda o: o[0], outs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], outs, is_leaf=lambda x: isinstance(x, tuple))
+    return summed, new_err

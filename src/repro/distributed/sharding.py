@@ -1,0 +1,177 @@
+"""Logical-axis sharding (MaxText-style) with divisibility guards.
+
+Every parameter / activation dimension carries a *logical* name; a rule table
+maps logical names to mesh axes. A rule only applies when the dimension size
+divides the mesh-axis size — otherwise that dimension falls back to
+replication (e.g. qwen2's 28 query heads do not divide a 16-way ``model``
+axis, so head-sharded attention degrades gracefully instead of failing).
+
+Two built-in rule sets (selected per run, hillclimbable):
+
+* ``fsdp_sp``  — batch on (pod, data); sequence on model (sequence
+  parallelism); weights 2D-sharded (input dim on (pod, data), output dim on
+  model) and re-gathered per layer (ZeRO-3 behavior under GSPMD).
+* ``tensor_parallel`` — batch on (pod, data); heads / mlp / experts on model
+  (Megatron-style), sequence replicated inside a model group; weights stay
+  model-sharded through the matmuls (no per-layer full gather).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Mesh axis groups. "pod" exists only on the multi-pod mesh; rules list it
+# first and the guard drops missing axes automatically.
+DATA_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+RULE_SETS: dict[str, dict[str, tuple[str, ...]]] = {
+    "fsdp_sp": {
+        # --- activations ---
+        "act_batch": DATA_AXES,
+        "act_seq": (MODEL_AXIS,),
+        "act_heads": (),
+        "act_mlp": (),
+        "act_kv_seq": (MODEL_AXIS,),  # decode-time split-KV
+        "act_experts": (MODEL_AXIS,),
+        "act_embed": (),
+        # --- weights (storage sharding; gathered per layer by GSPMD) ---
+        "win": DATA_AXES,
+        "wout": (MODEL_AXIS,),
+        "vocab": (MODEL_AXIS,),
+        "embed": DATA_AXES,
+        "experts": (MODEL_AXIS,),
+        "layers": (),
+        "stack": (),
+    },
+    "tensor_parallel": {
+        "act_batch": DATA_AXES,
+        "act_seq": (),
+        "act_heads": (MODEL_AXIS,),
+        "act_mlp": (MODEL_AXIS,),
+        "act_kv_seq": (MODEL_AXIS,),
+        "act_experts": (MODEL_AXIS,),
+        "act_embed": (),
+        "win": DATA_AXES,
+        "wout": (MODEL_AXIS,),
+        "vocab": (MODEL_AXIS,),
+        "embed": DATA_AXES,
+        "experts": (MODEL_AXIS,),
+        "layers": (),
+        "stack": (),
+    },
+    # Serving layout: weights resident, TP-sharded on `model` only (no FSDP
+    # storage axis -> no per-token weight regathers, the §Roofline decode
+    # bottleneck). Requires bf16 params; fits models up to ~25B on a 16-way
+    # model axis of v5e (params/16 x 2B + caches).
+    "serve_tp": {
+        "act_batch": DATA_AXES,
+        "act_seq": (),
+        "act_heads": (),
+        "act_mlp": (MODEL_AXIS,),
+        "act_kv_seq": (MODEL_AXIS,),
+        "act_experts": (MODEL_AXIS,),
+        "act_embed": (),
+        "win": (),
+        "wout": (MODEL_AXIS,),
+        "vocab": (MODEL_AXIS,),
+        "embed": (MODEL_AXIS,),
+        "experts": (MODEL_AXIS,),
+        "layers": (),
+        "stack": (),
+    },
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    mesh: Mesh | None
+    rules: Mapping[str, tuple[str, ...]]
+
+    def spec_for(self, shape: Sequence[int], logical: Sequence[str | None]) -> P:
+        """Build a PartitionSpec, dropping non-dividing / absent axes."""
+        if self.mesh is None:
+            return P()
+        assert len(shape) == len(logical), (shape, logical)
+        used: set[str] = set()
+        parts = []
+        for size, name in zip(shape, logical):
+            axes: list[str] = []
+            if name is not None:
+                extent = 1
+                for ax in self.rules.get(name, ()):
+                    if ax not in self.mesh.shape or ax in used:
+                        continue
+                    ax_size = self.mesh.shape[ax]
+                    if size % (extent * ax_size) != 0:
+                        continue
+                    axes.append(ax)
+                    extent *= ax_size
+            parts.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+            used.update(axes)
+        return P(*parts)
+
+    def sharding_for(
+        self, shape: Sequence[int], logical: Sequence[str | None]
+    ) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(shape, logical))
+
+
+_CTX: contextvars.ContextVar[ShardingContext | None] = contextvars.ContextVar(
+    "sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, mode: str = "fsdp_sp"):
+    """Install a sharding context (mesh + logical rules) for the duration."""
+    ctx = ShardingContext(mesh=mesh, rules=RULE_SETS[mode])
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def current_context() -> ShardingContext | None:
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, logical: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a context."""
+    ctx = _CTX.get()
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = ctx.spec_for(x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def is_logical_leaf(node) -> bool:
+    """A logical-axes annotation: tuple of dim names (str or None)."""
+    return isinstance(node, tuple) and all(
+        isinstance(e, (str, type(None))) for e in node
+    )
+
+
+def tree_shardings(logical_tree, abstract_tree, mesh: Mesh, mode: str = "fsdp_sp"):
+    """Shardings pytree for (logical axes, abstract params) trees.
+
+    ``logical_tree`` mirrors ``abstract_tree`` but with tuple-of-names leaves;
+    it is passed first so ``is_leaf`` can stop recursion at the annotations.
+    """
+    ctx = ShardingContext(mesh=mesh, rules=RULE_SETS[mode])
+    return jax.tree.map(
+        lambda logical, leaf: ctx.sharding_for(leaf.shape, logical),
+        logical_tree,
+        abstract_tree,
+        is_leaf=is_logical_leaf,
+    )

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (each: kernel.py + ops.py wrapper + ref.py oracle).
+
+gaussian_features — the paper's fused 7-stage feature pipeline (core contribution)
+tile_rasterize   — depth-sorted alpha blending (completes the 3DGS pipeline)
+flash_attention  — causal/GQA/SWA attention (LM-substrate hot-spot)
+ssd_scan         — Mamba-2 SSD chunked scan
+rmsnorm          — fused RMSNorm
+
+All validated against their pure-jnp oracles with interpret=True on CPU;
+compiled Mosaic on a real TPU backend.
+"""

@@ -1,0 +1,153 @@
+"""Flash attention Pallas TPU kernel (causal / GQA / sliding-window).
+
+IO-aware attention (FlashAttention, arXiv:2205.14135) re-tiled for TPU:
+Q/K/V blocks stream HBM->VMEM; the online-softmax state (m, l, acc) lives in
+VMEM scratch and persists across the innermost grid dimension (KV blocks),
+which Pallas-TPU iterates sequentially. MXU-aligned block sizes default to
+(BT, BS, D) = (128, 128, d_head) with d_head in {64, 128}.
+
+Grid: (batch, kv_heads, q_per_kv, T/BT, S/BS)  — GQA folds query-head groups
+into the grid so K/V blocks are reused across the G query heads that share
+them (the VMEM-residency analogue of GQA's HBM savings).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    si = pl.program_id(4)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale  # (BT, D)
+    k = k_ref[0, 0, :, :].astype(jnp.float32)  # (BS, D)
+    v = v_ref[0, 0, :, :].astype(jnp.float32)  # (BS, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BT, BS)
+
+    qi = pl.program_id(3)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = si * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (BT, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rows with no valid key yet keep m = NEG_INF; guard the exp.
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(si == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+
+
+def build_pallas_call(
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    q_len: int,
+    kv_len: int,
+    d_head: int,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    if q_len % block_q or kv_len % block_k:
+        raise ValueError(
+            f"q_len={q_len} / kv_len={kv_len} must divide blocks ({block_q},{block_k})"
+        )
+    if num_q_heads % num_kv_heads:
+        raise ValueError("GQA requires num_q_heads % num_kv_heads == 0")
+    g = num_q_heads // num_kv_heads
+    num_kv_blocks = kv_len // block_k
+    grid = (batch, num_kv_heads, g, q_len // block_q, num_kv_blocks)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        num_kv_blocks=num_kv_blocks,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, d_head),
+                lambda b, hk, gg, qi, si, g=g: (b, hk * g + gg, qi, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d_head), lambda b, hk, gg, qi, si: (b, hk, si, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d_head), lambda b, hk, gg, qi, si: (b, hk, si, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d_head),
+            lambda b, hk, gg, qi, si, g=g: (b, hk * g + gg, qi, 0),
+        ),
+        out_shape=jax.ShapeDtypeStruct((batch, num_q_heads, q_len, d_head), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((block_q, d_head), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )

@@ -1,0 +1,59 @@
+"""Jitted public wrapper for the flash attention Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    kk: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = k.DEFAULT_BLOCK_Q,
+    block_k: int = k.DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention. q: (B, H, T, D); kk, v: (B, Hk, S, D). Self-attention
+    lengths only (T == S) when causal — cache-offset decode uses the XLA path.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, h, t, d = q.shape
+    hk, s = kk.shape[1], kk.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    call = k.build_pallas_call(
+        b,
+        h,
+        hk,
+        t,
+        s,
+        d,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=bq,
+        block_k=bk,
+        interpret=interpret,
+        dtype=q.dtype,
+    )
+    return call(q, kk, v)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for flash attention (causal / GQA / sliding window)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Dense-softmax attention.
+
+    Args:
+      q: (B, H, T, D); k, v: (B, Hk, S, D) with H % Hk == 0 (GQA).
+      causal: apply causal mask (positions aligned at the end: query i attends
+        keys j with j <= i + (S - T); for self-attention T == S this is j <= i).
+      window: sliding-window size (attend to the last `window` keys).
+
+    Returns: (B, H, T, D) in q.dtype; softmax computed in fp32.
+    """
+    b, h, t, d = q.shape
+    hk, s = k.shape[1], k.shape[2]
+    g = h // hk
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+
+    q_pos = jnp.arange(t)[:, None] + (s - t)
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), dtype=bool)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = probs / jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vf)
+    return out.astype(q.dtype)

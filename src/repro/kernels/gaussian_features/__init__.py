@@ -1,0 +1,3 @@
+from repro.kernels.gaussian_features.ops import gaussian_features, gaussian_features_packed
+
+__all__ = ["gaussian_features", "gaussian_features_packed"]

@@ -1,0 +1,253 @@
+"""Fused Gaussian-feature Pallas TPU kernel — the paper's 7-stage pipeline.
+
+Versal -> TPU mapping (DESIGN.md section 2):
+
+* The paper assigns one pipeline *stage* per AIE tile and streams records
+  between tiles (Window interface, 256 b/cycle). On TPU, VMEM locality beats
+  streaming: all seven stages run fused over a block of Gaussians resident in
+  VMEM, so zero inter-stage HBM/ICI traffic remains.
+* The paper vectorizes *within* one Gaussian's 3-vectors (aie::mul over rows
+  of R). A TPU VPU is 8x128 lanes, so we transpose the parallelism:
+  **one lane = one Gaussian**. Every input is laid out SoA-transposed
+  ``(attribute, N)`` and each 3x3-algebra scalar becomes an (8,128)-shaped
+  elementwise op over a 1024-Gaussian block.
+* The paper's Eq. 4 precompute ``K = J R_cw`` hoists the camera-only factor;
+  here the camera constants live in a tiny replicated operand (the analogue
+  of AIE local-memory constants) and K is formed in registers per lane.
+* Symmetry tricks carry over verbatim: 6 cov3D terms, 3 cov2D terms.
+
+Block layout (per grid step, BN = block size in Gaussians):
+  inputs   pos (3, BN) | quat (4, BN) | log_scale (3, BN) | sh (48, BN)
+           opacity (1, BN) | camera (1, 32) broadcast
+  output   packed features (12, BN):
+           [u, v, conic_a, conic_b, conic_c, r, g, b, depth, radius,
+            opacity, mask]
+
+VMEM footprint at BN=1024: inputs 59 rows x 1024 x 4 B ~= 242 KB, output
+48 KB — comfortably inside one core's VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.features import COV2D_BLUR, FOV_GUARD, NEAR_PLANE
+from repro.core.sh import SH_C0, SH_C1, SH_C2, SH_C3
+
+# Camera constant-vector layout (packed into a (1, 32) f32 operand).
+# [0:9]  r_cw row-major, [9:12] t_cw, [12] fx, [13] fy, [14] cx, [15] cy,
+# [16] tan_fovx, [17] tan_fovy, [18] width, [19] height, [20:23] cam_pos.
+CAM_VEC_LEN = 32
+
+NUM_OUT_ROWS = 12
+DEFAULT_BLOCK = 1024
+
+
+def _camera_scalars(cam_ref):
+    cam = cam_ref[0, :]
+    r = [cam[i] for i in range(9)]
+    t = [cam[9], cam[10], cam[11]]
+    fx, fy, cx, cy = cam[12], cam[13], cam[14], cam[15]
+    tanx, tany = cam[16], cam[17]
+    width, height = cam[18], cam[19]
+    cpos = [cam[20], cam[21], cam[22]]
+    return r, t, fx, fy, cx, cy, tanx, tany, width, height, cpos
+
+
+def gaussian_features_kernel(
+    pos_ref,
+    quat_ref,
+    lsc_ref,
+    sh_ref,
+    opa_ref,
+    cam_ref,
+    out_ref,
+    *,
+    sh_degree: int,
+):
+    (r, t, fx, fy, cx, cy, tanx, tany, width, height, cpos) = _camera_scalars(cam_ref)
+    r00, r01, r02, r10, r11, r12, r20, r21, r22 = r
+
+    px = pos_ref[0, :]
+    py = pos_ref[1, :]
+    pz = pos_ref[2, :]
+
+    # ---- stage cov3D: quaternion -> R, Sigma = R diag(s^2) R^T (6 terms) ----
+    qw = quat_ref[0, :]
+    qx = quat_ref[1, :]
+    qy = quat_ref[2, :]
+    qz = quat_ref[3, :]
+    qn = jax.lax.rsqrt(qw * qw + qx * qx + qy * qy + qz * qz + 1e-24)
+    qw, qx, qy, qz = qw * qn, qx * qn, qy * qn, qz * qn
+
+    g00 = 1.0 - 2.0 * (qy * qy + qz * qz)
+    g01 = 2.0 * (qx * qy - qw * qz)
+    g02 = 2.0 * (qx * qz + qw * qy)
+    g10 = 2.0 * (qx * qy + qw * qz)
+    g11 = 1.0 - 2.0 * (qx * qx + qz * qz)
+    g12 = 2.0 * (qy * qz - qw * qx)
+    g20 = 2.0 * (qx * qz - qw * qy)
+    g21 = 2.0 * (qy * qz + qw * qx)
+    g22 = 1.0 - 2.0 * (qx * qx + qy * qy)
+
+    sx2 = jnp.exp(2.0 * lsc_ref[0, :])
+    sy2 = jnp.exp(2.0 * lsc_ref[1, :])
+    sz2 = jnp.exp(2.0 * lsc_ref[2, :])
+
+    # sigma[i,j] = sum_k g[i,k] g[j,k] s2[k]  — upper triangle only.
+    sxx = g00 * g00 * sx2 + g01 * g01 * sy2 + g02 * g02 * sz2
+    sxy = g00 * g10 * sx2 + g01 * g11 * sy2 + g02 * g12 * sz2
+    sxz = g00 * g20 * sx2 + g01 * g21 * sy2 + g02 * g22 * sz2
+    syy = g10 * g10 * sx2 + g11 * g11 * sy2 + g12 * g12 * sz2
+    syz = g10 * g20 * sx2 + g11 * g21 * sy2 + g12 * g22 * sz2
+    szz = g20 * g20 * sx2 + g21 * g21 * sy2 + g22 * g22 * sz2
+
+    # ---- stage projection ------------------------------------------------
+    pcx = r00 * px + r01 * py + r02 * pz + t[0]
+    pcy = r10 * px + r11 * py + r12 * pz + t[1]
+    pcz = r20 * px + r21 * py + r22 * pz + t[2]
+    safe_z = jnp.where(jnp.abs(pcz) < 1e-6, 1e-6, pcz)
+    inv_z = 1.0 / safe_z
+    u = fx * pcx * inv_z + cx
+    v = fy * pcy * inv_z + cy
+
+    # ---- stage Jacobian (FOV guard band) --------------------------------
+    txc = jnp.clip(pcx * inv_z, -FOV_GUARD * tanx, FOV_GUARD * tanx) * safe_z
+    tyc = jnp.clip(pcy * inv_z, -FOV_GUARD * tany, FOV_GUARD * tany) * safe_z
+    inv_z2 = inv_z * inv_z
+    j00 = fx * inv_z
+    j02 = -fx * txc * inv_z2
+    j11 = fy * inv_z
+    j12 = -fy * tyc * inv_z2
+
+    # ---- stage cov2D: K = J R_cw (Eq. 4), Sigma' = K Sigma K^T ----------
+    k00 = j00 * r00 + j02 * r20
+    k01 = j00 * r01 + j02 * r21
+    k02 = j00 * r02 + j02 * r22
+    k10 = j11 * r10 + j12 * r20
+    k11 = j11 * r11 + j12 * r21
+    k12 = j11 * r12 + j12 * r22
+
+    # w_i = Sigma @ k_row_i (using the 6 symmetric terms).
+    w0x = sxx * k00 + sxy * k01 + sxz * k02
+    w0y = sxy * k00 + syy * k01 + syz * k02
+    w0z = sxz * k00 + syz * k01 + szz * k02
+    w1x = sxx * k10 + sxy * k11 + sxz * k12
+    w1y = sxy * k10 + syy * k11 + syz * k12
+    w1z = sxz * k10 + syz * k11 + szz * k12
+
+    cov_a = k00 * w0x + k01 * w0y + k02 * w0z + COV2D_BLUR
+    cov_b = k10 * w0x + k11 * w0y + k12 * w0z
+    cov_c = k10 * w1x + k11 * w1y + k12 * w1z + COV2D_BLUR
+
+    # ---- stage cov2D_inv (conic + 3-sigma radius) ------------------------
+    det = cov_a * cov_c - cov_b * cov_b
+    safe_det = jnp.where(det <= 0.0, 1.0, det)
+    inv_det = 1.0 / safe_det
+    con_a = cov_c * inv_det
+    con_b = -cov_b * inv_det
+    con_c = cov_a * inv_det
+    mid = 0.5 * (cov_a + cov_c)
+    disc = jnp.sqrt(jnp.maximum(mid * mid - det, 0.1))
+    lam1 = mid + disc
+    radius = jnp.ceil(3.0 * jnp.sqrt(jnp.maximum(lam1, 0.0)))
+    radius = jnp.where(det <= 0.0, 0.0, radius)
+
+    # ---- stage ray_dir ----------------------------------------------------
+    dx = px - cpos[0]
+    dy = py - cpos[1]
+    dz = pz - cpos[2]
+    dn = jax.lax.rsqrt(dx * dx + dy * dy + dz * dz + 1e-24)
+    dx, dy, dz = dx * dn, dy * dn, dz * dn
+
+    # ---- stage color: SH eval (Eq. 3), coefficients laid out (16*3, BN) ---
+    xx, yy, zz = dx * dx, dy * dy, dz * dz
+    xy, yz, xz = dx * dy, dy * dz, dx * dz
+    basis = [jnp.full_like(dx, SH_C0)]
+    if sh_degree >= 1:
+        basis += [-SH_C1 * dy, SH_C1 * dz, -SH_C1 * dx]
+    if sh_degree >= 2:
+        basis += [
+            SH_C2[0] * xy,
+            SH_C2[1] * yz,
+            SH_C2[2] * (2.0 * zz - xx - yy),
+            SH_C2[3] * xz,
+            SH_C2[4] * (xx - yy),
+        ]
+    if sh_degree >= 3:
+        basis += [
+            SH_C3[0] * dy * (3.0 * xx - yy),
+            SH_C3[1] * xy * dz,
+            SH_C3[2] * dy * (4.0 * zz - xx - yy),
+            SH_C3[3] * dz * (2.0 * zz - 3.0 * xx - 3.0 * yy),
+            SH_C3[4] * dx * (4.0 * zz - xx - yy),
+            SH_C3[5] * dz * (xx - yy),
+            SH_C3[6] * dx * (xx - 3.0 * yy),
+        ]
+    col_r = jnp.zeros_like(dx)
+    col_g = jnp.zeros_like(dx)
+    col_b = jnp.zeros_like(dx)
+    for k_idx, bas in enumerate(basis):
+        col_r = col_r + sh_ref[3 * k_idx + 0, :] * bas
+        col_g = col_g + sh_ref[3 * k_idx + 1, :] * bas
+        col_b = col_b + sh_ref[3 * k_idx + 2, :] * bas
+    col_r = jnp.maximum(col_r + 0.5, 0.0)
+    col_g = jnp.maximum(col_g + 0.5, 0.0)
+    col_b = jnp.maximum(col_b + 0.5, 0.0)
+
+    # ---- finalize: opacity + in-frustum mask ------------------------------
+    opacity = jax.nn.sigmoid(opa_ref[0, :])
+    onscreen = (
+        (u > -radius) & (u < width + radius) & (v > -radius) & (v < height + radius)
+    )
+    mask = ((pcz > NEAR_PLANE) & (radius > 0.0) & onscreen).astype(u.dtype)
+
+    out_ref[0, :] = u
+    out_ref[1, :] = v
+    out_ref[2, :] = con_a
+    out_ref[3, :] = con_b
+    out_ref[4, :] = con_c
+    out_ref[5, :] = col_r
+    out_ref[6, :] = col_g
+    out_ref[7, :] = col_b
+    out_ref[8, :] = pcz
+    out_ref[9, :] = radius
+    out_ref[10, :] = opacity
+    out_ref[11, :] = mask
+
+
+def build_pallas_call(
+    num_gaussians: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    sh_degree: int = 3,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Construct the pallas_call for a padded SoA-transposed Gaussian stream."""
+    if num_gaussians % block != 0:
+        raise ValueError(f"{num_gaussians=} must be a multiple of {block=}")
+    grid = (num_gaussians // block,)
+
+    def attr_spec(rows):
+        return pl.BlockSpec((rows, block), lambda i: (0, i))
+
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(gaussian_features_kernel, sh_degree=sh_degree),
+        grid=grid,
+        in_specs=[
+            attr_spec(3),  # positions
+            attr_spec(4),  # quaternions
+            attr_spec(3),  # log scales
+            attr_spec(48),  # sh coefficients
+            attr_spec(1),  # opacity logits
+            pl.BlockSpec((1, CAM_VEC_LEN), lambda i: (0, 0)),  # camera consts
+        ],
+        out_specs=attr_spec(NUM_OUT_ROWS),
+        out_shape=jax.ShapeDtypeStruct((NUM_OUT_ROWS, num_gaussians), dtype),
+        interpret=interpret,
+    )

@@ -1,0 +1,105 @@
+"""Jitted public wrapper for the fused gaussian_features Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import Camera
+from repro.core.features import GaussianFeatures
+from repro.core.gaussians import GaussianParams
+from repro.kernels.gaussian_features import kernel as k
+from repro.kernels.gaussian_features import ref as ref_lib
+
+
+def _default_interpret() -> bool:
+    # Pallas TPU kernels execute via the interpreter on CPU containers; on a
+    # real TPU backend the compiled Mosaic path is used.
+    return jax.default_backend() != "tpu"
+
+
+def pack_camera(cam: Camera) -> jax.Array:
+    """Camera -> (1, CAM_VEC_LEN) constant operand (see kernel.py layout)."""
+    vals = jnp.concatenate(
+        [
+            cam.r_cw.reshape(-1),
+            cam.t_cw.reshape(-1),
+            jnp.stack(
+                [
+                    cam.fx,
+                    cam.fy,
+                    cam.cx,
+                    cam.cy,
+                    cam.tan_fov()[0],
+                    cam.tan_fov()[1],
+                    jnp.asarray(float(cam.width), cam.fx.dtype),
+                    jnp.asarray(float(cam.height), cam.fx.dtype),
+                ]
+            ),
+            cam.cam_pos,
+        ]
+    )
+    pad = k.CAM_VEC_LEN - vals.shape[0]
+    return jnp.pad(vals, (0, pad))[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sh_degree", "block", "interpret")
+)
+def gaussian_features_packed(
+    g: GaussianParams,
+    cam: Camera,
+    *,
+    sh_degree: int = 3,
+    block: int = k.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Run the fused kernel. Returns the packed (12, N) feature record.
+
+    Pads N up to the block size (padding lanes carry opacity logit -30 and a
+    degenerate geometry that fails the frustum mask) and slices back.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = g.num_gaussians
+    block = min(block, max(128, 1 << (n - 1).bit_length()))
+    pad = (-n) % block
+    npad = n + pad
+
+    def padit(x, fill=0.0):
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    pos = padit(g.positions).T  # (3, Np)
+    quat = padit(g.quats, 1.0).T  # (4, Np)
+    lsc = padit(g.log_scales, -10.0).T  # (3, Np)
+    sh = padit(g.sh).reshape(npad, 48).T  # (48, Np) — (basis, channel) minor
+    opa = padit(g.opacity_logit, -30.0)[None, :]  # (1, Np)
+    cam_vec = pack_camera(cam)
+
+    call = k.build_pallas_call(
+        npad,
+        block=block,
+        sh_degree=sh_degree,
+        interpret=interpret,
+        dtype=pos.dtype,
+    )
+    packed = call(pos, quat, lsc, sh, opa, cam_vec)
+    return packed[:, :n]
+
+
+def gaussian_features(
+    g: GaussianParams,
+    cam: Camera,
+    *,
+    sh_degree: int = 3,
+    block: int = k.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> GaussianFeatures:
+    """Kernel path returning the structured GaussianFeatures record."""
+    packed = gaussian_features_packed(
+        g, cam, sh_degree=sh_degree, block=block, interpret=interpret
+    )
+    return ref_lib.unpack_features(packed)

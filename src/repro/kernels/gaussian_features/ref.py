@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused gaussian_features kernel.
+
+Delegates to the staged reference pipeline (`repro.core.features`) — which is
+itself validated against the paper's naive path — and packs the result into
+the kernel's (12, N) record layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import features as feat_lib
+from repro.core.camera import Camera
+from repro.core.features import GaussianFeatures
+from repro.core.gaussians import GaussianParams
+
+
+def pack_features(f: GaussianFeatures) -> jnp.ndarray:
+    """GaussianFeatures -> (12, N) packed record (kernel output layout)."""
+    return jnp.stack(
+        [
+            f.uv[:, 0],
+            f.uv[:, 1],
+            f.conic[:, 0],
+            f.conic[:, 1],
+            f.conic[:, 2],
+            f.color[:, 0],
+            f.color[:, 1],
+            f.color[:, 2],
+            f.depth,
+            f.radius,
+            f.opacity,
+            f.mask,
+        ],
+        axis=0,
+    )
+
+
+def unpack_features(packed: jnp.ndarray) -> GaussianFeatures:
+    """(12, N) packed record -> GaussianFeatures."""
+    return GaussianFeatures(
+        uv=packed[0:2].T,
+        conic=packed[2:5].T,
+        color=packed[5:8].T,
+        depth=packed[8],
+        radius=packed[9],
+        opacity=packed[10],
+        mask=packed[11],
+    )
+
+
+def gaussian_features_ref(
+    g: GaussianParams, cam: Camera, *, sh_degree: int = 3
+) -> jnp.ndarray:
+    """Oracle: staged pipeline, packed to the kernel output layout."""
+    feats = feat_lib.compute_features_staged(g, cam, sh_degree=sh_degree)
+    return pack_features(feats)

@@ -1,0 +1,48 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Single pass over (rows, d) blocks resident in VMEM: mean-of-squares
+reduction, rsqrt, scale — the unfused XLA path reads the activation twice
+(reduction + normalize). Rows = flattened (batch, seq); d = model dim on
+the lane axis (multiples of 128 for all assigned archs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (R, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (out * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def build_pallas_call(
+    rows: int,
+    d: int,
+    *,
+    eps: float,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    if rows % block_rows:
+        raise ValueError(f"{rows=} must divide {block_rows=}")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), dtype),
+        interpret=interpret,
+    )

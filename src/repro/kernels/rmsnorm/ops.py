@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the fused RMSNorm Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import kernel as k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    scale: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = k.DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused RMSNorm over the last dim. x: (..., D); scale: (D,)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    call = k.build_pallas_call(
+        rows + pad, d, eps=eps, block_rows=br, interpret=interpret, dtype=x.dtype
+    )
+    out = call(x2, scale[None, :])
+    return out[:rows].reshape(shape)

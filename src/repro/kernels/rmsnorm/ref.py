@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel (shared with models.layers)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm as rmsnorm_ref  # canonical implementation
+
+__all__ = ["rmsnorm_ref"]

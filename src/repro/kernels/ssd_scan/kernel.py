@@ -1,0 +1,132 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+Implements the SSD block decomposition (arXiv:2405.21060): a chunk of the
+linear recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T,  y_t = C_t h_t
+is evaluated as a small "attention" problem (intra-chunk, MXU matmuls) plus a
+rank-1-corrected carry of the inter-chunk state, which lives in VMEM scratch
+across the sequentially-iterated chunk grid dimension.
+
+Grid: (batch, heads, T / chunk). Per-step blocks:
+  x (chunk, P) | dt (chunk, 1) | B (chunk, N) | C (chunk, N) | A (1, 1)
+  out y (chunk, P); final state (N, P) written on the last chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, L, P)
+    dt_ref,  # (1, 1, L, 1)
+    b_ref,  # (1, 1, L, N)
+    c_ref,  # (1, 1, L, N)
+    a_ref,  # (1, 1) per-head log-decay coefficient (negative)
+    y_ref,  # (1, 1, L, P)
+    hfin_ref,  # (1, 1, N, P)
+    h_scr,  # (N, P) carried state
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0, :, :].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, 0, :, :].astype(jnp.float32)  # (L, 1)
+    b = b_ref[0, 0, :, :].astype(jnp.float32)  # (L, N)
+    c = c_ref[0, 0, :, :].astype(jnp.float32)  # (L, N)
+    a = a_ref[0, 0]  # scalar
+
+    loga = dt * a  # (L, 1) per-step log decay (negative)
+    s = jnp.cumsum(loga, axis=0)  # (L, 1) inclusive
+    s_total = s[chunk - 1, 0]
+
+    # ---- intra-chunk: masked decay "attention" --------------------------
+    cb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L): C_i . B_j
+    expo = s - s.T  # (L, L): s_i - s_j
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = row >= col
+    expo = jnp.where(causal, expo, NEG_INF)
+    m = cb * jnp.exp(expo) * dt.T  # (L, L) * dt_j
+    y_intra = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # ---- inter-chunk: contribution of the carried state ------------------
+    c_decay = c * jnp.exp(s)  # (L, N)
+    y_inter = jax.lax.dot_general(
+        c_decay, h_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (L, P)
+
+    y_ref[0, 0, :, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state carry ------------------------------------------------------
+    w = jnp.exp(s_total - s) * dt  # (L, 1)
+    s_new = jax.lax.dot_general(
+        b, x * w, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+    h_scr[...] = jnp.exp(s_total) * h_scr[...] + s_new
+
+    @pl.when(ci == num_chunks - 1)
+    def _fin():
+        hfin_ref[0, 0, :, :] = h_scr[...].astype(hfin_ref.dtype)
+
+
+def build_pallas_call(
+    batch: int,
+    heads: int,
+    seq: int,
+    d_head: int,
+    d_state: int,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    if seq % chunk:
+        raise ValueError(f"{seq=} must divide {chunk=}")
+    num_chunks = seq // chunk
+    grid = (batch, heads, num_chunks)
+
+    def tspec(d):
+        return pl.BlockSpec((1, 1, chunk, d), lambda bi, hi, ci: (bi, hi, ci, 0))
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk, num_chunks=num_chunks),
+        grid=grid,
+        in_specs=[
+            tspec(d_head),  # x
+            tspec(1),  # dt
+            tspec(d_state),  # B
+            tspec(d_state),  # C
+            pl.BlockSpec((1, 1), lambda bi, hi, ci: (hi, 0)),  # A per head
+        ],
+        out_specs=[
+            tspec(d_head),
+            pl.BlockSpec(
+                (1, 1, d_state, d_head), lambda bi, hi, ci: (bi, hi, 0, 0)
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, heads, seq, d_head), dtype),
+            jax.ShapeDtypeStruct((batch, heads, d_state, d_head), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_state, d_head), jnp.float32)],
+        interpret=interpret,
+    )

@@ -1,0 +1,40 @@
+"""Jitted public wrapper for the SSD chunked-scan Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    a: jax.Array,
+    *,
+    chunk: int = k.DEFAULT_CHUNK,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Shapes as in ref.py. Returns (y, final_state)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"seq {t} must divide chunk {chunk}")
+    call = k.build_pallas_call(
+        bsz, h, t, p, n, chunk=chunk, interpret=interpret, dtype=x.dtype
+    )
+    y, hfin = call(x, dt[..., None], b, c, a[:, None].astype(jnp.float32))
+    return y, hfin

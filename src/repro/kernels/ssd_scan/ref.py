@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the SSD scan: the literal sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    a: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential SSD recurrence.
+
+    Args:
+      x:  (B, H, T, P) inputs.
+      dt: (B, H, T) positive step sizes (post-softplus).
+      b:  (B, H, T, N) input projections.
+      c:  (B, H, T, N) output projections.
+      a:  (H,) negative per-head decay coefficients.
+
+    Returns:
+      y: (B, H, T, P), final state h: (B, H, N, P).
+
+      h_t = exp(dt_t * a) * h_{t-1} + dt_t * (b_t  x_t^T)
+      y_t = c_t @ h_t
+    """
+    bsz, h, t, p = x.shape
+    n = b.shape[-1]
+
+    def per_head(xh, dth, bh, ch, ah):
+        # xh (T,P), dth (T,), bh/ch (T,N), ah scalar
+        def step(hstate, inp):
+            xt, dtt, bt, ct = inp
+            da = jnp.exp(dtt * ah)
+            hstate = da * hstate + dtt * (bt[:, None] * xt[None, :])  # (N, P)
+            yt = ct @ hstate  # (P,)
+            return hstate, yt
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        hfin, ys = jax.lax.scan(step, h0, (xh, dth, bh, ch))
+        return ys, hfin
+
+    f = jax.vmap(  # over batch
+        jax.vmap(per_head, in_axes=(0, 0, 0, 0, 0)), in_axes=(0, 0, 0, 0, None)
+    )
+    y, hfin = f(
+        x.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        b.astype(jnp.float32),
+        c.astype(jnp.float32),
+        a.astype(jnp.float32),
+    )
+    return y.astype(x.dtype), hfin

@@ -1,0 +1,3 @@
+from repro.kernels.tile_rasterize.ops import tile_rasterize
+
+__all__ = ["tile_rasterize"]

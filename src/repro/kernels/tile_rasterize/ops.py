@@ -1,0 +1,56 @@
+"""Jitted public wrapper: full-image Pallas rasterization from packed features."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rasterize as rast_lib
+from repro.kernels.tile_rasterize import kernel as k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("height", "width", "block_g", "interpret"))
+def tile_rasterize(
+    packed_sorted: jax.Array,
+    height: int,
+    width: int,
+    background: jax.Array,
+    *,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Rasterize packed depth-sorted features to an (H, W, 3) image.
+
+    Pads pixels to full tiles and Gaussians to full blocks (mask row zeroed on
+    the padding so blending is unaffected).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    num_g = packed_sorted.shape[1]
+    bg4 = jnp.concatenate([background, jnp.zeros((1,), background.dtype)])[None, :]
+
+    block_g = min(block_g, max(128, num_g))
+    pad_g = (-num_g) % block_g
+    packed = jnp.pad(packed_sorted, ((0, 0), (0, pad_g)))
+    # Zero out the mask row for padding lanes (pad writes zeros already).
+
+    pix = rast_lib.pixel_grid(height, width)
+    num_pix = height * width
+    pad_p = (-num_pix) % k.TILE_PIX
+    pix = jnp.pad(pix, ((0, pad_p), (0, 0)), constant_values=-1e6)
+
+    call = k.build_pallas_call(
+        num_pix + pad_p,
+        num_g + pad_g,
+        block_g=block_g,
+        interpret=interpret,
+        dtype=packed.dtype,
+    )
+    out = call(pix, packed, bg4)  # (P, 4)
+    return out[:num_pix, 0:3].reshape(height, width, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the tile rasterizer kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rasterize as rast_lib
+from repro.kernels.gaussian_features.ref import unpack_features
+
+
+def tile_rasterize_ref(
+    pix: jnp.ndarray,
+    packed_sorted: jnp.ndarray,
+    background: jnp.ndarray,
+) -> jnp.ndarray:
+    """Blend packed depth-sorted features at given pixels.
+
+    Args:
+      pix: (P, 2) pixel centers.
+      packed_sorted: (12, G) packed features, already depth-sorted.
+      background: (3,) rgb.
+
+    Returns: (P, 4) rgb + final transmittance.
+    """
+    feats = unpack_features(packed_sorted)
+    alpha = rast_lib._pixel_alphas(pix, feats)  # (P, G)
+    trans = jnp.cumprod(1.0 - alpha, axis=-1)
+    t_prev = jnp.concatenate([jnp.ones_like(trans[:, :1]), trans[:, :-1]], axis=-1)
+    weights = alpha * t_prev
+    rgb = weights @ feats.color
+    t_final = trans[:, -1:]
+    return jnp.concatenate([rgb + t_final * background[None, :], t_final], axis=-1)

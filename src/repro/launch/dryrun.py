@@ -1,0 +1,277 @@
+import os
+
+# all-reduce-promotion: XLA-CPU aborts promoting sub-32-bit all-reduces whose
+# reducers carry Shardy annotations (shard_map EP MoE path); the pass is
+# irrelevant for compile-only analysis and for the bf16-native TPU target.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    " --xla_disable_hlo_passes=all-reduce-promotion"
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline terms from the compiled artifact.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all          # 40-cell sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json (memory analysis,
+cost analysis, roofline terms) — EXPERIMENTS.md section Dry-run / Roofline are
+generated from these files.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as shd
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import params as P
+from repro.models.api import SHAPES, ModelConfig, ShapeConfig, family_module, supports_shape
+from repro.optim import AdamWConfig
+from repro.train.trainer import build_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _tree_shardings_for(cfg, mesh, mode):
+    mod = family_module(cfg)
+    defs = mod.param_defs(cfg)
+    logical = P.logical_tree(defs)
+    abstract = P.abstract_tree(defs, cfg.pdtype())
+    return abstract, shd.tree_shardings(logical, abstract, mesh, mode)
+
+
+def _spec_shardings(specs: dict, logical: dict, mesh, mode):
+    ctx = shd.ShardingContext(mesh=mesh, rules=shd.RULE_SETS[mode])
+    return {
+        k: ctx.sharding_for(v.shape, logical[k]) for k, v in specs.items()
+    }
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    *,
+    mode: str = "fsdp_sp",
+    opt_cfg: AdamWConfig | None = None,
+):
+    """Lower + compile one (arch, shape) on a mesh. Returns (compiled, meta)."""
+    mod = family_module(cfg)
+    abstract_params, param_shardings = _tree_shardings_for(cfg, mesh, mode)
+
+    with mesh, shd.axis_rules(mesh, mode):
+        if shape.kind == "train":
+            opt_cfg = opt_cfg or AdamWConfig()
+            step = build_train_step(cfg, opt_cfg)
+            opt_abstract = {
+                "m": jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                    abstract_params,
+                ),
+                "v": jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                    abstract_params,
+                ),
+                "count": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            opt_shardings = {
+                "m": param_shardings,
+                "v": param_shardings,
+                "count": None,
+            }
+            batch = specs_lib.train_input_specs(cfg, shape)
+            batch_shardings = _spec_shardings(
+                batch, specs_lib.batch_logical(cfg, batch), mesh, mode
+            )
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_shardings, opt_shardings, batch_shardings),
+                donate_argnums=(0, 1),
+            ).lower(abstract_params, opt_abstract, batch)
+        elif shape.kind == "prefill":
+            batch = specs_lib.prefill_input_specs(cfg, shape)
+            batch_shardings = _spec_shardings(
+                batch, specs_lib.batch_logical(cfg, batch), mesh, mode
+            )
+
+            def pf(params, b):
+                return mod.prefill(cfg, params, b, shape.seq_len)
+
+            lowered = jax.jit(
+                pf, in_shardings=(param_shardings, batch_shardings)
+            ).lower(abstract_params, batch)
+        elif shape.kind == "decode":
+            state, tokens = specs_lib.decode_input_specs(cfg, shape)
+            state_logical = mod.decode_state_logical()
+            ctx = shd.ShardingContext(mesh=mesh, rules=shd.RULE_SETS[mode])
+            state_shardings = jax.tree.map(
+                lambda logical, leaf: ctx.sharding_for(leaf.shape, logical),
+                state_logical,
+                state,
+                is_leaf=shd.is_logical_leaf,
+            )
+            tok_sharding = ctx.sharding_for(tokens.shape, ("act_batch",))
+
+            def dec(params, s, t):
+                return mod.decode_step(cfg, params, s, t)
+
+            lowered = jax.jit(
+                dec,
+                in_shardings=(param_shardings, state_shardings, tok_sharding),
+                donate_argnums=(1,),
+            ).lower(abstract_params, state, tokens)
+        else:
+            raise ValueError(shape.kind)
+
+        compiled = lowered.compile()
+    return compiled
+
+
+def analyze_cell(cfg, shape, mesh, compiled) -> dict:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    from benchmarks import roofline as R
+
+    n_dev = mesh.devices.size
+    hlo = compiled.as_text()
+    mf = R.model_flops_global(cfg, shape)
+    report = R.analyze(hlo, num_partitions=n_dev, model_flops_global=mf)
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            mem[f] = getattr(ma, f, None)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        cost = {
+            "flops_unrolled_once": ca.get("flops"),
+            "bytes_accessed_unrolled_once": ca.get("bytes accessed"),
+        }
+    except Exception as e:  # pragma: no cover
+        cost["error"] = str(e)
+
+    collective_ops = {}
+    for op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
+        collective_ops[op] = hlo.count(f" {op}(")
+
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": dict(mesh.shape),
+        "num_devices": int(n_dev),
+        "roofline": report.to_dict(),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "collective_op_counts": collective_ops,
+        "hlo_bytes": len(hlo),
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mode: str, out_dir: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    result_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}__{mode}.json")
+    if not ok:
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_tag,
+            "status": "skipped",
+            "reason": why,
+        }
+        with open(result_path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        compiled = lower_cell(cfg, shape, mesh, mode=mode)
+        result = analyze_cell(cfg, shape, mesh, compiled)
+        result["status"] = "ok"
+        result["skip_reason"] = why
+        result["compile_seconds"] = time.time() - t0
+        result["sharding_mode"] = mode
+        result["mesh_tag"] = mesh_tag
+    except Exception as e:
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_tag,
+            "status": "failed",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    with open(result_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="fsdp_sp", choices=list(shd.RULE_SETS))
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir or os.path.abspath(RESULTS_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape_name in cells:
+        res = run_cell(
+            arch, shape_name, multi_pod=args.multi_pod, mode=args.mode, out_dir=out_dir
+        )
+        status = res.get("status")
+        if status == "ok":
+            r = res["roofline"]
+            print(
+                f"{arch:>22s} {shape_name:<12s} {res['mesh_tag']:<10s} OK "
+                f"compute={r['compute_s']:.2e}s mem={r['memory_s']:.2e}s "
+                f"coll={r['collective_s']:.2e}s bottleneck={r['bottleneck']} "
+                f"compile={res['compile_seconds']:.0f}s",
+                flush=True,
+            )
+        elif status == "skipped":
+            print(f"{arch:>22s} {shape_name:<12s} SKIP ({res['reason']})", flush=True)
+        else:
+            print(f"{arch:>22s} {shape_name:<12s} FAILED: {res['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state. Production target: TPU v5e pods of 16x16 = 256 chips; the multi-pod
+configuration stacks a leading ``pod`` axis (2 pods = 512 chips for the
+dry-run; the axis generalizes to N pods).
+
+Axis semantics:
+  pod   — data parallelism across pods (gradient all-reduce over DCN).
+  data  — data parallelism / FSDP storage within a pod.
+  model — tensor/sequence/expert parallelism within a pod (ICI-local).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests / small-scale runs)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(max_devices: int | None = None) -> Mesh:
+    """Largest (data, model)-style mesh available on the current host —
+    used by CPU integration tests; falls back to (1, 1)."""
+    n = len(jax.devices())
+    if max_devices:
+        n = min(n, max_devices)
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and n >= cand:
+            model = cand
+            break
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Follows the shannon/kernels pattern: weak-type-correct, shardable, zero
+device allocation. ``[audio]``/``[vlm]`` frontends are stubs — the specs
+provide precomputed frame/patch embeddings per the brief.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig, ShapeConfig, family_module
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, t), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.cdtype()
+        )
+    if cfg.family == "vlm":
+        from repro.models.vlm import VIT_DIM
+
+        t_text = t - cfg.num_patches
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, VIT_DIM), cfg.cdtype())
+        specs["tokens"] = jax.ShapeDtypeStruct((b, t_text), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, t_text), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[dict, jax.ShapeDtypeStruct]:
+    """Returns (abstract decode state, abstract token batch)."""
+    mod = family_module(cfg)
+    state = jax.eval_shape(
+        lambda: mod.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return state, tokens
+
+
+def batch_logical(cfg: ModelConfig, specs: dict) -> dict:
+    """Logical axis names for each input (for the sharding rules)."""
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 2:
+            out[k] = ("act_batch", "act_seq")
+        elif v.ndim == 3:
+            out[k] = ("act_batch", "act_seq", "act_embed")
+        else:
+            out[k] = ("act_batch",) + (None,) * (v.ndim - 1)
+    return out

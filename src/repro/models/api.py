@@ -1,0 +1,124 @@
+"""Unified model configuration + family registry.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; the
+``family`` field dispatches to the implementing module (dense / moe / ssm /
+hybrid / encdec / vlm). Each family module exposes the same functional API:
+
+    param_defs(cfg)                        -> ParamDef tree
+    forward(cfg, params, batch)            -> logits           (training fwd)
+    init_decode_state(cfg, batch, max_seq) -> abstract-friendly cache pytree
+    prefill(cfg, params, batch)            -> (state, logits)
+    decode_step(cfg, params, state, token) -> (state, logits)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    # dense-attention options
+    qkv_bias: bool = False
+    sliding_window: int | None = None
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    # hybrid (zamba2): one *shared* attention block applied every k ssm blocks
+    hybrid_attn_every: int = 0
+    # enc-dec (whisper): encoder layers + stub frontend length
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0
+    # vlm (internvl2): stub patch embeddings prepended to the text sequence
+    num_patches: int = 0
+    # numerics / execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"  # none | dots | full
+    attn_chunk: int = 1024  # KV-chunk size of the scan-based flash attention
+    use_pallas: bool = False  # kernels only on real TPU runs
+
+    @property
+    def n_q_per_kv(self) -> int:
+        return self.n_heads // max(1, self.n_kv_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (arch x shape) cell: what gets lowered in the dry-run."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def family_module(cfg: ModelConfig):
+    from repro.models import dense, encdec, hybrid, mamba2, moe, vlm
+
+    return {
+        "dense": dense,
+        "moe": moe,
+        "ssm": mamba2,
+        "hybrid": hybrid,
+        "encdec": encdec,
+        "vlm": vlm,
+    }[cfg.family]
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Skip rules per brief: long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, "constant-state SSM"
+        if cfg.sliding_window is not None:
+            return True, f"sliding window {cfg.sliding_window}"
+        return False, "pure full attention is O(L^2) at 524k; skipped per brief"
+    return True, ""

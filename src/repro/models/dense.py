@@ -1,0 +1,233 @@
+"""Dense decoder-only transformer (llama-family): qwen2 / danube / tinyllama /
+starcoder2. Scan-over-layers with stacked parameters (compile time is
+layer-count independent), remat policy per config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    n = cfg.n_layers
+    d = cfg.d_model
+    defs = {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), init="embed"),
+        "layers": {
+            "ln1": ParamDef((n, d), ("layers", None), init="ones"),
+            "attn": L.attn_param_defs(cfg, stacked=n),
+            "ln2": ParamDef((n, d), ("layers", None), init="ones"),
+            "mlp": L.mlp_param_defs(cfg, stacked=n),
+        },
+        "ln_f": ParamDef((d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: ModelConfig, h: jax.Array, lp: dict, positions: jax.Array):
+    hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    h = h + L.attn_block(cfg, lp["attn"], hn, positions)
+    hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+    h = h + L.mlp_block(cfg, lp["mlp"], hn)
+    return constrain(h, ("act_batch", "act_seq", "act_embed"))
+
+
+def backbone(cfg: ModelConfig, params: dict, h: jax.Array, positions: jax.Array):
+    """Run the layer stack on embedded inputs h (B, T, D)."""
+
+    def body(carry, lp):
+        return _layer_fwd(cfg, carry, lp, positions), None
+
+    body = L.remat_wrap(cfg, body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]  # (B, T)
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    positions = jnp.arange(tokens.shape[1])
+    h = backbone(cfg, params, h, positions)
+    head = params.get("lm_head", params["embed"])
+    return L.lm_logits(h, head, transpose="lm_head" not in params)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + cached decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Zeroed KV caches. Cache seq axis is sharded on the ``model`` mesh axis
+    (split-KV decode). SWA models only retain the window."""
+    s = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, cfg.cdtype()),
+        "v": jnp.zeros(shape, cfg.cdtype()),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_state_logical() -> dict:
+    return {
+        "k": ("layers", "act_batch", "act_kv_seq", None, None),
+        "v": ("layers", "act_batch", "act_kv_seq", None, None),
+        "pos": (),
+    }
+
+
+def _attn_qkv_1tok(cfg: ModelConfig, lp: dict, x: jax.Array, pos: jax.Array):
+    """Projections + RoPE for one token. x: (B, 1, D)."""
+    b = x.shape[0]
+    dt = x.dtype
+    p = lp["attn"]
+    q = jnp.einsum("btd,dk->btk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dk->btk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dk->btk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    if cfg.use_rope:
+        posb = pos[None, None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32)
+        q = L.apply_rope(q, posb, cfg.rope_theta)
+        k = L.apply_rope(k, posb, cfg.rope_theta)
+    return q, k, v
+
+
+def decode_step(
+    cfg: ModelConfig, params: dict, state: dict, tokens: jax.Array
+) -> tuple[dict, jax.Array]:
+    """One autoregressive step. tokens: (B,) int32. Returns (state, logits)."""
+    pos = state["pos"]
+    cache_len = state["k"].shape[2]
+    # SWA caches are ring buffers over the window.
+    slot = pos % cache_len if cfg.sliding_window else pos
+    h = L.embed_tokens(params["embed"], tokens[:, None], cfg.cdtype())  # (B,1,D)
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc = xs
+        hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = _attn_qkv_1tok(cfg, lp, hn, pos)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        kc = constrain(kc, ("act_batch", "act_kv_seq", None, None))
+        vc = constrain(vc, ("act_batch", "act_kv_seq", None, None))
+        if cfg.sliding_window:
+            # Ring buffer: all populated slots are within the window by
+            # construction; mask only un-populated slots (pos < cache_len).
+            attn_pos = jnp.minimum(pos, cache_len - 1)
+            out = L.decode_attention(q, kc, vc, attn_pos, window=None)
+        else:
+            out = L.decode_attention(q, kc, vc, pos, window=None)
+        out = out.reshape(h.shape[0], 1, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, lp["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.mlp_block(cfg, lp["mlp"], hn)
+        return h, (kc, vc)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (params["layers"], state["k"], state["v"])
+    )
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = L.lm_logits(h, head, transpose="lm_head" not in params)[:, 0]
+    new_state = {"k": new_k, "v": new_v, "pos": pos + 1}
+    return new_state, logits
+
+
+def prefill(
+    cfg: ModelConfig, params: dict, batch: dict, max_seq: int
+) -> tuple[dict, jax.Array]:
+    """Process a full prompt, build the KV cache, return last-token logits."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    positions = jnp.arange(t)
+
+    def body(carry, lp):
+        h = carry
+        hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], hn, positions)
+        if cfg.use_pallas and t % 128 == 0:
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            out = jnp.moveaxis(
+                flash_attention(
+                    jnp.moveaxis(q, 2, 1),
+                    jnp.moveaxis(k, 2, 1),
+                    jnp.moveaxis(v, 2, 1),
+                    causal=True,
+                    window=cfg.sliding_window,
+                ),
+                1,
+                2,
+            )
+        elif t <= cfg.attn_chunk:
+            out = L.dense_attention(q, k, v, causal=True, window=cfg.sliding_window)
+        else:
+            out = chunk_attn = L.chunked_attention(
+                q, k, v, causal=True, window=cfg.sliding_window, chunk=cfg.attn_chunk
+            )
+        out = out.reshape(b, t, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, lp["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.mlp_block(cfg, lp["mlp"], hn)
+        return h, (k, v)
+
+    body = L.remat_wrap(cfg, body)
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"])  # ks: (L, B, T, Hk, Dh)
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = L.lm_logits(h[:, -1:], head, transpose="lm_head" not in params)[:, 0]
+
+    state = init_decode_state(cfg, b, max_seq)
+    cache_len = state["k"].shape[2]
+    if cfg.sliding_window and t > cache_len:
+        # Keep only the trailing window, aligned to the ring-buffer slots.
+        start = t - cache_len
+        shift = start % cache_len
+        ks = jnp.roll(ks[:, :, start:], shift, axis=2)
+        vs = jnp.roll(vs[:, :, start:], shift, axis=2)
+        state["k"] = ks.astype(cfg.cdtype())
+        state["v"] = vs.astype(cfg.cdtype())
+    else:
+        state["k"] = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], ks.astype(cfg.cdtype()), 0, axis=2
+        )
+        state["v"] = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], vs.astype(cfg.cdtype()), 0, axis=2
+        )
+    state["pos"] = jnp.asarray(t, jnp.int32)
+    return state, logits

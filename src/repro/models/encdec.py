@@ -1,0 +1,280 @@
+"""Whisper-style encoder-decoder. The conv audio frontend is a STUB per the
+brief: ``input_specs`` provides precomputed frame embeddings (B, S_enc, D).
+
+Simplifications noted in DESIGN.md: sinusoidal positions on both sides
+(instead of Whisper's learned decoder embedding — keeps arbitrary decode
+lengths), RMSNorm-free (LayerNorm with bias as in Whisper), GELU MLPs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+
+def _ln_defs(n: int, d: int) -> dict:
+    return {
+        "scale": ParamDef((n, d), ("layers", None), init="ones"),
+        "bias": ParamDef((n, d), ("layers", None), init="zeros"),
+    }
+
+
+def _gelu_mlp_defs(cfg: ModelConfig, stacked: int) -> dict:
+    n, d, f = stacked, cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamDef((n, d, f), ("layers", "win", "wout")),
+        "b1": ParamDef((n, f), ("layers", "wout"), init="zeros"),
+        "w2": ParamDef((n, f, d), ("layers", "wout", "win")),
+        "b2": ParamDef((n, d), ("layers", None), init="zeros"),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    ne, nd, d = cfg.n_encoder_layers, cfg.n_layers, cfg.d_model
+    return {
+        "encoder": {
+            "layers": {
+                "ln1": _ln_defs(ne, d),
+                "attn": L.attn_param_defs(cfg, stacked=ne),
+                "ln2": _ln_defs(ne, d),
+                "mlp": _gelu_mlp_defs(cfg, ne),
+            },
+            "ln_post": {
+                "scale": ParamDef((d,), (None,), init="ones"),
+                "bias": ParamDef((d,), (None,), init="zeros"),
+            },
+        },
+        "decoder": {
+            "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), init="embed"),
+            "layers": {
+                "ln1": _ln_defs(nd, d),
+                "self_attn": L.attn_param_defs(cfg, stacked=nd),
+                "ln2": _ln_defs(nd, d),
+                "cross_attn": L.attn_param_defs(cfg, stacked=nd),
+                "ln3": _ln_defs(nd, d),
+                "mlp": _gelu_mlp_defs(cfg, nd),
+            },
+            "ln_f": {
+                "scale": ParamDef((d,), (None,), init="ones"),
+                "bias": ParamDef((d,), (None,), init="zeros"),
+            },
+        },
+    }
+
+
+def _ln(x, p, eps):
+    return L.layernorm(x, p["scale"], p["bias"], eps)
+
+
+def _gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("btd,df->btf", x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+    h = jax.nn.gelu(h)
+    h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    out = jnp.einsum("btf,fd->btd", h, p["w2"].astype(dt)) + p["b2"].astype(dt)
+    return constrain(out, ("act_batch", "act_seq", "act_embed"))
+
+
+def sinusoid_positions(t: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(t, dtype=jnp.float32) + offset
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2, jnp.float32) / d)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+
+
+def _cross_attn(
+    cfg: ModelConfig, p: dict, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array
+) -> jax.Array:
+    """Cross attention: queries from decoder x, K/V precomputed from encoder."""
+    b, t, _ = x.shape
+    dt = x.dtype
+    q = jnp.einsum("btd,dk->btk", x, p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(b, t, cfg.n_heads, cfg.d_head)
+    out = L.dense_attention(q, enc_k, enc_v, causal=False)
+    out = out.reshape(b, t, cfg.n_heads * cfg.d_head)
+    return jnp.einsum("btk,kd->btd", out, p["wo"].astype(dt))
+
+
+def _enc_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array):
+    b, s, _ = enc_out.shape
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dk->btk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dk->btk", enc_out, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return (
+        k.reshape(b, s, cfg.n_kv_heads, cfg.d_head),
+        v.reshape(b, s, cfg.n_kv_heads, cfg.d_head),
+    )
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, D) stub embeddings -> encoder output."""
+    h = frames.astype(cfg.cdtype())
+    h = h + sinusoid_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    h = constrain(h, ("act_batch", "act_seq", "act_embed"))
+    positions = jnp.arange(h.shape[1])
+    enc = params["encoder"]
+
+    def body(carry, lp):
+        h = carry
+        hn = _ln(h, lp["ln1"], cfg.norm_eps)
+        h = h + L.attn_block(cfg, lp["attn"], hn, positions, causal=False)
+        hn = _ln(h, lp["ln2"], cfg.norm_eps)
+        h = h + _gelu_mlp(lp["mlp"], hn)
+        return h, None
+
+    body = L.remat_wrap(cfg, body)
+    h, _ = jax.lax.scan(body, h, enc["layers"])
+    return _ln(h, enc["ln_post"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    dec = params["decoder"]
+    h = L.embed_tokens(dec["embed"], tokens, cfg.cdtype())
+    h = h + sinusoid_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lp):
+        h = carry
+        hn = _ln(h, lp["ln1"], cfg.norm_eps)
+        h = h + L.attn_block(cfg, lp["self_attn"], hn, positions, causal=True)
+        hn = _ln(h, lp["ln2"], cfg.norm_eps)
+        ek, ev = _enc_kv(cfg, lp["cross_attn"], enc_out)
+        h = h + _cross_attn(cfg, lp["cross_attn"], hn, ek, ev)
+        hn = _ln(h, lp["ln3"], cfg.norm_eps)
+        h = h + _gelu_mlp(lp["mlp"], hn)
+        return h, None
+
+    body = L.remat_wrap(cfg, body)
+    h, _ = jax.lax.scan(body, h, dec["layers"])
+    h = _ln(h, dec["ln_f"], cfg.norm_eps)
+    return L.lm_logits(h, dec["embed"], transpose=True)  # tied head
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    xshape = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, cfg.cdtype()),
+        "v": jnp.zeros(shape, cfg.cdtype()),
+        "xk": jnp.zeros(xshape, cfg.cdtype()),
+        "xv": jnp.zeros(xshape, cfg.cdtype()),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_state_logical() -> dict:
+    return {
+        "k": ("layers", "act_batch", "act_kv_seq", None, None),
+        "v": ("layers", "act_batch", "act_kv_seq", None, None),
+        "xk": ("layers", "act_batch", "act_kv_seq", None, None),
+        "xv": ("layers", "act_batch", "act_kv_seq", None, None),
+        "pos": (),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict, tokens: jax.Array):
+    from repro.models import dense  # for _attn_qkv_1tok
+
+    pos = state["pos"]
+    dec = params["decoder"]
+    h = L.embed_tokens(dec["embed"], tokens[:, None], cfg.cdtype())
+    h = h + jax.lax.dynamic_slice_in_dim(
+        sinusoid_positions(state["k"].shape[2], cfg.d_model), pos, 1, 0
+    ).astype(h.dtype)
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc, xk, xv = xs
+        hn = _ln(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = dense._attn_qkv_1tok(cfg, {"attn": lp["self_attn"]}, hn, pos)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        kc = constrain(kc, ("act_batch", "act_kv_seq", None, None))
+        vc = constrain(vc, ("act_batch", "act_kv_seq", None, None))
+        out = L.decode_attention(q, kc, vc, pos)
+        out = out.reshape(h.shape[0], 1, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum(
+            "btk,kd->btd", out, lp["self_attn"]["wo"].astype(h.dtype)
+        )
+        hn = _ln(h, lp["ln2"], cfg.norm_eps)
+        h = h + _cross_attn(cfg, lp["cross_attn"], hn, xk, xv)
+        hn = _ln(h, lp["ln3"], cfg.norm_eps)
+        h = h + _gelu_mlp(lp["mlp"], hn)
+        return h, (kc, vc)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (dec["layers"], state["k"], state["v"], state["xk"], state["xv"])
+    )
+    h = _ln(h, dec["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(h, dec["embed"], transpose=True)[:, 0]
+    new_state = dict(state, k=new_k, v=new_v, pos=pos + 1)
+    return new_state, logits
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Encode frames, precompute cross-attention K/V, prime the decoder with
+    the prompt tokens (teacher-forced pass that fills the self-attn cache)."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    dec = params["decoder"]
+    h = L.embed_tokens(dec["embed"], tokens, cfg.cdtype())
+    h = h + sinusoid_positions(t, cfg.d_model).astype(h.dtype)
+    positions = jnp.arange(t)
+
+    def body(carry, lp):
+        h = carry
+        hn = _ln(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["self_attn"], hn, positions)
+        out = L.dense_attention(q, k, v, causal=True)
+        out = out.reshape(b, t, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum(
+            "btk,kd->btd", out, lp["self_attn"]["wo"].astype(h.dtype)
+        )
+        hn = _ln(h, lp["ln2"], cfg.norm_eps)
+        ek, ev = _enc_kv(cfg, lp["cross_attn"], enc_out)
+        h = h + _cross_attn(cfg, lp["cross_attn"], hn, ek, ev)
+        hn = _ln(h, lp["ln3"], cfg.norm_eps)
+        h = h + _gelu_mlp(lp["mlp"], hn)
+        return h, (k, v, ek, ev)
+
+    body = L.remat_wrap(cfg, body)
+    h, (ks, vs, xks, xvs) = jax.lax.scan(body, h, dec["layers"])
+    h = _ln(h, dec["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(h[:, -1:], dec["embed"], transpose=True)[:, 0]
+
+    state = init_decode_state(cfg, b, max_seq)
+    state["k"] = jax.lax.dynamic_update_slice_in_dim(
+        state["k"], ks.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["v"] = jax.lax.dynamic_update_slice_in_dim(
+        state["v"], vs.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["xk"] = xks.astype(cfg.cdtype())
+    state["xv"] = xvs.astype(cfg.cdtype())
+    state["pos"] = jnp.asarray(t, jnp.int32)
+    return state, logits

@@ -1,0 +1,249 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The backbone is organized as super-blocks: ``hybrid_attn_every`` Mamba-2
+layers followed by one application of a single weight-shared attention+MLP
+block (arXiv:2411.15242). We scan over super-blocks (outer) and the Mamba
+layers inside each (inner), so the shared block's KV caches are allocated
+once per *application* rather than per layer.
+
+Simplifications vs the released Zamba2 (noted in DESIGN.md): the shared
+block consumes the pre-normed hidden state directly (no concat-with-original-
+embedding projector, no per-application LoRA deltas).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import dense
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+
+def _super(cfg: ModelConfig) -> tuple[int, int]:
+    every = cfg.hybrid_attn_every
+    assert cfg.n_layers % every == 0, (cfg.n_layers, every)
+    return cfg.n_layers // every, every
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    n_super, every = _super(cfg)
+    d = cfg.d_model
+    # Mamba defs stacked (n_super, every, ...): prepend the super dim.
+    inner = mamba2.block_param_defs(cfg, stacked=every)
+
+    def restack(pd: ParamDef) -> ParamDef:
+        return ParamDef(
+            (n_super,) + pd.shape,
+            ("stack",) + pd.logical,
+            init=pd.init,
+            scale=pd.scale,
+        )
+
+    mamba_defs = jax.tree.map(restack, inner, is_leaf=lambda x: isinstance(x, ParamDef))
+    return {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), init="embed"),
+        "mamba": mamba_defs,
+        "shared": {
+            "ln1": ParamDef((d,), (None,), init="ones"),
+            "attn": L.attn_param_defs(cfg),
+            "ln2": ParamDef((d,), (None,), init="ones"),
+            "mlp": L.mlp_param_defs(cfg),
+        },
+        "ln_f": ParamDef((d,), (None,), init="ones"),
+        "lm_head": ParamDef((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+def _shared_block(cfg: ModelConfig, sp: dict, h: jax.Array, positions) -> jax.Array:
+    hn = L.rmsnorm(h, sp["ln1"], cfg.norm_eps)
+    h = h + L.attn_block(cfg, sp["attn"], hn, positions)
+    hn = L.rmsnorm(h, sp["ln2"], cfg.norm_eps)
+    h = h + L.mlp_block(cfg, sp["mlp"], hn)
+    return h
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    positions = jnp.arange(tokens.shape[1])
+    shared = params["shared"]
+
+    def super_body(carry, slp):
+        h = carry
+
+        def inner(h2, lp):
+            hn = L.rmsnorm(h2, lp["ln"], cfg.norm_eps)
+            return h2 + mamba2.mamba_block(cfg, lp, hn), None
+
+        h, _ = jax.lax.scan(inner, h, slp)
+        h = _shared_block(cfg, shared, h, positions)
+        return constrain(h, ("act_batch", "act_seq", "act_embed")), None
+
+    super_body = L.remat_wrap(cfg, super_body)
+    h, _ = jax.lax.scan(super_body, h, params["mamba"])
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    return L.lm_logits(h, params["lm_head"], transpose=False)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    n_super, every = _super(cfg)
+    d_inner, n_heads, n_state, conv_ch, _ = mamba2._dims(cfg)
+    return {
+        "conv": jnp.zeros(
+            (n_super, every, batch, cfg.ssm_conv_width - 1, conv_ch), cfg.cdtype()
+        ),
+        "ssm": jnp.zeros(
+            (n_super, every, batch, n_heads, n_state, cfg.ssm_head_dim), jnp.float32
+        ),
+        "k": jnp.zeros(
+            (n_super, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cfg.cdtype()
+        ),
+        "v": jnp.zeros(
+            (n_super, batch, max_seq, cfg.n_kv_heads, cfg.d_head), cfg.cdtype()
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_state_logical() -> dict:
+    return {
+        "conv": ("stack", "layers", "act_batch", None, "wout"),
+        "ssm": ("stack", "layers", "act_batch", "act_heads", None, None),
+        "k": ("stack", "act_batch", "act_kv_seq", None, None),
+        "v": ("stack", "act_batch", "act_kv_seq", None, None),
+        "pos": (),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict, tokens: jax.Array):
+    pos = state["pos"]
+    h = L.embed_tokens(params["embed"], tokens[:, None], cfg.cdtype())
+    shared = params["shared"]
+
+    def super_body(carry, xs):
+        h = carry
+        slp, conv_s, ssm_s, kc, vc = xs
+
+        def inner(h2, xs2):
+            lp, conv, ssm = xs2
+            hn = L.rmsnorm(h2, lp["ln"], cfg.norm_eps)
+            out, conv, ssm = mamba2.block_decode(cfg, lp, hn, conv, ssm)
+            return h2 + out, (conv, ssm)
+
+        h, (conv_s, ssm_s) = jax.lax.scan(inner, h, (slp, conv_s, ssm_s))
+
+        # Shared attention application with its per-application KV cache.
+        hn = L.rmsnorm(h, shared["ln1"], cfg.norm_eps)
+        q, kk, vv = dense._attn_qkv_1tok(cfg, {"attn": shared["attn"]}, hn, pos)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv, pos, axis=1)
+        kc = constrain(kc, ("act_batch", "act_kv_seq", None, None))
+        vc = constrain(vc, ("act_batch", "act_kv_seq", None, None))
+        out = L.decode_attention(q, kc, vc, pos)
+        out = out.reshape(h.shape[0], 1, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, shared["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, shared["ln2"], cfg.norm_eps)
+        h = h + L.mlp_block(cfg, shared["mlp"], hn)
+        return h, (conv_s, ssm_s, kc, vc)
+
+    h, (new_conv, new_ssm, new_k, new_v) = jax.lax.scan(
+        super_body,
+        h,
+        (params["mamba"], state["conv"], state["ssm"], state["k"], state["v"]),
+    )
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(h, params["lm_head"], transpose=False)[:, 0]
+    return {
+        "conv": new_conv,
+        "ssm": new_ssm,
+        "k": new_k,
+        "v": new_v,
+        "pos": pos + 1,
+    }, logits
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Prompt pass building both SSM states and shared-attention KV caches."""
+    tokens = batch["tokens"]
+    bsz, t = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    positions = jnp.arange(t)
+    shared = params["shared"]
+    d_inner, n_heads, n_state, conv_ch, _ = mamba2._dims(cfg)
+
+    def super_body(carry, slp):
+        h = carry
+
+        def inner(h2, lp):
+            hn = L.rmsnorm(h2, lp["ln"], cfg.norm_eps)
+            dt_ = hn.dtype
+            zxbcdt = jnp.einsum("btd,dk->btk", hn, lp["in_proj"].astype(dt_))
+            xbc = zxbcdt[..., d_inner : d_inner + conv_ch]
+            conv_state = xbc[:, -(cfg.ssm_conv_width - 1) :]
+            xbc_act = jax.nn.silu(
+                mamba2.causal_conv1d(
+                    xbc, lp["conv_w"].astype(dt_), lp["conv_b"].astype(dt_)
+                )
+            )
+            x_in = xbc_act[..., :d_inner].reshape(
+                bsz, t, n_heads, cfg.ssm_head_dim
+            )
+            b_in = xbc_act[..., d_inner : d_inner + n_state]
+            c_in = xbc_act[..., d_inner + n_state :]
+            dtv = jax.nn.softplus(
+                zxbcdt[..., d_inner + conv_ch :].astype(jnp.float32)
+                + lp["dt_bias"].astype(jnp.float32)
+            )
+            a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+            _, fin = mamba2.ssd_chunked(x_in, dtv, b_in, c_in, a, cfg.ssm_chunk)
+            out = mamba2.mamba_block(cfg, lp, hn)
+            return h2 + out, (conv_state, fin)
+
+        h, (convs, ssms) = jax.lax.scan(inner, h, slp)
+
+        hn = L.rmsnorm(h, shared["ln1"], cfg.norm_eps)
+        q, kk, vv = L.attn_qkv(cfg, shared["attn"], hn, positions)
+        if t <= cfg.attn_chunk:
+            out = L.dense_attention(q, kk, vv, causal=True)
+        else:
+            out = L.chunked_attention(q, kk, vv, causal=True, chunk=cfg.attn_chunk)
+        out = out.reshape(bsz, t, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, shared["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, shared["ln2"], cfg.norm_eps)
+        h = h + L.mlp_block(cfg, shared["mlp"], hn)
+        return h, (convs, ssms, kk, vv)
+
+    super_body = L.remat_wrap(cfg, super_body)
+    h, (convs, ssms, ks, vs) = jax.lax.scan(super_body, h, params["mamba"])
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(h[:, -1:], params["lm_head"], transpose=False)[:, 0]
+
+    state = init_decode_state(cfg, bsz, max_seq)
+    state["conv"] = convs.astype(cfg.cdtype())
+    state["ssm"] = ssms
+    state["k"] = jax.lax.dynamic_update_slice_in_dim(
+        state["k"], ks.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["v"] = jax.lax.dynamic_update_slice_in_dim(
+        state["v"], vs.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["pos"] = jnp.asarray(t, jnp.int32)
+    return state, logits

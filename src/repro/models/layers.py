@@ -1,0 +1,367 @@
+"""Shared transformer building blocks (norms, RoPE, attention, MLP).
+
+All functions are pure; parameters arrive as nested dicts built from
+``ParamDef`` trees. Activation sharding is requested through logical-axis
+``constrain`` calls, so the same code runs single-device (no-op) and on the
+production mesh (GSPMD collectives).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+# ---------------------------------------------------------------------------
+# Norms, embeddings, losses
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    h = table.astype(compute_dtype)[tokens]
+    return constrain(h, ("act_batch", "act_seq", "act_embed"))
+
+
+def lm_logits(h: jax.Array, table_or_head: jax.Array, *, transpose: bool) -> jax.Array:
+    """Final projection to vocab. fp32 logits for a stable softmax."""
+    w = table_or_head.astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    if transpose:  # tied embedding table (V, D)
+        logits = jnp.einsum("btd,vd->btv", hf, w)
+    else:  # separate head (D, V)
+        logits = jnp.einsum("btd,dv->btv", hf, w)
+    return constrain(logits, ("act_batch", "act_seq", "act_heads"))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy. logits (B, T, V) fp32, labels (B, T)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )  # (d_head/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, D); positions: (B, T) or (T,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — scan-based flash (train/prefill) and cached decode
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """IO-aware attention as a lax.scan over KV chunks (online softmax).
+
+    Pure-JAX analogue of the Pallas flash kernel: peak memory is
+    O(B*H*T*chunk) instead of O(B*H*T*S). Differentiable; the body is
+    rematerialized so the backward pass stores only the per-chunk carries.
+
+    q: (B, T, H, D); k, v: (B, S, Hk, D) with H % Hk == 0. Query positions
+    are aligned to the *end* of the key range (self-attention when T == S).
+    """
+    b, t, h, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = d**-0.5
+    pad = (-s) % chunk
+    if pad:  # pad keys/values; padded positions are masked out below
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    kc = k.reshape(b, nc, chunk, hk, d)
+    vc = v.reshape(b, nc, chunk, hk, d)
+    q_pos = jnp.arange(t) + (s - t)  # (T,) aligned to the *unpadded* end
+
+    qg = qf.reshape(b, t, hk, g, d)  # grouped: no K/V head replication
+
+    def body(carry, inp):
+        m, l, acc = carry  # m, l: (B, Hk, G, T); acc: (B, Hk, G, T, D)
+        ci, k_i, v_i = inp  # (B, C, Hk, D) blocks
+        sc = jnp.einsum(
+            "btkgd,bckd->bkgtc", qg, k_i, preferred_element_type=jnp.float32
+        )  # (B, Hk, G, T, C)
+        k_pos = ci * chunk + jnp.arange(chunk)  # (C,)
+        mask = jnp.broadcast_to(k_pos[None, :] < s, (t, chunk))  # drop padding
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        # Additive 2D bias instead of two 5D selects: exp(NEG_INF - m) == 0
+        # zeroes masked lanes for free (the 5D where/select_n pair was ~14%
+        # of the train-cell HBM traffic, §Perf cell A iteration 5).
+        bias = jnp.where(mask, 0.0, NEG_INF)  # (T, C)
+        sc = sc + bias[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        # Fully-masked rows keep m == NEG_INF; clamp the subtrahend so
+        # exp(NEG_INF - clamp) underflows to 0 instead of exp(0) == 1.
+        m_use = jnp.maximum(m_new, 0.1 * NEG_INF)
+        p = jnp.exp(sc - m_use[..., None])
+        alpha = jnp.exp(jnp.minimum(m - m_new, 0.0))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgtc,bckd->bkgtd",
+            p.astype(v_i.dtype),
+            v_i,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    body = jax.checkpoint(body)
+
+    m0 = jnp.full((b, hk, g, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, t), jnp.float32)
+    acc0 = jnp.zeros((b, hk, g, t, d), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)  # (nc, B, C, Hk, D)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(nc), kc_t, vc_t)
+    )
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / safe_l[..., None]  # (B, Hk, G, T, D)
+    out = jnp.moveaxis(out.reshape(b, h, t, d), 1, 2)  # (B, T, H, D)
+    return out.astype(q.dtype)
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Plain O(T*S)-memory attention (small shapes / oracle)."""
+    b, t, h, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = d**-0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, t, hk, g, d)
+    sc = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(t)[:, None] + (s - t)
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), dtype=bool)
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hk, D); pos: () current index (the new
+    token's position). The cache's seq axis may be sharded on the ``model``
+    mesh axis (split-KV decode) — the softmax reductions below then lower to
+    the cross-shard collectives of flash-decoding.
+    """
+    b, _, h, d = q.shape
+    s, hk = k_cache.shape[1], k_cache.shape[2]
+    g = h // hk
+    scale = d**-0.5
+    qg = (q.astype(jnp.float32) * scale).astype(q.dtype).reshape(b, 1, hk, g, d)
+    # bf16 operands + f32 accumulation: never materialize an f32 cache copy.
+    sc = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    k_pos = jnp.arange(s)
+    mask = k_pos <= pos
+    if window is not None:
+        mask = mask & (k_pos > pos - window)
+    sc = jnp.where(mask[None, None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum(
+        "bkgts,bskd->btkgd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + RoPE + attention + output)
+# ---------------------------------------------------------------------------
+
+
+def attn_param_defs(cfg: ModelConfig, *, stacked: int | None = None) -> dict:
+    """QKV/O projection ParamDefs. ``stacked``: leading layer dim for scan."""
+    lead = (stacked,) if stacked else ()
+    lead_log = ("layers",) if stacked else ()
+    h, hk, dh, dm = cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    defs = {
+        "wq": ParamDef(lead + (dm, h * dh), lead_log + ("win", "wout")),
+        "wk": ParamDef(lead + (dm, hk * dh), lead_log + ("win", "wout")),
+        "wv": ParamDef(lead + (dm, hk * dh), lead_log + ("win", "wout")),
+        "wo": ParamDef(lead + (h * dh, dm), lead_log + ("win", "wout")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef(lead + (h * dh,), lead_log + ("wout",), init="zeros")
+        defs["bk"] = ParamDef(lead + (hk * dh,), lead_log + ("wout",), init="zeros")
+        defs["bv"] = ParamDef(lead + (hk * dh,), lead_log + ("wout",), init="zeros")
+    return defs
+
+
+def attn_qkv(
+    cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, t, _ = x.shape
+    dt = x.dtype
+    q = jnp.einsum("btd,dk->btk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dk->btk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dk->btk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, t, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", None, "act_heads", None))  # replicated seq
+    v = constrain(v, ("act_batch", None, "act_heads", None))
+    return q, k, v
+
+
+def attn_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Full self-attention block on (B, T, D) activations."""
+    b, t, _ = x.shape
+    q, k, v = attn_qkv(cfg, p, x, positions)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(
+            jnp.moveaxis(q, 2, 1),
+            jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1),
+            causal=causal,
+            window=cfg.sliding_window,
+        )
+        out = jnp.moveaxis(out, 1, 2)
+    elif t <= cfg.attn_chunk:
+        out = dense_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window, chunk=cfg.attn_chunk
+        )
+    out = constrain(out, ("act_batch", "act_seq", "act_heads", None))
+    out = out.reshape(b, t, cfg.n_heads * cfg.d_head)
+    out = jnp.einsum("btk,kd->btd", out, p["wo"].astype(x.dtype))
+    return constrain(out, ("act_batch", "act_seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_param_defs(cfg: ModelConfig, *, stacked: int | None = None) -> dict:
+    lead = (stacked,) if stacked else ()
+    lead_log = ("layers",) if stacked else ()
+    dm, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef(lead + (dm, ff), lead_log + ("win", "wout")),
+        "w_up": ParamDef(lead + (dm, ff), lead_log + ("win", "wout")),
+        "w_down": ParamDef(lead + (ff, dm), lead_log + ("wout", "win")),
+    }
+
+
+def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(dt))
+    up = jnp.einsum("btd,df->btf", x, p["w_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    out = jnp.einsum("btf,fd->btd", h, p["w_down"].astype(dt))
+    return constrain(out, ("act_batch", "act_seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+
+
+def remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"

@@ -1,0 +1,347 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) decoder.
+
+The sequence mixer is the chunked SSD algorithm (same math as the Pallas
+``ssd_scan`` kernel, vectorized in jnp for the GSPMD path): intra-chunk
+quadratic "attention form" + inter-chunk linear recurrence carried with an
+associative scan. Decode keeps O(1) state per layer (conv window + SSM
+state) — the ``long_500k`` cell runs at constant memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.d_inner
+    n_heads = cfg.ssm_heads
+    n_state = cfg.ssm_state
+    conv_ch = d_inner + 2 * n_state  # x plus B and C streams (1 group)
+    d_in_proj = 2 * d_inner + 2 * n_state + n_heads  # z, x, B, C, dt
+    return d_inner, n_heads, n_state, conv_ch, d_in_proj
+
+
+def block_param_defs(cfg: ModelConfig, *, stacked: int) -> dict:
+    n = stacked
+    d = cfg.d_model
+    d_inner, n_heads, n_state, conv_ch, d_in_proj = _dims(cfg)
+    return {
+        "ln": ParamDef((n, d), ("layers", None), init="ones"),
+        "in_proj": ParamDef((n, d, d_in_proj), ("layers", "win", "wout")),
+        "conv_w": ParamDef(
+            (n, cfg.ssm_conv_width, conv_ch), ("layers", None, "wout"), scale=0.3
+        ),
+        "conv_b": ParamDef((n, conv_ch), ("layers", "wout"), init="zeros"),
+        "a_log": ParamDef((n, n_heads), ("layers", None), init="zeros"),
+        "d_skip": ParamDef((n, n_heads), ("layers", None), init="ones"),
+        "dt_bias": ParamDef((n, n_heads), ("layers", None), init="zeros"),
+        "norm": ParamDef((n, d_inner), ("layers", None), init="ones"),
+        "out_proj": ParamDef((n, d_inner, d), ("layers", "wout", "win")),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), init="embed"),
+        "layers": block_param_defs(cfg, stacked=cfg.n_layers),
+        "ln_f": ParamDef((d,), (None,), init="ones"),
+        "lm_head": ParamDef((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (jnp, GSPMD-friendly)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, T, H, P)
+    dt: jax.Array,  # (B, T, H)  positive
+    b: jax.Array,  # (B, T, N)  shared across heads (1 group)
+    c: jax.Array,  # (B, T, N)
+    a: jax.Array,  # (H,)       negative
+    chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,T,H,P), final_state (B,H,N,P)). fp32 internally.
+
+    Sequences that do not divide the chunk length are padded with dt = 0
+    steps (decay 1, zero input weight) — mathematically inert.
+    """
+    bsz, t_orig, h, p = x.shape
+    n = b.shape[-1]
+    lc = min(chunk, t_orig)
+    pad = (-t_orig) % lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    t = t_orig + pad
+    nc = t // lc
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, lc, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, lc, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, lc, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, lc, n)
+
+    loga = dtf * a.astype(jnp.float32)  # (B, nc, L, H)
+    s = jnp.cumsum(loga, axis=2)  # inclusive within chunk
+    s_h = jnp.moveaxis(s, 3, 2)  # (B, nc, H, L)
+    s_tot = s_h[..., -1]  # (B, nc, H)
+
+    # ---- intra-chunk ("attention form") ---------------------------------
+    cb = jnp.einsum("bnik,bnjk->bnij", cf, bf)  # (B, nc, L, L)
+    expo = s_h[..., :, None] - s_h[..., None, :]  # (B, nc, H, L, L)
+    tri = jnp.tril(jnp.ones((lc, lc), bool))
+    expo = jnp.where(tri, expo, -jnp.inf)
+    m = cb[:, :, None] * jnp.exp(expo)  # (B, nc, H, L, L)
+    m = m * jnp.moveaxis(dtf, 3, 2)[..., None, :]  # * dt_j
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", m, xf)
+
+    # ---- chunk states -----------------------------------------------------
+    w = jnp.exp(s_tot[..., None] - s_h) * jnp.moveaxis(dtf, 3, 2)  # (B,nc,H,L)
+    states = jnp.einsum("bnjk,bnhj,bnjhp->bnhkp", bf, w, xf)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk linear recurrence (associative scan over chunks) ----
+    decay = jnp.exp(s_tot)  # (B, nc, H)
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, a2[..., None, None] * s1 + s2
+
+    dec_inc, st_inc = jax.lax.associative_scan(
+        combine, (decay, states), axis=1
+    )  # inclusive: state after chunk i
+    # exclusive "state before chunk i":
+    st_prev = jnp.concatenate(
+        [jnp.zeros_like(st_inc[:, :1]), st_inc[:, :-1]], axis=1
+    )
+    final_state = st_inc[:, -1]  # (B, H, N, P)
+
+    y_inter = jnp.einsum("bnik,bnhkp->bnihp", cf, st_prev) * jnp.exp(s)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, t, h, p)[:, :t_orig]
+    return y.astype(x.dtype), final_state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal 1D conv. x: (B, T, C); w: (W, C); b: (C,)."""
+    width = w.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xpad,
+        w[:, None, :],  # (W, 1, C) HIO with groups=C
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(cfg: ModelConfig, lp: dict, hn: jax.Array) -> jax.Array:
+    """One Mamba-2 block on *pre-normed* input hn (residual add is external)."""
+    bsz, t, _ = hn.shape
+    d_inner, n_heads, n_state, conv_ch, _ = _dims(cfg)
+    dt_ = hn.dtype
+
+    zxbcdt = jnp.einsum("btd,dk->btk", hn, lp["in_proj"].astype(dt_))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch :]  # (B, T, H)
+
+    xbc = causal_conv1d(xbc, lp["conv_w"].astype(dt_), lp["conv_b"].astype(dt_))
+    xbc = jax.nn.silu(xbc)
+    x_in = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner : d_inner + n_state]
+    c_in = xbc[..., d_inner + n_state :]
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+
+    x_heads = x_in.reshape(bsz, t, n_heads, cfg.ssm_head_dim)
+    x_heads = constrain(x_heads, ("act_batch", "act_seq", "act_heads", None))
+    if cfg.use_pallas:
+        from repro.kernels.ssd_scan.ops import ssd_scan
+
+        y, _ = ssd_scan(
+            jnp.moveaxis(x_heads, 2, 1),
+            jnp.moveaxis(dt, 2, 1),
+            jnp.repeat(b_in[:, None], n_heads, 1),
+            jnp.repeat(c_in[:, None], n_heads, 1),
+            a,
+            chunk=cfg.ssm_chunk,
+        )
+        y = jnp.moveaxis(y, 1, 2)
+    else:
+        y, _ = ssd_chunked(x_heads, dt, b_in, c_in, a, cfg.ssm_chunk)
+    y = y + lp["d_skip"].astype(y.dtype)[None, None, :, None] * x_heads
+    y = y.reshape(bsz, t, d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, lp["out_proj"].astype(dt_))
+    return constrain(out, ("act_batch", "act_seq", "act_embed"))
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+
+    def body(carry, lp):
+        hn = L.rmsnorm(carry, lp["ln"], cfg.norm_eps)
+        return carry + mamba_block(cfg, lp, hn), None
+
+    body = L.remat_wrap(cfg, body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    return L.lm_logits(h, params["lm_head"], transpose=False)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving — constant-size recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    d_inner, n_heads, n_state, conv_ch, _ = _dims(cfg)
+    del max_seq  # O(1) state — the whole point of the SSM cell
+    return {
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv_width - 1, conv_ch), cfg.cdtype()
+        ),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, n_heads, n_state, cfg.ssm_head_dim), jnp.float32
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_state_logical() -> dict:
+    return {
+        "conv": ("layers", "act_batch", None, "wout"),
+        "ssm": ("layers", "act_batch", "act_heads", None, None),
+        "pos": (),
+    }
+
+
+def block_decode(
+    cfg: ModelConfig, lp: dict, hn: jax.Array, conv_state, ssm_state
+):
+    """Single-token mamba block on pre-normed hn: (B, 1, D).
+    Returns (out, conv, ssm)."""
+    bsz = hn.shape[0]
+    d_inner, n_heads, n_state, conv_ch, _ = _dims(cfg)
+    dt_ = hn.dtype
+
+    zxbcdt = jnp.einsum("btd,dk->btk", hn, lp["in_proj"].astype(dt_))[:, 0]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch :]
+
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B, W, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window, lp["conv_w"].astype(dt_))
+    conv_out = jax.nn.silu(conv_out + lp["conv_b"].astype(dt_))
+    new_conv = window[:, 1:]
+
+    x_in = conv_out[..., :d_inner]
+    b_in = conv_out[..., d_inner : d_inner + n_state].astype(jnp.float32)
+    c_in = conv_out[..., d_inner + n_state :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32)
+    )  # (B, H)
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B, H)
+
+    x_heads = x_in.reshape(bsz, n_heads, cfg.ssm_head_dim).astype(jnp.float32)
+    new_ssm = da[..., None, None] * ssm_state + jnp.einsum(
+        "bn,bhp->bhnp", b_in, dt[..., None] * x_heads
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_in, new_ssm)
+    y = y + lp["d_skip"].astype(jnp.float32)[None, :, None] * x_heads
+    y = y.reshape(bsz, d_inner).astype(dt_)
+    y = L.rmsnorm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, lp["out_proj"].astype(dt_))
+    return out[:, None], new_conv, new_ssm
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict, tokens: jax.Array):
+    h = L.embed_tokens(params["embed"], tokens[:, None], cfg.cdtype())
+
+    def body(carry, xs):
+        h = carry
+        lp, conv, ssm = xs
+        hn = L.rmsnorm(h, lp["ln"], cfg.norm_eps)
+        out, conv, ssm = block_decode(cfg, lp, hn, conv, ssm)
+        return h + out, (conv, ssm)
+
+    h, (new_conv, new_ssm) = jax.lax.scan(
+        body, h, (params["layers"], state["conv"], state["ssm"])
+    )
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(h, params["lm_head"], transpose=False)[:, 0]
+    return {"conv": new_conv, "ssm": new_ssm, "pos": state["pos"] + 1}, logits
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Prompt pass that also produces the recurrent state for decoding."""
+    tokens = batch["tokens"]
+    bsz, t = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    d_inner, n_heads, n_state, conv_ch, _ = _dims(cfg)
+
+    def body(carry, lp):
+        h = carry
+        bszl, tl, _ = h.shape
+        dt_ = h.dtype
+        hn = L.rmsnorm(h, lp["ln"], cfg.norm_eps)
+        zxbcdt = jnp.einsum("btd,dk->btk", hn, lp["in_proj"].astype(dt_))
+        xbc = zxbcdt[..., d_inner : d_inner + conv_ch]
+        conv_tail = causal_conv1d(
+            xbc, lp["conv_w"].astype(dt_), lp["conv_b"].astype(dt_)
+        )
+        out = mamba_block(cfg, lp, hn)
+        conv_state = xbc[:, -(cfg.ssm_conv_width - 1) :]
+        # Recompute final ssm state via the chunked scan:
+        xbc_act = jax.nn.silu(conv_tail)
+        x_in = xbc_act[..., :d_inner].reshape(bszl, tl, n_heads, cfg.ssm_head_dim)
+        b_in = xbc_act[..., d_inner : d_inner + n_state]
+        c_in = xbc_act[..., d_inner + n_state :]
+        dt = jax.nn.softplus(
+            zxbcdt[..., d_inner + conv_ch :].astype(jnp.float32)
+            + lp["dt_bias"].astype(jnp.float32)
+        )
+        a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+        _, fin = ssd_chunked(x_in, dt, b_in, c_in, a, cfg.ssm_chunk)
+        return h + out, (conv_state, fin)
+
+    body = L.remat_wrap(cfg, body)
+    h, (convs, ssms) = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_logits(h[:, -1:], params["lm_head"], transpose=False)[:, 0]
+    state = {
+        "conv": convs.astype(cfg.cdtype()),
+        "ssm": ssms,
+        "pos": jnp.asarray(t, jnp.int32),
+    }
+    return state, logits

@@ -1,0 +1,416 @@
+"""Mixture-of-Experts decoder (qwen3-moe family): token-choice top-k routing
+with per-group capacity (GShard-style), expert-parallel sharding on the
+``model`` mesh axis, scatter/gather dispatch (differentiable).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, current_context
+from repro.models import dense
+from repro.models import layers as L
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+
+def moe_param_defs(cfg: ModelConfig, *, stacked: int) -> dict:
+    n, d, e, f = stacked, cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    return {
+        "router": ParamDef((n, d, e), ("layers", "win", None)),
+        "w_gate": ParamDef((n, e, d, f), ("layers", "experts", "win", None)),
+        "w_up": ParamDef((n, e, d, f), ("layers", "experts", "win", None)),
+        "w_down": ParamDef((n, e, f, d), ("layers", "experts", None, "win")),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = dense.param_defs(cfg)
+    defs["layers"]["mlp"] = moe_param_defs(cfg, stacked=cfg.n_layers)
+    return defs
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    cap = int(
+        cfg.capacity_factor
+        * tokens_per_group
+        * cfg.experts_per_token
+        / cfg.num_experts
+    )
+    return max(8, (cap + 7) // 8 * 8)  # pad to a lane-friendly multiple
+
+
+def _route(cfg: ModelConfig, router: jax.Array, x: jax.Array):
+    """Top-k routing (replicable, collective-free).
+
+    Returns (gates (B,T,K), eid (B,T*K), pos (B,T*K), keep, aux)."""
+    b, t, _ = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = expert_capacity(cfg, t)
+    router_logits = jnp.einsum(
+        "btd,de->bte", x.astype(jnp.float32), router.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (B, T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B, T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * P_e.
+    me = jnp.mean(probs, axis=(0, 1))
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    fe = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = e * jnp.sum(me * fe)
+
+    # Position-in-expert: rank of each (token, k) among assignments to the
+    # same expert within the group, in (t, k) raster order. Sort-based: a
+    # stable argsort groups equal expert-ids while preserving raster order,
+    # so rank = index - start-of-run. O(B*T*K) memory — the one-hot cumsum
+    # formulation is O(B*T*K*E), 128x more HBM traffic at E=128 (it was the
+    # single largest traffic term in the 235B train cell, §Perf cell A).
+    eid = expert_idx.reshape(b, t * k)
+    pos = _pos_in_expert(eid)
+    keep = (pos < c).astype(jnp.float32)
+    return gate_vals, eid, jnp.minimum(pos, c - 1), keep, aux
+
+
+def _pos_in_expert(eid: jax.Array) -> jax.Array:
+    """Rank of each assignment within its expert, raster order. eid: (B, TK)."""
+    tk = eid.shape[1]
+
+    def one(e_row):
+        order = jnp.argsort(e_row, stable=True)
+        sorted_eid = e_row[order]
+        idx = jnp.arange(tk, dtype=jnp.int32)
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_eid[1:] != sorted_eid[:-1]]
+        )
+        group_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(is_start, idx, 0)
+        )
+        pos_sorted = idx - group_start
+        return jnp.zeros((tk,), jnp.int32).at[order].set(pos_sorted)
+
+    return jax.vmap(one)(eid)
+
+
+def _dispatch_ffn_combine(
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, T, D)
+    wg: jax.Array,  # (E_shard, D, F)
+    wu: jax.Array,
+    wd: jax.Array,  # (E_shard, F, D)
+    gates: jax.Array,
+    eid: jax.Array,
+    pos: jax.Array,
+    keep: jax.Array,
+    e_offset,
+) -> jax.Array:
+    """Scatter -> per-expert FFN -> gather, for the experts in [e_offset,
+    e_offset + E_shard). Assignments outside the range are masked. Fully
+    local (no collectives) — the EP wrapper psums partial outputs."""
+    b, t, d = x.shape
+    e_shard = wg.shape[0]
+    k = cfg.experts_per_token
+    c = expert_capacity(cfg, t)
+    dt = x.dtype
+
+    local = (eid >= e_offset) & (eid < e_offset + e_shard)
+    eid_l = jnp.clip(eid - e_offset, 0, e_shard - 1)
+    mask = keep * local.astype(jnp.float32)
+
+    def dispatch_one(xb, eb, pb, mb):
+        # Inverse-map dispatch: scatter only the tiny int32 slot map
+        # (E_s, C+1), then build the expert buffer with a GATHER. Forward
+        # traffic is one (E_s, C, D) write instead of a (T*K, D) + buffer
+        # read-modify-write scatter-add, and the VJP is an (E_s, C, D)-sized
+        # scatter instead of (T*K, D) (§Perf cell A iteration 6).
+        sentinel = jnp.int32(t * k)
+        pb_safe = jnp.where(mb > 0, pb, c)  # invalid -> dump column
+        slot = jnp.full((e_shard, c + 1), sentinel, jnp.int32)
+        slot = slot.at[eb, pb_safe].min(jnp.arange(t * k, dtype=jnp.int32))
+        slot = slot[:, :c]
+        valid = slot != sentinel
+        tok = jnp.clip(slot // k, 0, t - 1)
+        return xb[tok] * valid[..., None].astype(dt)  # (E_s, C, D)
+
+    buf = jax.vmap(dispatch_one)(x, eid_l, pos, mask)  # (B, E_s, C, D)
+
+    hidden = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", buf, wg.astype(dt))
+    ) * jnp.einsum("becd,edf->becf", buf, wu.astype(dt))
+    out_buf = jnp.einsum("becf,efd->becd", hidden, wd.astype(dt))
+
+    def combine_one(ob, eb, pb, mb, gb):
+        gathered = ob[eb, pb]  # (T*K, D)
+        return (gathered * (mb * gb)[:, None].astype(dt)).reshape(t, k, d).sum(
+            axis=1
+        )
+
+    gates_flat = gates.reshape(b, t * k)
+    return jax.vmap(combine_one)(out_buf, eid_l, pos, mask, gates_flat)
+
+
+def moe_block(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Top-k MoE FFN. x: (B, T, D). Group = one batch row.
+
+    Two execution paths:
+      * expert-parallel ``shard_map`` over the ``model`` mesh axis (active
+        whenever a sharding context with a dividing model axis is installed):
+        routing is computed redundantly per shard (collective-free), each
+        shard dispatches ONLY to its local experts, and partial outputs are
+        psum'd — wire traffic per layer is one bf16 (B,T,D) gather + one
+        psum instead of GSPMD replicating the (B,T*K,D) scatter (see
+        EXPERIMENTS.md §Perf cell A).
+      * plain single-device path (smoke tests / no mesh).
+    Returns (output, aux_loss); overflow tokens beyond the expert capacity
+    are dropped (standard capacity-factor routing).
+    """
+    ctx = current_context()
+    use_ep = (
+        ctx is not None
+        and ctx.mesh is not None
+        and "model" in ctx.mesh.shape
+        and cfg.num_experts % ctx.mesh.shape["model"] == 0
+        and ctx.mesh.shape["model"] > 1
+    )
+    if not use_ep:
+        gates, eid, pos, keep, aux = _route(cfg, p["router"], x)
+        out = _dispatch_ffn_combine(
+            cfg, x, p["w_gate"], p["w_up"], p["w_down"], gates, eid, pos, keep, 0
+        )
+        return constrain(out, ("act_batch", "act_seq", "act_embed")), aux
+
+    mesh = ctx.mesh
+    e_shard = cfg.num_experts // mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dt = x.dtype
+    # Sequence-sharded boundary only when T divides the model axis (train /
+    # prefill). Decode (T=1) enters replicated over model — no backward
+    # exists there, so the invariant-cotangent psum issue does not apply.
+    seq_sharded = x.shape[1] % mesh.shape["model"] == 0
+
+    import functools
+
+    # Fully-manual shard_map: every collective below is explicit —
+    #   boundary: gather x's seq shards over `model` (bf16 B*T*D once, NOT
+    #             the K-fold-expanded dispatch tensor GSPMD moved before);
+    #   inside:   FSDP all-gather of the local experts' weights over the
+    #             data axes, cast to bf16 *before* the wire;
+    #   combine:  one bf16 psum of partial outputs over `model`.
+    # NOTE: bf16 all-reduces whose reducers carry Shardy annotations abort
+    # XLA-CPU's AllReducePromotion pass; compile-only entry points disable it
+    # (--xla_disable_hlo_passes=all-reduce-promotion). TPU is bf16-native.
+    x_spec = P(dp_axes, "model") if seq_sharded else P(dp_axes)
+    # Weight boundary follows the active rule set: FSDP-stored layouts
+    # (train) enter D-sharded and are gathered in bf16 inside; TP-resident
+    # layouts (serve_tp) enter whole — no per-step weight collectives.
+    w_dp = tuple(ctx.rules.get("win", ()))
+    w_dp = tuple(a for a in w_dp if a in mesh.shape)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            # x enters with its storage sharding (batch on dp, seq on model):
+            # the gather happens *inside* via lax.all_gather, so its output
+            # is "varying" and the transpose is a cheap (B,T,D)/16
+            # reduce-scatter instead of a psum of the (B,T*K,D) cotangent
+            # that the invariant-input formulation produced.
+            x_spec,
+            P(),  # router replicated (tiny)
+            P("model", w_dp if w_dp else None),  # experts on model
+            P("model", w_dp if w_dp else None),
+            P("model", None, w_dp if w_dp else None),  # w_down: (E, F, D)
+        ),
+        out_specs=(x_spec, P()),
+    )
+    def _ep(xb, router, wg, wu, wd):
+        if seq_sharded:
+            xg = jax.lax.all_gather(xb.astype(dt), "model", axis=1, tiled=True)
+        else:
+            xg = xb.astype(dt)
+        wg = wg.astype(dt)
+        wu = wu.astype(dt)
+        wd = wd.astype(dt)
+        for ax in w_dp:
+            wg = jax.lax.all_gather(wg, ax, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, ax, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, ax, axis=2, tiled=True)
+        gates, eid, pos, keep, aux = _route(cfg, router, xg)
+        e_off = jax.lax.axis_index("model") * e_shard
+        partial = _dispatch_ffn_combine(
+            cfg, xg, wg, wu, wd, gates, eid, pos, keep, e_off
+        )
+        # Combine: reduce-scatter back to the seq-sharded layout (wire cost
+        # (P-1)/P of one (B,T,D) vs 2x for a full psum); full psum when the
+        # sequence is too short to shard (decode).
+        if seq_sharded:
+            out = jax.lax.psum_scatter(
+                partial, "model", scatter_dimension=1, tiled=True
+            )
+        else:
+            out = jax.lax.psum(partial, "model")
+        aux = jax.lax.pmean(aux, "model")
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes)
+        return out, aux
+
+    out, aux = _ep(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+    return out, aux
+
+
+def _layer_fwd(cfg: ModelConfig, h, lp, positions):
+    hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    h = h + L.attn_block(cfg, lp["attn"], hn, positions)
+    hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+    out, aux = moe_block(cfg, lp["mlp"], hn)
+    h = h + out
+    return constrain(h, ("act_batch", "act_seq", "act_embed")), aux
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits, _ = forward_with_aux(cfg, params, batch)
+    return logits
+
+
+def forward_with_aux(cfg: ModelConfig, params: dict, batch: dict):
+    tokens = batch["tokens"]
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lp):
+        h, aux_sum = carry
+        h, aux = _layer_fwd(cfg, h, lp, positions)
+        return (h, aux_sum + aux), None
+
+    body = L.remat_wrap(cfg, body)
+    (h, aux_sum), _ = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = L.lm_logits(h, head, transpose="lm_head" not in params)
+    return logits, aux_sum / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits, aux = forward_with_aux(cfg, params, batch)
+    return L.softmax_xent(logits, batch["labels"]) + cfg.router_aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving — dense attention caches + per-token MoE FFN
+# ---------------------------------------------------------------------------
+
+init_decode_state = dense.init_decode_state
+decode_state_logical = dense.decode_state_logical
+
+
+def _moe_block_1tok(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Decode-time MoE on (B, 1, D) tokens.
+
+    Under a mesh context this reuses the expert-parallel ``moe_block`` with
+    t=1 groups: capacity per group is >= K, so routing is drop-free and
+    exact, experts stay resident on their shards, and the only collective is
+    the (B,1,D) combine — the per-token (B,K,D,F) weight gather of the naive
+    formulation was the decode-cell collective bottleneck (§Perf extras).
+    """
+    from repro.distributed.sharding import current_context
+
+    ctx = current_context()
+    if ctx is not None and ctx.mesh is not None and "model" in ctx.mesh.shape:
+        out, _ = moe_block(cfg, p, x)
+        return out
+
+    b, _, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    dt = x.dtype
+    router_logits = jnp.einsum(
+        "btd,de->bte", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )[:, 0]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B, K)
+    gate_vals = (gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)).astype(dt)
+
+    wg = p["w_gate"].astype(dt)[expert_idx]  # (B, K, D, F)
+    wu = p["w_up"].astype(dt)[expert_idx]
+    wd = p["w_down"].astype(dt)[expert_idx]  # (B, K, F, D)
+    xb = x[:, 0]  # (B, D)
+    hidden = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", xb, wg)) * jnp.einsum(
+        "bd,bkdf->bkf", xb, wu
+    )
+    out = jnp.einsum("bkf,bkfd->bkd", hidden, wd)
+    out = jnp.sum(out * gate_vals[..., None], axis=1)
+    return out[:, None]  # (B, 1, D)
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict, tokens: jax.Array):
+    pos = state["pos"]
+    h = L.embed_tokens(params["embed"], tokens[:, None], cfg.cdtype())
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc = xs
+        hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, kk, vv = dense._attn_qkv_1tok(cfg, lp, hn, pos)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv, pos, axis=1)
+        kc = constrain(kc, ("act_batch", "act_kv_seq", None, None))
+        vc = constrain(vc, ("act_batch", "act_kv_seq", None, None))
+        out = L.decode_attention(q, kc, vc, pos, window=None)
+        out = out.reshape(h.shape[0], 1, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, lp["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + _moe_block_1tok(cfg, lp["mlp"], hn)
+        return h, (kc, vc)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (params["layers"], state["k"], state["v"])
+    )
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = L.lm_logits(h, head, transpose="lm_head" not in params)[:, 0]
+    return {"k": new_k, "v": new_v, "pos": pos + 1}, logits
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Prompt processing with MoE FFNs; returns (state, last logits)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens, cfg.cdtype())
+    positions = jnp.arange(t)
+
+    def body(carry, lp):
+        h = carry
+        hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, kk, vv = L.attn_qkv(cfg, lp["attn"], hn, positions)
+        if t <= cfg.attn_chunk:
+            out = L.dense_attention(q, kk, vv, causal=True)
+        else:
+            out = L.chunked_attention(q, kk, vv, causal=True, chunk=cfg.attn_chunk)
+        out = out.reshape(b, t, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, lp["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        mo, _ = moe_block(cfg, lp["mlp"], hn)
+        h = h + mo
+        return h, (kk, vv)
+
+    body = L.remat_wrap(cfg, body)
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = L.lm_logits(h[:, -1:], head, transpose="lm_head" not in params)[:, 0]
+    state = init_decode_state(cfg, b, max_seq)
+    state["k"] = jax.lax.dynamic_update_slice_in_dim(
+        state["k"], ks.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["v"] = jax.lax.dynamic_update_slice_in_dim(
+        state["v"], vs.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["pos"] = jnp.asarray(t, jnp.int32)
+    return state, logits

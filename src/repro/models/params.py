@@ -1,0 +1,84 @@
+"""Parameter-definition helper: one spec tree drives init / abstract / sharding.
+
+Each leaf is a :class:`ParamDef` (shape + logical axis names + init rule).
+From one ``defs`` tree we derive:
+  * ``init_tree``      — materialized parameters (real RNG init),
+  * ``abstract_tree``  — ShapeDtypeStructs (dry-run: no allocation),
+  * ``logical_tree``   — logical-axes annotations for the sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None  # stddev override (default: 1/sqrt(fan_in))
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # Convention: last dim is the output dim; everything else is fan-in
+    # (stacked-layer leading dims excluded by the caller via scale).
+    if len(shape) <= 1:
+        return shape[0] if shape else 1
+    return int(np.prod(shape[:-1]))
+
+
+def init_param(key: jax.Array, d: ParamDef, dtype: Any) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 0.02
+        return std * jax.random.normal(key, d.shape, dtype)
+    if d.init == "normal":
+        # Stacked layer dims (logical name "layers"/"stack") don't count as fan-in.
+        fan_dims = [
+            s
+            for s, l in zip(d.shape[:-1], d.logical[:-1])
+            if l not in ("layers", "stack", "experts")
+        ]
+        fan = int(np.prod(fan_dims)) if fan_dims else max(1, _fan_in(d.shape))
+        std = d.scale if d.scale is not None else fan**-0.5
+        return std * jax.random.normal(key, d.shape, dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def init_tree(key: jax.Array, defs, dtype: Any = jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    out = []
+    for i, d in enumerate(leaves):
+        out.append(init_param(jax.random.fold_in(key, i), d, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(defs, dtype: Any = jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def
+    )
+
+
+def logical_tree(defs):
+    return jax.tree.map(lambda d: d.logical, defs, is_leaf=_is_def)
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

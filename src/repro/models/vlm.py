@@ -1,0 +1,114 @@
+"""InternVL2-style VLM: stub ViT patch embeddings + InternLM2-style decoder.
+
+Per the brief the vision frontend is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, num_patches, VIT_DIM). A small MLP projector
+(the "mlp1" of InternVL) maps them into the LM embedding space; they are
+prepended to the text tokens and the standard dense decoder runs over the
+combined sequence. Loss is computed on text positions only.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import dense
+from repro.models import layers as L
+from repro.models.api import ModelConfig
+from repro.models.params import ParamDef
+
+VIT_DIM = 1024  # InternViT-300M output width (stubbed)
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = dense.param_defs(cfg)
+    d = cfg.d_model
+    defs["projector"] = {
+        "ln": ParamDef((VIT_DIM,), (None,), init="ones"),
+        "w1": ParamDef((VIT_DIM, d), ("win", "wout")),
+        "b1": ParamDef((d,), (None,), init="zeros"),
+        "w2": ParamDef((d, d), ("win", "wout")),
+        "b2": ParamDef((d,), (None,), init="zeros"),
+    }
+    return defs
+
+
+def project_patches(cfg: ModelConfig, p: dict, patches: jax.Array) -> jax.Array:
+    dt = cfg.cdtype()
+    x = patches.astype(dt)
+    x = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    x = jnp.einsum("bnd,dk->bnk", x, p["w1"].astype(dt)) + p["b1"].astype(dt)
+    x = jax.nn.gelu(x)
+    x = jnp.einsum("bnd,dk->bnk", x, p["w2"].astype(dt)) + p["b2"].astype(dt)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def _combined_hidden(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    patches = project_patches(cfg, params["projector"], batch["patches"])
+    text = L.embed_tokens(params["embed"], batch["tokens"], cfg.cdtype())
+    h = jnp.concatenate([patches, text], axis=1)
+    return constrain(h, ("act_batch", "act_seq", "act_embed"))
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Returns logits over *text* positions: (B, T_text, V)."""
+    h = _combined_hidden(cfg, params, batch)
+    positions = jnp.arange(h.shape[1])
+    h = dense.backbone(cfg, params, h, positions)
+    h_text = h[:, batch["patches"].shape[1] :]
+    head = params.get("lm_head", params["embed"])
+    return L.lm_logits(h_text, head, transpose="lm_head" not in params)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving — combined-sequence KV cache, then standard dense decode
+# ---------------------------------------------------------------------------
+
+init_decode_state = dense.init_decode_state
+decode_state_logical = dense.decode_state_logical
+decode_step = dense.decode_step  # params superset is scanned by subtree
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_seq: int):
+    """Prefill over [patches; prompt tokens]; decode continues text-only."""
+    h = _combined_hidden(cfg, params, batch)
+    b, t, _ = h.shape
+    positions = jnp.arange(t)
+
+    def body(carry, lp):
+        h = carry
+        hn = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], hn, positions)
+        if t <= cfg.attn_chunk:
+            out = L.dense_attention(q, k, v, causal=True)
+        else:
+            out = L.chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        out = out.reshape(b, t, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("btk,kd->btd", out, lp["attn"]["wo"].astype(h.dtype))
+        hn = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.mlp_block(cfg, lp["mlp"], hn)
+        return h, (k, v)
+
+    body = L.remat_wrap(cfg, body)
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = L.lm_logits(h[:, -1:], head, transpose="lm_head" not in params)[:, 0]
+
+    state = init_decode_state(cfg, b, max_seq)
+    state["k"] = jax.lax.dynamic_update_slice_in_dim(
+        state["k"], ks.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["v"] = jax.lax.dynamic_update_slice_in_dim(
+        state["v"], vs.astype(cfg.cdtype()), 0, axis=2
+    )
+    state["pos"] = jnp.asarray(t, jnp.int32)
+    return state, logits

@@ -1,0 +1,3 @@
+from repro.serve.server import BatchedServer, GenerationResult
+
+__all__ = ["BatchedServer", "GenerationResult"]

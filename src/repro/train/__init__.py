@@ -1,0 +1,3 @@
+from repro.train.trainer import Trainer, TrainState, build_train_step
+
+__all__ = ["Trainer", "TrainState", "build_train_step"]

@@ -1,0 +1,271 @@
+"""Training loop with fault tolerance, grad accumulation, and sharding.
+
+``build_train_step`` produces the jitted SPMD step used both by the real
+trainer and by the multi-pod dry-run (the dry-run lowers exactly what
+production runs). The host-side :class:`Trainer` adds the reliability layer:
+deterministic data replay, periodic async checkpoints, crash-restart, a
+straggler watchdog, and elastic resume onto a different mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.data import SyntheticLMData
+from repro.distributed import sharding as shd
+from repro.models import params as P
+from repro.models.api import ModelConfig, family_module
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: int
+
+
+def microbatch_split(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scan-based gradient accumulation."""
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+    )
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1, gradients accumulate over a lax.scan of microbatch
+    slices (compute/overlap trick: each microbatch's backward overlaps the
+    next microbatch's data movement under XLA's scheduler).
+    """
+    mod = family_module(cfg)
+
+    def loss_of(params, batch):
+        return mod.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            mb = microbatch_split(batch, microbatches)
+
+            def accum(carry, b):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, b)
+                return (
+                    loss_sum + l,
+                    jax.tree.map(lambda a, x: a + x.astype(jnp.float32), gsum, g),
+                ), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), mb
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_sharded_state(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    mode: str = "fsdp_sp",
+    seed: int = 0,
+) -> tuple[Any, Any, Any]:
+    """Initialize params + optimizer state directly into their shardings."""
+    mod = family_module(cfg)
+    defs = mod.param_defs(cfg)
+    logical = P.logical_tree(defs)
+    abstract = P.abstract_tree(defs, cfg.pdtype())
+    shardings = shd.tree_shardings(logical, abstract, mesh, mode)
+
+    @jax.jit
+    def _init(key):
+        return P.init_tree(key, defs, cfg.pdtype())
+
+    with mesh:
+        params = jax.jit(
+            lambda key: P.init_tree(key, defs, cfg.pdtype()),
+            out_shardings=shardings,
+        )(jax.random.PRNGKey(seed))
+        opt = jax.jit(
+            adamw_init,
+            out_shardings={
+                "m": shardings,
+                "v": shardings,
+                "count": None,
+            },
+        )(params)
+    return params, opt, shardings
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    sharding_mode: str = "fsdp_sp"
+    straggler_factor: float = 3.0  # step slower than factor x median -> flagged
+    max_restarts: int = 2
+
+
+class Trainer:
+    """Host-side reliability loop around the SPMD train step."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: AdamWConfig,
+        tcfg: TrainerConfig,
+        data: SyntheticLMData,
+        mesh,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data = data
+        self.mesh = mesh
+        self.ckpt = CheckpointManager(
+            tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints
+        )
+        self.step_fn = None
+        self.step_times: list[float] = []
+        self.straggler_events = 0
+        self.restarts = 0
+        self._failure_hook: Callable[[int], None] | None = None
+
+    # -- failure injection (tests) --------------------------------------
+    def inject_failure_at(self, step: int) -> None:
+        fired = {"done": False}
+
+        def hook(s):
+            if s == step and not fired["done"]:
+                fired["done"] = True
+                raise RuntimeError(f"injected node failure at step {s}")
+
+        self._failure_hook = hook
+
+    # -- state ------------------------------------------------------------
+    def _fresh_state(self) -> TrainState:
+        params, opt, self.shardings = init_sharded_state(
+            self.cfg, self.mesh, mode=self.tcfg.sharding_mode
+        )
+        return TrainState(params=params, opt=opt, step=0)
+
+    def _abstract_state(self):
+        mod = family_module(self.cfg)
+        defs = mod.param_defs(self.cfg)
+        abstract = P.abstract_tree(defs, self.cfg.pdtype())
+        opt_abs = {
+            "m": jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), abstract
+            ),
+            "v": jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32), abstract
+            ),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        return {"params": abstract, "opt": opt_abs}
+
+    def restore_or_init(self) -> TrainState:
+        step = latest_step(self.tcfg.checkpoint_dir)
+        state = self._fresh_state()
+        if step is None:
+            return state
+        abstract = self._abstract_state()
+        shardings = {
+            "params": self.shardings,
+            "opt": {"m": self.shardings, "v": self.shardings, "count": None},
+        }
+        restored = restore_checkpoint(
+            self.tcfg.checkpoint_dir, step, abstract, shardings
+        )
+        return TrainState(params=restored["params"], opt=restored["opt"], step=step)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> dict:
+        with self.mesh, shd.axis_rules(self.mesh, self.tcfg.sharding_mode):
+            return self._run_inner()
+
+    def _run_inner(self) -> dict:
+        state = self.restore_or_init()
+        step_fn = jax.jit(
+            build_train_step(
+                self.cfg, self.opt_cfg, microbatches=self.tcfg.microbatches
+            ),
+            donate_argnums=(0, 1),
+        )
+        metrics_log = []
+        step = state.step
+        params, opt = state.params, state.opt
+        while step < self.tcfg.steps:
+            try:
+                if self._failure_hook:
+                    self._failure_hook(step)
+                t0 = time.perf_counter()
+                batch = self.data.sharded_batch(
+                    self.mesh, step, batch_axes=("pod", "data")
+                )
+                params, opt, metrics = step_fn(params, opt, batch)
+                metrics["loss"].block_until_ready()
+                dt = time.perf_counter() - t0
+                # straggler watchdog (host-side; a slow step on any worker
+                # shows up here as a slow global step)
+                if len(self.step_times) >= 5:
+                    med = float(np.median(self.step_times[-20:]))
+                    if dt > self.tcfg.straggler_factor * med:
+                        self.straggler_events += 1
+                self.step_times.append(dt)
+                step += 1
+                if step % self.tcfg.log_every == 0 or step == self.tcfg.steps:
+                    metrics_log.append(
+                        {
+                            "step": step,
+                            "loss": float(metrics["loss"]),
+                            "grad_norm": float(metrics["grad_norm"]),
+                            "sec_per_step": dt,
+                        }
+                    )
+                if step % self.tcfg.checkpoint_every == 0:
+                    self.ckpt.save_async(step, {"params": params, "opt": opt})
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.tcfg.max_restarts:
+                    raise
+                # crash-restart path: reload the latest durable checkpoint
+                self.ckpt.wait()
+                state = self.restore_or_init()
+                params, opt, step = state.params, state.opt, state.step
+        self.ckpt.wait()
+        self.ckpt.save_async(step, {"params": params, "opt": opt})
+        self.ckpt.wait()
+        return {
+            "final_step": step,
+            "metrics": metrics_log,
+            "straggler_events": self.straggler_events,
+            "restarts": self.restarts,
+        }

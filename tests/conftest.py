@@ -1,0 +1,49 @@
+"""Shared fixtures. NOTE: no global XLA_FLAGS here — smoke tests must see the
+real single-device CPU; multi-device tests spawn subprocesses (see
+``run_multidevice`` fixture) so the 512-device dry-run env never leaks in.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def repo_root() -> str:
+    return REPO
+
+
+@pytest.fixture(scope="session")
+def run_multidevice():
+    """Run a python snippet in a subprocess with N fake host devices."""
+
+    def _run(code: str, devices: int = 8, timeout: int = 600) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}"
+            " --xla_disable_hlo_passes=all-reduce-promotion"
+        )
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(REPO, "src"), REPO, env.get("PYTHONPATH", "")]
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(code)],
+            capture_output=True,
+            text=True,
+            env=env,
+            timeout=timeout,
+        )
+        if proc.returncode != 0:
+            raise AssertionError(
+                f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+            )
+        return proc.stdout
+
+    return _run

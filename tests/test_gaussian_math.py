@@ -1,0 +1,206 @@
+"""Unit + property tests for the Gaussian feature pipeline (paper Section IV)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    compute_features_naive,
+    compute_features_staged,
+    look_at_camera,
+    random_gaussians,
+)
+from repro.core.features import (
+    quat_to_rotmat,
+    stage_cov2d,
+    stage_cov2d_inv,
+    stage_cov3d,
+    stage_jacobian,
+    stage_projection,
+    stage_ray_dir,
+)
+from repro.core.sh import eval_sh_color, sh_basis
+
+FIELDS = ["uv", "conic", "color", "depth", "radius", "opacity", "mask"]
+
+
+def _cam(w=96, h=64):
+    return look_at_camera((0.5, 1.0, -6.0), (0, 0, 0), width=w, height=h)
+
+
+class TestNaiveVsStaged:
+    """The paper's Listing-1 (naive) and Listing-2 (vectorized) paths agree."""
+
+    @pytest.mark.parametrize("n", [1, 17, 256])
+    def test_all_fields_match(self, n):
+        g = random_gaussians(jax.random.PRNGKey(n), n)
+        cam = _cam()
+        fa = compute_features_naive(g, cam)
+        fb = compute_features_staged(g, cam)
+        for f in FIELDS:
+            np.testing.assert_allclose(
+                getattr(fa, f), getattr(fb, f), rtol=3e-5, atol=3e-5, err_msg=f
+            )
+
+    @pytest.mark.parametrize("deg", [0, 1, 2, 3])
+    def test_sh_degrees(self, deg):
+        g = random_gaussians(jax.random.PRNGKey(0), 64)
+        cam = _cam()
+        fa = compute_features_naive(g, cam, sh_degree=deg)
+        fb = compute_features_staged(g, cam, sh_degree=deg)
+        np.testing.assert_allclose(fa.color, fb.color, rtol=3e-5, atol=3e-5)
+
+
+quats = hnp.arrays(
+    np.float32,
+    (4,),
+    elements=st.floats(-1, 1, width=32).filter(lambda x: abs(x) > 1e-3),
+)
+scales3 = hnp.arrays(
+    np.float32, (3,), elements=st.floats(np.float32(0.01), np.float32(2.0), width=32)
+)
+
+
+class TestCov3DProperties:
+    @hypothesis.given(q=quats, s=scales3)
+    @hypothesis.settings(deadline=None, max_examples=50)
+    def test_rotation_matrix_orthonormal(self, q, s):
+        r = np.asarray(quat_to_rotmat(jnp.asarray(q)))
+        np.testing.assert_allclose(r @ r.T, np.eye(3), atol=1e-5)
+        assert abs(np.linalg.det(r) - 1.0) < 1e-5
+
+    @hypothesis.given(q=quats, s=scales3)
+    @hypothesis.settings(deadline=None, max_examples=50)
+    def test_cov3d_psd_and_det(self, q, s):
+        cov6 = np.asarray(
+            stage_cov3d(jnp.asarray(q)[None], jnp.asarray(s)[None])
+        )[0]
+        xx, xy, xz, yy, yz, zz = cov6
+        sigma = np.array([[xx, xy, xz], [xy, yy, yz], [xz, yz, zz]])
+        eig = np.linalg.eigvalsh(sigma)
+        assert eig.min() >= -1e-5  # PSD
+        # det(R S R^T) = prod(s^2) — rotation invariance of volume
+        np.testing.assert_allclose(
+            np.linalg.det(sigma), np.prod(s.astype(np.float64) ** 2), rtol=1e-3
+        )
+
+    @hypothesis.given(q=quats, s=scales3, scale=st.floats(np.float32(0.1), np.float32(10.0), width=32))
+    @hypothesis.settings(deadline=None, max_examples=30)
+    def test_quaternion_scale_invariance(self, q, s, scale):
+        """q and c*q encode the same rotation -> identical covariance."""
+        a = stage_cov3d(jnp.asarray(q)[None], jnp.asarray(s)[None])
+        b = stage_cov3d(jnp.asarray(q * scale)[None], jnp.asarray(s)[None])
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+class TestProjection:
+    def test_center_projects_to_principal_point(self):
+        cam = _cam()
+        # A point straight ahead of the camera lands on (cx, cy).
+        p = cam.cam_pos + cam.r_cw.T @ jnp.array([0.0, 0.0, 3.0])
+        _, uv, depth = stage_projection(p[None], cam)
+        np.testing.assert_allclose(uv[0], [cam.cx, cam.cy], atol=1e-3)
+        np.testing.assert_allclose(depth[0], 3.0, atol=1e-5)
+
+    def test_behind_camera_masked(self):
+        cam = _cam()
+        p = cam.cam_pos - cam.r_cw.T @ jnp.array([0.0, 0.0, 3.0])
+        g = random_gaussians(jax.random.PRNGKey(0), 1)
+        g = jax.tree.map(lambda x: x, g)
+        g.positions = p[None]
+        feats = compute_features_staged(g, cam)
+        assert float(feats.mask[0]) == 0.0
+
+    def test_jacobian_matches_autodiff(self):
+        cam = _cam()
+        p_cam = jnp.array([[0.3, -0.2, 2.5]])
+
+        def proj(pc):
+            return jnp.stack(
+                [cam.fx * pc[0] / pc[2], cam.fy * pc[1] / pc[2]]
+            )
+
+        j_auto = jax.jacfwd(proj)(p_cam[0])
+        j_ours = stage_jacobian(p_cam, cam)[0]
+        np.testing.assert_allclose(j_ours, j_auto, rtol=1e-4, atol=1e-5)
+
+
+class TestCov2D:
+    def test_conic_is_inverse(self):
+        g = random_gaussians(jax.random.PRNGKey(3), 128)
+        cam = _cam()
+        cov3d = stage_cov3d(g.quats, g.scales())
+        p_cam, _, _ = stage_projection(g.positions, cam)
+        jac = stage_jacobian(p_cam, cam)
+        cov2d = stage_cov2d(cov3d, jac, cam)
+        conic, radius = stage_cov2d_inv(cov2d)
+        a, b, c = cov2d[:, 0], cov2d[:, 1], cov2d[:, 2]
+        ca, cb, cc = conic[:, 0], conic[:, 1], conic[:, 2]
+        # [a b; b c] @ [ca cb; cb cc] == I where det > 0
+        det = a * c - b * b
+        valid = det > 1e-9
+        np.testing.assert_allclose(
+            np.where(valid, a * ca + b * cb, 1.0), 1.0, atol=1e-3
+        )
+        np.testing.assert_allclose(
+            np.where(valid, a * cb + b * cc, 0.0), 0.0, atol=1e-3
+        )
+        assert np.all(np.asarray(radius) >= 0)
+
+    def test_blur_lower_bounds_eigenvalues(self):
+        """The +0.3 screen-space blur keeps the 2D covariance PSD."""
+        g = random_gaussians(jax.random.PRNGKey(4), 256, base_scale=1e-4)
+        cam = _cam()
+        cov3d = stage_cov3d(g.quats, g.scales())
+        p_cam, _, _ = stage_projection(g.positions, cam)
+        jac = stage_jacobian(p_cam, cam)
+        cov2d = np.asarray(stage_cov2d(cov3d, jac, cam))
+        a, b, c = cov2d[:, 0], cov2d[:, 1], cov2d[:, 2]
+        mid = 0.5 * (a + c)
+        disc = np.sqrt(np.maximum(mid**2 - (a * c - b * b), 0))
+        lam_min = mid - disc
+        assert lam_min.min() > 0.0
+
+
+class TestSphericalHarmonics:
+    def test_deg0_is_view_independent(self):
+        sh = 0.5 * jax.random.normal(jax.random.PRNGKey(0), (8, 16, 3))
+        d1 = jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (8, 1))
+        d2 = jnp.tile(jnp.array([[1.0, 0.0, 0.0]]), (8, 1))
+        c1 = eval_sh_color(sh, d1, degree=0)
+        c2 = eval_sh_color(sh, d2, degree=0)
+        np.testing.assert_allclose(c1, c2, atol=1e-6)
+
+    @hypothesis.given(
+        d=hnp.arrays(
+            np.float32, (3,), elements=st.floats(-1, 1, width=32)
+        ).filter(lambda v: np.linalg.norm(v) > 1e-2)
+    )
+    @hypothesis.settings(deadline=None, max_examples=50)
+    def test_basis_orthogonality_constants(self, d):
+        """Y_00 is constant; all 16 values finite for any unit direction."""
+        d = d / np.linalg.norm(d)
+        b = np.asarray(sh_basis(jnp.asarray(d)))
+        assert b.shape == (16,)
+        assert np.isfinite(b).all()
+        np.testing.assert_allclose(b[0], 0.28209479, rtol=1e-5)
+
+    def test_color_clamped_nonnegative(self):
+        sh = -5.0 * jnp.ones((4, 16, 3))
+        d = jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (4, 1))
+        c = eval_sh_color(sh, d)
+        assert float(c.min()) >= 0.0
+
+
+class TestRayDir:
+    def test_unit_norm(self):
+        g = random_gaussians(jax.random.PRNGKey(5), 64)
+        cam = _cam()
+        r = stage_ray_dir(g.positions, cam)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(r, axis=-1), 1.0, atol=1e-5
+        )

@@ -1,0 +1,183 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import look_at_camera, random_gaussians
+from repro.core.features import compute_features_fused
+from repro.core.rasterize import pixel_grid, sort_by_depth
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gaussian_features.ops import gaussian_features_packed
+from repro.kernels.gaussian_features.ref import gaussian_features_ref, pack_features
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.tile_rasterize.ops import tile_rasterize
+from repro.kernels.tile_rasterize.ref import tile_rasterize_ref
+
+
+class TestGaussianFeaturesKernel:
+    @pytest.mark.parametrize("n", [64, 100, 513, 2048])
+    @pytest.mark.parametrize("block", [128, 512])
+    def test_shape_sweep(self, n, block):
+        g = random_gaussians(jax.random.PRNGKey(n), n)
+        cam = look_at_camera((1, 2, -5), (0, 0, 0), width=80, height=60)
+        got = gaussian_features_packed(g, cam, block=block)
+        want = gaussian_features_ref(g, cam)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("deg", [0, 1, 2, 3])
+    def test_degree_sweep(self, deg):
+        g = random_gaussians(jax.random.PRNGKey(7), 256)
+        cam = look_at_camera((0, 0.5, -4), (0, 0, 0), width=64, height=64)
+        got = gaussian_features_packed(g, cam, sh_degree=deg)
+        want = gaussian_features_ref(g, cam, sh_degree=deg)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_extreme_inputs_no_nan(self):
+        g = random_gaussians(jax.random.PRNGKey(1), 128, base_scale=10.0)
+        g.positions = g.positions * 100.0  # far outside the frustum
+        cam = look_at_camera((0, 0, -2), (0, 0, 0), width=32, height=32)
+        got = np.asarray(gaussian_features_packed(g, cam))
+        assert np.isfinite(got).all()
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "b,h,hk,t,d,causal,window",
+        [
+            (2, 4, 4, 256, 64, True, None),  # MHA causal
+            (2, 8, 2, 256, 64, True, None),  # GQA 4:1
+            (1, 4, 1, 384, 128, True, None),  # MQA, d=128
+            (2, 4, 2, 256, 64, False, None),  # bidirectional
+            (1, 8, 4, 512, 64, True, 128),  # sliding window
+            (1, 2, 2, 128, 32, True, 32),  # small window
+        ],
+    )
+    def test_variants(self, b, h, hk, t, d, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(t + h), 3)
+        q = jax.random.normal(ks[0], (b, h, t, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hk, t, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, hk, t, d), jnp.float32)
+        got = flash_attention(q, k, v, causal=causal, window=window)
+        want = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.bfloat16)
+        got = flash_attention(q, k, v).astype(jnp.float32)
+        want = attention_ref(q, k, v).astype(jnp.float32)
+        assert float(jnp.max(jnp.abs(got - want))) < 0.05
+
+    @pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 256), (256, 128)])
+    def test_block_shape_invariance(self, block_q, block_k):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (1, 4, 512, 64))
+        k = jax.random.normal(ks[1], (1, 4, 512, 64))
+        v = jax.random.normal(ks[2], (1, 4, 512, 64))
+        got = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+        want = attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize(
+        "b,h,t,p,n,chunk",
+        [
+            (2, 4, 256, 64, 128, 128),
+            (1, 2, 512, 32, 64, 128),
+            (2, 3, 128, 16, 32, 64),
+            (1, 1, 64, 8, 16, 64),
+        ],
+    )
+    def test_vs_sequential(self, b, h, t, p, n, chunk):
+        ks = jax.random.split(jax.random.PRNGKey(t * h), 5)
+        x = jax.random.normal(ks[0], (b, h, t, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, t)) - 1.0)
+        bm = jax.random.normal(ks[2], (b, h, t, n)) / np.sqrt(n)
+        cm = jax.random.normal(ks[3], (b, h, t, n)) / np.sqrt(n)
+        a = -jnp.exp(jax.random.normal(ks[4], (h,)))
+        y_k, h_k = ssd_scan(x, dt, bm, cm, a, chunk=chunk)
+        y_r, h_r = ssd_scan_ref(x, dt, bm, cm, a)
+        np.testing.assert_allclose(y_k, y_r, rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(h_k, h_r, rtol=2e-3, atol=2e-4)
+
+    @hypothesis.given(chunk=st.sampled_from([32, 64, 128, 256]))
+    @hypothesis.settings(deadline=None, max_examples=4)
+    def test_chunk_invariance(self, chunk):
+        """The chunk size is an implementation detail — results identical."""
+        ks = jax.random.split(jax.random.PRNGKey(5), 5)
+        x = jax.random.normal(ks[0], (1, 2, 256, 16))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 2, 256)))
+        bm = jax.random.normal(ks[2], (1, 2, 256, 32)) / np.sqrt(32)
+        cm = jax.random.normal(ks[3], (1, 2, 256, 32)) / np.sqrt(32)
+        a = -jnp.exp(jax.random.normal(ks[4], (2,)))
+        y, hf = ssd_scan(x, dt, bm, cm, a, chunk=chunk)
+        y_ref, h_ref = ssd_scan_ref(x, dt, bm, cm, a)
+        np.testing.assert_allclose(y, y_ref, rtol=2e-3, atol=2e-4)
+
+
+class TestTileRasterizeKernel:
+    @pytest.mark.parametrize("n,size", [(100, 32), (500, 48), (1000, 64)])
+    def test_vs_fullimage_oracle(self, n, size):
+        g = random_gaussians(jax.random.PRNGKey(n), n)
+        cam = look_at_camera((0, 1, -6), (0, 0, 0), width=size, height=size)
+        feats = sort_by_depth(compute_features_fused(g, cam))
+        packed = pack_features(feats)
+        bg = jnp.array([0.1, 0.2, 0.3])
+        got = tile_rasterize(packed, cam.height, cam.width, bg)
+        pix = pixel_grid(cam.height, cam.width)
+        want = tile_rasterize_ref(pix, packed, bg)[:, :3].reshape(
+            cam.height, cam.width, 3
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_block_size_invariance(self):
+        g = random_gaussians(jax.random.PRNGKey(3), 512)
+        cam = look_at_camera((0, 1, -6), (0, 0, 0), width=32, height=32)
+        packed = pack_features(sort_by_depth(compute_features_fused(g, cam)))
+        bg = jnp.zeros(3)
+        a = tile_rasterize(packed, 32, 32, bg, block_g=128)
+        b = tile_rasterize(packed, 32, 32, bg, block_g=256)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+class TestRMSNormKernel:
+    @pytest.mark.parametrize(
+        "shape,dtype",
+        [
+            ((2, 64, 128), jnp.float32),
+            ((4, 100, 256), jnp.float32),
+            ((1, 512, 128), jnp.bfloat16),
+            ((8, 384), jnp.float32),
+        ],
+    )
+    def test_vs_layers_oracle(self, shape, dtype):
+        from repro.kernels.rmsnorm.ops import rmsnorm
+        from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+        key = jax.random.PRNGKey(sum(shape))
+        x = jax.random.normal(key, shape, dtype)
+        scale = 1.0 + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, 1), (shape[-1],), dtype
+        )
+        got = rmsnorm(x, scale, eps=1e-5).astype(jnp.float32)
+        want = rmsnorm_ref(x, scale, 1e-5).astype(jnp.float32)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+    def test_block_rows_invariance(self):
+        from repro.kernels.rmsnorm.ops import rmsnorm
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (300, 128))
+        scale = jnp.ones((128,))
+        a = rmsnorm(x, scale, block_rows=64)
+        b = rmsnorm(x, scale, block_rows=256)
+        np.testing.assert_allclose(a, b, rtol=1e-6)

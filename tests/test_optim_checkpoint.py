@@ -1,0 +1,104 @@
+"""Optimizer + checkpoint store tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = AdamWConfig(
+            learning_rate=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200
+        )
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params)
+
+        @jax.jit
+        def step(params, state):
+            grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            return adamw_update(cfg, params, grads, state)
+
+        for _ in range(150):
+            params, state, metrics = step(params, state)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_grad_clipping(self):
+        cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(3)}
+        state = adamw_init(params)
+        grads = {"w": jnp.array([1e6, 0.0, 0.0])}
+        _, _, metrics = adamw_update(cfg, params, grads, state)
+        assert float(metrics["grad_norm"]) > 1e5  # pre-clip norm reported
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(
+            learning_rate=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1
+        )
+        lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 55, 100]]
+        assert lrs[0] == 0.0
+        assert abs(lrs[1] - 0.5) < 1e-6  # mid-warmup
+        assert abs(lrs[2] - 1.0) < 1e-6  # peak
+        assert lrs[3] < lrs[2]  # decaying
+        assert abs(lrs[4] - 0.1) < 1e-3  # floor
+
+
+class TestCheckpoint:
+    def _tree(self, key):
+        return {
+            "a": jax.random.normal(key, (8, 4)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+        }
+
+    def test_round_trip(self, tmp_path):
+        tree = self._tree(jax.random.PRNGKey(0))
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+        )
+        restored = restore_checkpoint(str(tmp_path), 7, abstract)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_corruption_detected(self, tmp_path):
+        tree = self._tree(jax.random.PRNGKey(1))
+        path = save_checkpoint(str(tmp_path), 1, tree)
+        victim = os.path.join(path, "a.npy")
+        arr = np.load(victim)
+        arr = arr + 1.0
+        np.save(victim, arr)
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+        )
+        with pytest.raises(IOError, match="checksum"):
+            restore_checkpoint(str(tmp_path), 1, abstract)
+
+    def test_manager_gc_keeps_last_k(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = self._tree(jax.random.PRNGKey(2))
+        for s in [1, 2, 3, 4]:
+            mgr.save_async(s, tree)
+        mgr.wait()
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["step_000000003", "step_000000004"]
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        tree = self._tree(jax.random.PRNGKey(3))
+        save_checkpoint(str(tmp_path), 1, tree)
+        bad = {
+            "a": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+            "nested": {"b": jax.ShapeDtypeStruct((10,), jnp.int32)},
+        }
+        with pytest.raises(ValueError, match="shape mismatch"):
+            restore_checkpoint(str(tmp_path), 1, bad)

@@ -1,0 +1,75 @@
+"""Roofline HLO-parser unit tests (known workloads, subprocess meshes)."""
+
+import sys
+
+import pytest
+
+
+class TestParserOnKnownWorkloads:
+    def test_scan_matmul_exact_flops(self, run_multidevice):
+        out = run_multidevice(
+            """
+            import jax, jax.numpy as jnp, sys
+            sys.path.insert(0, "/root/repo")
+            from jax.sharding import PartitionSpec as P, NamedSharding
+            from benchmarks import roofline as R
+            mesh = jax.make_mesh((2, 4), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            L = 7
+            def step(w, x):
+                def body(c, _):
+                    return jnp.tanh(c @ w), None
+                h, _ = jax.lax.scan(body, x, None, length=L)
+                return h.sum()
+            ws = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+            xs = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+            with mesh:
+                comp = jax.jit(step, in_shardings=(
+                    NamedSharding(mesh, P(None, "model")),
+                    NamedSharding(mesh, P("data", None)))).lower(ws, xs).compile()
+            rep = R.analyze(comp.as_text(), num_partitions=8)
+            expected = 2 * 64 * 512 * 512 * L / 8  # per-device
+            ratio = rep.flops / expected
+            assert 0.99 < ratio < 1.01, ratio
+            # the scan body all-gathers x (32,512) f32 per iteration
+            per_iter_ag = 32 * 512 * 4 * (4 - 1) / 4
+            assert rep.collective_bytes >= per_iter_ag * L * 0.9
+            print("PARSER OK", ratio)
+            """,
+            devices=8,
+        )
+        assert "PARSER OK" in out
+
+    def test_collective_formulas(self):
+        sys.path.insert(0, "/root/repo")
+        from benchmarks import roofline as R
+
+        # all-reduce of f32[1024] over 4 devices: 2 * 4096 B * 3/4
+        line = "  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%sum"
+        got = R._collective_bytes(line, "all-reduce", 8)
+        assert abs(got - 2 * 4096 * 3 / 4) < 1e-6
+
+        line2 = "  %ag = f32[64,512]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={1}"
+        got2 = R._collective_bytes(line2, "all-gather", 8)
+        assert abs(got2 - 64 * 512 * 4 * 3 / 4) < 1e-6
+
+    def test_model_flops_dense_vs_moe(self):
+        sys.path.insert(0, "/root/repo")
+        from benchmarks import roofline as R
+        from repro.configs import get_config
+        from repro.models.api import SHAPES
+
+        dense = get_config("tinyllama-1.1b")
+        n = R.active_param_count(dense)
+        assert 1.0e9 < n < 1.3e9, n  # ~1.1B
+
+        moe = get_config("qwen3-moe-30b-a3b")
+        n_active = R.active_param_count(moe)
+        assert 2e9 < n_active < 4.5e9, n_active  # "a3b" = ~3B active
+
+        full_moe = get_config("qwen3-moe-235b-a22b")
+        n_active2 = R.active_param_count(full_moe)
+        assert 1.5e10 < n_active2 < 3e10, n_active2  # ~22B active
+
+        mf = R.model_flops_global(dense, SHAPES["train_4k"])
+        assert abs(mf - 6 * n * 256 * 4096) / mf < 1e-6

@@ -1,0 +1,70 @@
+"""Serving loop + data pipeline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMData
+from repro.models import params as P
+from repro.models.api import family_module
+from repro.serve import BatchedServer
+
+
+class TestServer:
+    def test_greedy_matches_teacher_forced(self):
+        cfg = get_smoke_config("tinyllama-1.1b")
+        mod = family_module(cfg)
+        params = P.init_tree(jax.random.PRNGKey(0), mod.param_defs(cfg))
+        srv = BatchedServer(cfg, params, max_seq=64)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+        out = srv.generate({"tokens": prompt}, steps=4)
+        assert out.tokens.shape == (2, 4)
+        assert out.logprobs.shape == (2, 4)
+        assert (out.logprobs <= 0).all()
+        # re-run the full sequence teacher-forced; greedy tokens must be the
+        # argmax continuation at every step
+        toks = prompt
+        for i in range(4):
+            logits = mod.forward(cfg, params, {"tokens": toks})
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            np.testing.assert_array_equal(nxt, out.tokens[:, i])
+            toks = jnp.concatenate(
+                [toks, jnp.asarray(nxt, jnp.int32)[:, None]], axis=1
+            )
+
+    def test_temperature_sampling_differs(self):
+        cfg = get_smoke_config("tinyllama-1.1b")
+        mod = family_module(cfg)
+        params = P.init_tree(jax.random.PRNGKey(0), mod.param_defs(cfg))
+        srv = BatchedServer(cfg, params, max_seq=64, temperature=2.0)
+        prompt = jnp.zeros((4, 8), jnp.int32)
+        a = srv.generate({"tokens": prompt}, steps=6, seed=0)
+        b = srv.generate({"tokens": prompt}, steps=6, seed=1)
+        assert (a.tokens != b.tokens).any()
+
+
+class TestData:
+    def test_deterministic_replay(self):
+        d = SyntheticLMData(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+        a = d.batch_at(7)
+        b = d.batch_at(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = d.batch_at(8)
+        assert (a["tokens"] != c["tokens"]).any()
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticLMData(vocab_size=100, seq_len=16, global_batch=2)
+        b = d.batch_at(0)
+        assert b["tokens"].shape == (2, 16)
+        assert b["labels"].shape == (2, 16)
+        # same underlying stream shifted by one position
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_learnable_structure(self):
+        """The Markov stream must be more predictable than uniform."""
+        d = SyntheticLMData(vocab_size=100, seq_len=64, global_batch=8)
+        b = d.batch_at(0)
+        deltas = (b["labels"] - b["tokens"]) % 100
+        # steps are in [1, 6] by construction
+        assert deltas.min() >= 1 and deltas.max() <= 6
