@@ -43,7 +43,8 @@ g = jax.eval_shape(lambda k: random_gaussians(k, N), jax.random.PRNGKey(0))
 cam = look_at_camera((0, 1.0, -6.0), (0,0,0), width=1024, height=1024)
 out = {{}}
 for p in [1, 4, 8, 16, 32, 64]:
-    mesh = jax.make_mesh((p,), ("gs",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((p,), ("gs",))
     fn = sharded_features(mesh, ("gs",))
     with mesh:
         compiled = jax.jit(fn).lower(g, cam).compile()

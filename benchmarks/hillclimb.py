@@ -56,7 +56,7 @@ def lower_gsplat(variant_opts):
     """Cell C: the paper's feature pipeline, 1M Gaussians over 256 chips."""
     import jax.numpy as jnp
 
-    from repro.core import look_at_camera, random_gaussians
+    from repro.core import RenderConfig, look_at_camera, random_gaussians
     from repro.core.pipeline import sharded_features, sharded_render
     from repro.launch.mesh import make_production_mesh
 
@@ -65,8 +65,10 @@ def lower_gsplat(variant_opts):
     axes = ("data", "model")  # gaussians sharded over the full mesh
     g = jax.eval_shape(lambda k: random_gaussians(k, n), jax.random.PRNGKey(0))
     cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=1024, height=1024)
-    feature_path = variant_opts.get("feature_path", "staged")
-    fn = sharded_features(mesh, axes, feature_path=feature_path)
+    config = RenderConfig(
+        feature_path=variant_opts.get("feature_path", "staged")
+    )
+    fn = sharded_features(mesh, axes, config=config)
     with mesh:
         compiled = jax.jit(fn).lower(g, cam).compile()
     return compiled, mesh, None

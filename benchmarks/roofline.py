@@ -26,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Iterable
 
 PEAK_FLOPS = 197e12  # bf16 MXU, per chip
 HBM_BW = 819e9  # bytes/s per chip
@@ -163,6 +162,23 @@ def _group_size(line: str, num_partitions: int) -> int:
     return num_partitions
 
 
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(operand_text: str) -> list[str]:
+    """Operand variable names from an op's argument list.
+
+    Handles both HLO operand styles: bare names (``dot(%a, %b)``) and fully
+    typed (``dot(f32[32,512]{1,0} %a, f32[512,128]{1,0} %b)``) — the latter
+    is what compiled modules print, and naive comma-splitting breaks on the
+    commas inside the shapes.
+    """
+    named = _OPERAND_NAME_RE.findall(operand_text)
+    if named:
+        return named
+    return [o.strip() for o in operand_text.split(",") if o.strip()]
+
+
 def _dot_flops(line: str, symbols: dict[str, tuple[str, tuple[int, ...]]]) -> float:
     out_shape = _parse_shape(line.split("=", 1)[1])
     if out_shape is None:
@@ -173,9 +189,7 @@ def _dot_flops(line: str, symbols: dict[str, tuple[str, tuple[int, ...]]]) -> fl
     ops = re.search(r"\b(?:dot|convolution)\(([^)]*)\)", line)
     contracted = 1
     if mdims and ops:
-        operand_names = [
-            o.strip().lstrip("%") for o in ops.group(1).split(",") if o.strip()
-        ]
+        operand_names = _operand_names(ops.group(1))
         lhs = symbols.get(operand_names[0]) if operand_names else None
         if lhs:
             for d in mdims.group(1).split(","):
@@ -193,7 +207,7 @@ def _conv_flops(line: str, symbols: dict[str, tuple[str, tuple[int, ...]]]) -> f
     kernel_elems = 1
     out_feats = 1
     if ops:
-        names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+        names = _operand_names(ops.group(1))
         if len(names) >= 2 and names[1] in symbols:
             kshape = symbols[names[1]][1]
             kernel_elems = math.prod(kshape) if kshape else 1
@@ -316,8 +330,7 @@ def parse_hlo(hlo: str, num_partitions: int) -> dict[str, ComputationStats]:
                 operand_bytes: list[int] = []
                 ops = re.search(rf"{re.escape(opname)}\(([^)]*)\)", rhs)
                 if ops:
-                    for oname in ops.group(1).split(","):
-                        oname = oname.strip().lstrip("%")
+                    for oname in _operand_names(ops.group(1)):
                         if oname in symbols:
                             operand_bytes.append(_nbytes(symbols[oname]))
                 if sliced:

@@ -11,7 +11,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import orbit_cameras, random_gaussians
+from repro.core import RenderConfig, orbit_cameras, random_gaussians
 from repro.core.render import render_jit
 
 
@@ -20,10 +20,17 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--gaussians", type=int, default=4096)
     ap.add_argument("--image-size", type=int, default=96)
+    ap.add_argument(
+        "--raster-path", choices=("dense", "binned", "pallas"), default="binned"
+    )
+    ap.add_argument("--tile-capacity", type=int, default=512)
     args = ap.parse_args()
 
     model = random_gaussians(jax.random.PRNGKey(0), args.gaussians, extent=1.5)
-    print(f"serving a {args.gaussians}-Gaussian model")
+    config = RenderConfig(
+        raster_path=args.raster_path, tile_capacity=args.tile_capacity
+    )
+    print(f"serving a {args.gaussians}-Gaussian model ({args.raster_path} raster)")
 
     # request stream: cameras orbiting the scene (all same static image size
     # -> one compiled executable serves every request)
@@ -34,7 +41,7 @@ def main() -> None:
     lat = []
     for i, cam in enumerate(cams):
         t0 = time.perf_counter()
-        img = render_jit(model, cam)
+        img = render_jit(model, cam, config)
         img.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         lat.append(ms)

@@ -11,13 +11,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import render
+from repro.core import RenderConfig, render
 from repro.core.train3dgs import (
-    DensifyConfig,
     accumulate_grad_stats,
     densify_and_prune,
-    gsplat_loss,
     init_densify_state,
+    render_loss,
     reset_opacity,
 )
 from repro.core.gaussians import random_gaussians
@@ -32,12 +31,17 @@ def main() -> None:
     ap.add_argument("--views", type=int, default=8)
     ap.add_argument("--image-size", type=int, default=48)
     ap.add_argument("--densify-every", type=int, default=100)
+    ap.add_argument(
+        "--raster-path", choices=("dense", "binned"), default="binned"
+    )
     args = ap.parse_args()
 
+    config = RenderConfig(raster_path=args.raster_path, pixel_chunk=None)
     data = SyntheticMultiView(
         num_gaussians=args.gaussians,
         num_views=args.views,
         image_size=args.image_size,
+        render_config=config,
     )
     targets = data.targets()
     print(f"synthetic scene: {args.gaussians} GT Gaussians, {args.views} views")
@@ -57,11 +61,9 @@ def main() -> None:
 
     @jax.jit
     def step(g, opt, cam, target):
-        def loss_fn(gg):
-            img = render(gg, cam, pixel_chunk=None)
-            return gsplat_loss(img, target)
-
-        loss, grads = jax.value_and_grad(loss_fn)(g)
+        loss, grads = jax.value_and_grad(
+            lambda gg: render_loss(gg, cam, target, config)
+        )(g)
         uv_grad_proxy = grads.positions[:, :2]  # screen-space grad stand-in
         g, opt, _ = adamw_update(ocfg, g, grads, opt)
         return g, opt, loss, uv_grad_proxy
@@ -89,7 +91,7 @@ def main() -> None:
           f"({1000*dt/args.steps:.0f} ms/step)")
 
     # held-out view PSNR
-    img = render(g, data.cameras[0], pixel_chunk=None)
+    img = render(g, data.cameras[0], config)
     mse = float(jnp.mean((img - targets[0]) ** 2))
     psnr = -10.0 * jnp.log10(mse)
     print(f"view-0 PSNR: {float(psnr):.1f} dB")

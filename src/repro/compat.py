@@ -1,0 +1,35 @@
+"""Version-compat shims for the jax APIs this repo straddles.
+
+The container pins jax 0.4.37, where ``shard_map`` still lives under
+``jax.experimental`` and ``jax.sharding.AxisType`` / the ``axis_types``
+kwarg of ``jax.make_mesh`` do not exist yet. Newer jax promotes both to the
+top level. Import from here instead of feature-detecting at every call site.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if HAS_AXIS_TYPES:
+        types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(tuple(shape), tuple(axes), axis_types=types)
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def abstract_mesh(shape, axes) -> "jax.sharding.AbstractMesh":
+    """``AbstractMesh`` across the 0.4.x (pair-tuple) and newer
+    (sizes, names) constructor signatures."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # jax <= 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))

@@ -1,6 +1,8 @@
 """Core 3DGS library — the paper's contribution as composable JAX modules."""
 
+from repro.core.binning import TileBins, bin_gaussians, rasterize_binned
 from repro.core.camera import Camera, look_at_camera, orbit_cameras
+from repro.core.config import DEFAULT_CONFIG, RenderConfig
 from repro.core.features import (
     GaussianFeatures,
     compute_features_fused,
@@ -12,14 +14,19 @@ from repro.core.render import render, render_jit
 
 __all__ = [
     "Camera",
+    "DEFAULT_CONFIG",
     "GaussianFeatures",
     "GaussianParams",
+    "RenderConfig",
+    "TileBins",
+    "bin_gaussians",
     "compute_features_fused",
     "compute_features_naive",
     "compute_features_staged",
     "look_at_camera",
     "orbit_cameras",
     "random_gaussians",
+    "rasterize_binned",
     "render",
     "render_jit",
 ]

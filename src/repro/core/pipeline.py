@@ -9,7 +9,10 @@ AIE columns (data parallelism over the Gaussian stream). The TPU analogue:
            (11 floats vs the 59-float input — gathering features, not raw
            Gaussians, is the bandwidth-side win; this corresponds to the
            PL-side gather the paper identifies as the system bottleneck),
-  stage 3  rasterization       — pixels sharded over the same axes.
+  stage 3  rasterization       — pixels sharded over the same axes; with the
+           binned raster path each device tile-bins the gathered features
+           against ONLY its own pixel rows (its slice of the tile grid), so
+           the per-tile list build is sharded alongside the blending.
 
 All three stages live in one ``shard_map`` so XLA can overlap the gather with
 the tail of feature computation.
@@ -17,48 +20,89 @@ the tail of feature computation.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.core import binning as bin_lib
 from repro.core import features as feat_lib
 from repro.core import rasterize as rast_lib
 from repro.core.camera import Camera
+from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.features import GaussianFeatures
 from repro.core.gaussians import GaussianParams
+from repro.core.render import FEATURE_PATHS
+
+
+def _pipeline_config(config: RenderConfig | None, **legacy) -> RenderConfig:
+    """Deprecation shim mirroring ``render``'s: fold loose kwargs, warn."""
+    used = sorted(k for k, v in legacy.items() if v is not UNSET)
+    if used:
+        warnings.warn(
+            f"sharded pipeline kwargs {', '.join(used)} are deprecated; pass "
+            "config=RenderConfig(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return as_config(config, **legacy)
+
+
+def _sharded_feature_fn(cfg: RenderConfig):
+    """Per-device feature fn for the sharded paths.
+
+    The pallas feature kernel is per-device-callable too, but the sharded
+    paths stay on the jnp implementations (Mosaic inside shard_map is
+    exercised by the kernel tests, not the pipeline) — an explicit
+    ``feature_path="pallas"`` falls back to the numerically identical fused
+    path, with a warning so comparisons aren't silently mislabeled.
+    """
+    if cfg.feature_path not in FEATURE_PATHS:
+        warnings.warn(
+            f"feature_path={cfg.feature_path!r} is not shardable; the "
+            "sharded pipeline uses the fused jnp path instead",
+            stacklevel=3,
+        )
+        return feat_lib.compute_features_fused
+    return FEATURE_PATHS[cfg.feature_path]
 
 
 def sharded_features(
     mesh: Mesh,
     axis_names: Sequence[str],
     *,
-    sh_degree: int = 3,
-    feature_path: str = "fused",
+    config: RenderConfig | None = None,
+    sh_degree=UNSET,
+    feature_path=UNSET,
 ):
     """Build a pjit-style sharded feature-computation fn.
 
     Gaussians shard along their leading axis over ``axis_names``; the camera
     is replicated (it is ~30 scalars — the AIE analogue streams it once to
     every column). Returns features sharded the same way (no collectives).
+
+    ``sh_degree`` / ``feature_path`` kwargs are a deprecation shim; pass a
+    :class:`RenderConfig` instead.
     """
-    fn = feat_lib.compute_features_staged
-    if feature_path == "naive":
-        fn = feat_lib.compute_features_naive
+    cfg = _pipeline_config(config, sh_degree=sh_degree, feature_path=feature_path)
+    fn = _sharded_feature_fn(cfg)
 
     gspec = P(tuple(axis_names))
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(gspec, P()),
         out_specs=gspec,
     )
     def _features(g: GaussianParams, cam: Camera) -> GaussianFeatures:
-        return fn(g, cam, sh_degree=sh_degree)
+        return fn(g, cam, sh_degree=cfg.sh_degree)
 
     return _features
 
@@ -68,27 +112,33 @@ def sharded_render(
     gaussian_axes: Sequence[str],
     pixel_axes: Sequence[str],
     *,
-    sh_degree: int = 3,
+    config: RenderConfig | None = None,
+    sh_degree=UNSET,
 ):
-    """Feature-compute (sharded over Gaussians) -> gather -> rasterize
-    (sharded over pixel rows). The full production render step."""
+    """Feature-compute (sharded over Gaussians) -> gather -> bin -> rasterize
+    (sharded over pixel rows). The full production render step.
+
+    With ``config.raster_path == "binned"`` (the default) every device builds
+    tile lists for its own row slice of the image only — binning cost shards
+    with the pixels. ``"dense"`` keeps the all-pairs oracle blend.
+    """
+    cfg = _pipeline_config(config, sh_degree=sh_degree)
+    feature_fn = _sharded_feature_fn(cfg)
+    # The pallas raster kernel is not differentiable/shardable here; use the
+    # jnp binned path on-device instead.
+    raster_path = "binned" if cfg.raster_path == "pallas" else cfg.raster_path
 
     gspec = P(tuple(gaussian_axes))
-    all_axes = tuple(gaussian_axes) + tuple(
-        a for a in pixel_axes if a not in gaussian_axes
-    )
 
     def _render(g: GaussianParams, cam: Camera, background: jax.Array) -> jax.Array:
         @functools.partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=(gspec, P(), P()),
             out_specs=P(tuple(pixel_axes)),
         )
         def _impl(g_shard, cam_rep, bg):
-            feats = feat_lib.compute_features_fused(
-                g_shard, cam_rep, sh_degree=sh_degree
-            )
+            feats = feature_fn(g_shard, cam_rep, sh_degree=cfg.sh_degree)
             # Stage 2: gather the small feature records from all shards.
             gathered = jax.tree.map(
                 lambda x: _multi_axis_all_gather(x, gaussian_axes), feats
@@ -97,6 +147,33 @@ def sharded_render(
             # Stage 3: every device rasterizes its slice of pixel rows.
             my_rows = cam_rep.height // _axis_size(pixel_axes)
             row0 = _pixel_axis_index(pixel_axes) * my_rows
+
+            if raster_path == "binned":
+                # Shift screen space so this device's rows start at y=0, then
+                # bin + blend the my_rows x W sub-image locally.
+                shift = jnp.stack(
+                    [jnp.zeros((), bg.dtype), row0.astype(bg.dtype)]
+                )
+                local = dataclasses.replace(
+                    gathered, uv=gathered.uv - shift[None, :]
+                )
+                bins = bin_lib.bin_gaussians(
+                    local,
+                    my_rows,
+                    cam_rep.width,
+                    tile_size=cfg.tile_size,
+                    capacity=cfg.tile_capacity,
+                    tile_chunk=cfg.tile_chunk,
+                )
+                return bin_lib.rasterize_binned(
+                    local,
+                    bins,
+                    my_rows,
+                    cam_rep.width,
+                    bg,
+                    tile_chunk=cfg.tile_chunk,
+                )
+
             pix = rast_lib.pixel_grid(cam_rep.height, cam_rep.width)
             pix = jax.lax.dynamic_slice_in_dim(
                 pix.reshape(cam_rep.height, cam_rep.width, 2),

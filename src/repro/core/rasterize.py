@@ -1,27 +1,35 @@
-"""Differentiable tile rasterizer (depth sort + front-to-back alpha blending).
+"""Differentiable rasterization (depth sort + front-to-back alpha blending).
 
-The paper stops at feature computation (image generation ran on the PS); a
-deployable 3DGS system needs the rasterizer, so this module provides the
-substrate: a pure-JAX, differentiable renderer used by training, plus the
-oracle for the ``tile_rasterize`` Pallas kernel.
+Two execution paths share one blending contract:
+
+* **dense** (this module) — every pixel visits every Gaussian, O(P*G). This
+  is the correctness oracle: simple, chunked over pixels, used by tests to
+  anchor the binned path and the Pallas kernel.
+* **binned** (``repro.core.binning``) — per-tile Gaussian index lists from
+  screen-AABB culling, O(P * G_visible_per_tile). The production path.
 
 Blending model (standard 3DGS):
     d      = pix - uv_n                       (2,)
     power  = -0.5 (A d_x^2 + C d_y^2) - B d_x d_y
-    alpha  = min(0.99, opacity_n * exp(power)),  dropped if alpha < 1/255
+    alpha  = min(0.99, opacity_n * exp(power)),
+             dropped if alpha < 1/255 OR pix outside the 3-sigma box
+             |d| <= radius_n (the box is what tile culling keys on, so both
+             paths share one support definition and agree exactly)
     C_pix  = sum_n color_n * alpha_n * T_n,   T_n = prod_{m<n} (1 - alpha_m)
     out    = C_pix + T_final * background
 Gaussians are iterated in increasing camera depth.
+
+``rasterize_features`` dispatches on :class:`repro.core.config.RenderConfig`.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import RenderConfig
 from repro.core.features import GaussianFeatures
 
 ALPHA_EPS = 1.0 / 255.0
@@ -63,7 +71,12 @@ def _pixel_alphas(
     power = jnp.minimum(power, 0.0)
     alpha = feats.opacity[None, :] * jnp.exp(power) * feats.mask[None, :]
     alpha = jnp.minimum(alpha, ALPHA_MAX)
-    return jnp.where(alpha < ALPHA_EPS, 0.0, alpha)
+    # Support cutoff: alpha floor + the 3-sigma screen box. The box is the
+    # same AABB tile binning culls on — keeping it here makes dense and
+    # binned blending mathematically identical (not just close).
+    r = feats.radius[None, :]
+    inside = (jnp.abs(dx) <= r) & (jnp.abs(dy) <= r)
+    return jnp.where(inside & (alpha >= ALPHA_EPS), alpha, 0.0)
 
 
 def rasterize_pixels(
@@ -101,7 +114,7 @@ def rasterize(
     background: Sequence[float] | jax.Array = (0.0, 0.0, 0.0),
     pixel_chunk: int | None = 4096,
 ) -> jax.Array:
-    """Full-image differentiable rasterization.
+    """Full-image dense rasterization — the O(P*G) oracle.
 
     Memory is O(pixel_chunk * G); chunking over pixels keeps the peak bounded
     (and is the oracle-side analogue of the Pallas kernel's pixel-tile grid).
@@ -122,6 +135,63 @@ def rasterize(
     out = jax.lax.map(lambda p: rasterize_pixels(p, feats, bg), chunks)
     out = out.reshape(-1, 3)[:num_pix]
     return out.reshape(height, width, 3)
+
+
+def rasterize_features(
+    feats: GaussianFeatures,
+    height: int,
+    width: int,
+    config: RenderConfig,
+) -> jax.Array:
+    """Rasterize features along ``config.raster_path``. Returns (H, W, 3).
+
+    ``dense`` runs the oracle above; ``binned`` builds per-tile index lists
+    and blends each tile against its list only; ``pallas`` packs the features
+    and runs the tile-binned Pallas TPU kernel (forward-only).
+    """
+    if config.raster_path == "dense":
+        return rasterize(
+            feats,
+            height,
+            width,
+            background=config.background,
+            pixel_chunk=config.pixel_chunk,
+        )
+
+    if config.raster_path == "binned":
+        from repro.core import binning  # late: binning imports features only
+
+        bg = jnp.asarray(config.background, dtype=feats.color.dtype)
+        feats = sort_by_depth(feats)
+        bins = binning.bin_gaussians(
+            feats,
+            height,
+            width,
+            tile_size=config.tile_size,
+            capacity=config.tile_capacity,
+            tile_chunk=config.tile_chunk,
+        )
+        return binning.rasterize_binned(
+            feats, bins, height, width, bg, tile_chunk=config.tile_chunk
+        )
+
+    if config.raster_path == "pallas":
+        from repro.kernels.gaussian_features.ref import pack_features
+        from repro.kernels.tile_rasterize.ops import tile_rasterize_binned
+
+        bg = jnp.asarray(config.background, dtype=feats.color.dtype)
+        feats = sort_by_depth(feats)
+        return tile_rasterize_binned(
+            pack_features(feats),
+            height,
+            width,
+            bg,
+            tile_size=config.tile_size,
+            block_g=config.block_g,
+            max_blocks=config.max_blocks_per_tile,
+        )
+
+    raise ValueError(f"unknown raster_path {config.raster_path!r}")
 
 
 def accumulated_alpha(

@@ -1,16 +1,21 @@
-"""End-to-end 3DGS rendering: feature computation -> sort -> rasterize."""
+"""End-to-end 3DGS rendering: feature computation -> sort -> bin -> rasterize.
+
+All knobs travel in a single :class:`repro.core.config.RenderConfig`; the old
+loose kwargs (``feature_path=...``, ``sh_degree=...``, ...) are accepted
+through a deprecation shim that folds them into a config.
+"""
 
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+import warnings
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import features as feat_lib
 from repro.core import rasterize as rast_lib
 from repro.core.camera import Camera
+from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.gaussians import GaussianParams
 
 FEATURE_PATHS = {
@@ -19,41 +24,71 @@ FEATURE_PATHS = {
     "fused": feat_lib.compute_features_fused,
 }
 
+def _shim_config(config: RenderConfig | None, legacy: dict) -> RenderConfig:
+    """Fold deprecated loose kwargs into a RenderConfig (with a warning)."""
+    used = {k: v for k, v in legacy.items() if v is not UNSET}
+    if used:
+        warnings.warn(
+            f"render(..., {', '.join(sorted(used))}=...) is deprecated; pass "
+            "config=RenderConfig(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return as_config(config, **legacy)
+
+
+def compute_features(
+    g: GaussianParams, cam: Camera, config: RenderConfig
+) -> feat_lib.GaussianFeatures:
+    """Per-Gaussian screen-space features along ``config.feature_path``."""
+    if config.feature_path == "pallas":
+        # Imported lazily to keep core importable without the kernels package.
+        from repro.kernels.gaussian_features import ops as gf_ops
+
+        return gf_ops.gaussian_features(g, cam, sh_degree=config.sh_degree)
+    return FEATURE_PATHS[config.feature_path](
+        g, cam, sh_degree=config.sh_degree
+    )
+
 
 def render(
     g: GaussianParams,
     cam: Camera,
+    config: RenderConfig | None = None,
     *,
-    sh_degree: int = 3,
-    background: Sequence[float] = (0.0, 0.0, 0.0),
-    feature_path: str = "fused",
-    pixel_chunk: int | None = 4096,
+    sh_degree=UNSET,
+    background=UNSET,
+    feature_path=UNSET,
+    pixel_chunk=UNSET,
 ) -> jax.Array:
-    """Render one view. Returns (H, W, 3) in [0, ~1]."""
-    if feature_path == "pallas":
-        # Imported lazily to keep core importable without the kernels package.
-        from repro.kernels.gaussian_features import ops as gf_ops
+    """Render one view. Returns (H, W, 3) in [0, ~1].
 
-        feats = gf_ops.gaussian_features(g, cam, sh_degree=sh_degree)
-    else:
-        feats = FEATURE_PATHS[feature_path](g, cam, sh_degree=sh_degree)
-    return rast_lib.rasterize(
-        feats,
-        cam.height,
-        cam.width,
-        background=background,
-        pixel_chunk=pixel_chunk,
+    Args:
+      g: Gaussian cloud.
+      cam: camera (height/width are static ints on the camera).
+      config: full render configuration; defaults to
+        ``repro.core.config.DEFAULT_CONFIG`` (fused features, binned raster).
+      sh_degree, background, feature_path, pixel_chunk: DEPRECATED loose
+        kwargs, folded into ``config`` for backward compatibility.
+    """
+    cfg = _shim_config(
+        config,
+        dict(
+            sh_degree=sh_degree,
+            background=background,
+            feature_path=feature_path,
+            pixel_chunk=pixel_chunk,
+        ),
     )
+    feats = compute_features(g, cam, cfg)
+    return rast_lib.rasterize_features(feats, cam.height, cam.width, cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("sh_degree", "feature_path", "pixel_chunk"))
+@functools.partial(jax.jit, static_argnames=("config",))
 def render_jit(
     g: GaussianParams,
     cam: Camera,
-    sh_degree: int = 3,
-    feature_path: str = "fused",
-    pixel_chunk: int | None = 4096,
+    config: RenderConfig | None = None,
 ) -> jax.Array:
-    return render(
-        g, cam, sh_degree=sh_degree, feature_path=feature_path, pixel_chunk=pixel_chunk
-    )
+    """Jitted :func:`render`. ``config`` is static (hashable dataclass)."""
+    return render(g, cam, config)

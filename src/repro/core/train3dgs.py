@@ -15,6 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import RenderConfig
 from repro.core.gaussians import GaussianParams
 
 # ---------------------------------------------------------------------------
@@ -64,6 +65,26 @@ def gsplat_loss(
     l1 = jnp.mean(jnp.abs(rendered - target))
     dssim = (1.0 - ssim(rendered, target)) / 2.0
     return (1.0 - lambda_dssim) * l1 + lambda_dssim * dssim
+
+
+def render_loss(
+    params: GaussianParams,
+    cam,
+    target: jax.Array,
+    config: RenderConfig | None = None,
+    *,
+    lambda_dssim: float = 0.2,
+) -> jax.Array:
+    """Render one view under ``config`` and score it against ``target``.
+
+    The differentiable objective for a training step; the RenderConfig picks
+    the feature and raster paths (the binned path trains too — gradients flow
+    through the per-tile gathers).
+    """
+    from repro.core.render import render  # late: render imports this module's peers
+
+    img = render(params, cam, config)
+    return gsplat_loss(img, target, lambda_dssim=lambda_dssim)
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,7 @@ class SyntheticMultiView:
     num_views: int = 16
     image_size: int = 64
     seed: int = 0
+    render_config: Any = None  # repro.core.config.RenderConfig | None
 
     def __post_init__(self):
         key = jax.random.PRNGKey(self.seed)
@@ -84,7 +85,7 @@ class SyntheticMultiView:
     def targets(self) -> list[jax.Array]:
         from repro.core.render import render
 
-        return [render(self.gt, cam) for cam in self.cameras]
+        return [render(self.gt, cam, self.render_config) for cam in self.cameras]
 
     def view_at(self, step: int) -> int:
         return step % self.num_views

@@ -1,21 +1,27 @@
-"""Tile-based alpha-blending Pallas TPU kernel (3DGS rasterization).
+"""Tile-based alpha-blending Pallas TPU kernels (3DGS rasterization).
 
 Completes the paper's pipeline on-device (the paper generated images on the
 PS). Tiles of pixels stream depth-sorted Gaussian feature blocks through
 VMEM; the order-dependent front-to-back transmittance is carried in VMEM
 scratch across the sequentially-iterated innermost grid dimension.
 
-Grid: (num_pixel_tiles, num_gaussian_blocks)
-  pixel tile  = TILE_PIX flattened pixels (e.g. a 16x16 screen tile),
-  gaussian block = BG depth-consecutive Gaussians (lane dimension).
+Two variants share one blending body:
+
+* **dense** — grid (num_pixel_tiles, num_gaussian_blocks): every tile visits
+  every block (invisible Gaussians masked). The original kernel; retained as
+  the on-device oracle.
+* **binned** — grid (num_screen_tiles, max_blocks_per_tile): each 16x16
+  screen tile visits only the feature blocks on its per-tile block list
+  (built by ``repro.core.binning.tile_block_lists``). The list rides in as a
+  scalar-prefetch operand and drives the feature BlockSpec's ``index_map`` —
+  the TPU analogue of the reference CUDA rasterizer's per-tile ranges.
+  Padding entries index one extra all-zero block (mask row 0), so short
+  lists blend correctly without dynamic control flow.
 
 Within a block the exclusive cumulative product of (1 - alpha) along the
 lane axis resolves intra-block ordering; the running transmittance scratch
-resolves inter-block ordering. This is the dense variant (every tile visits
-every block, invisible Gaussians masked): a production splat would add the
-per-tile index lists of the reference CUDA rasterizer (`sort_in_loop`), which
-on TPU would become a gather of per-tile block lists — kept out of scope;
-the pure-JAX oracle `repro.core.rasterize` remains the correctness anchor.
+resolves inter-block ordering. The pure-JAX oracle ``repro.core.rasterize``
+remains the correctness anchor.
 """
 
 from __future__ import annotations
@@ -32,6 +38,49 @@ from repro.core.rasterize import ALPHA_EPS, ALPHA_MAX
 TILE_PIX = 256  # pixels per tile (flattened 16x16)
 DEFAULT_BLOCK_G = 128  # gaussians per block (lane dim)
 FEAT_ROWS = 12  # packed feature record rows (see gaussian_features kernel)
+
+
+def _blend_block(pix_ref, feat_ref, t_scr, acc_scr) -> None:
+    """Blend one (TILE_PIX, BG) feature block into the running scratch."""
+    px = pix_ref[:, 0:1]  # (TP, 1)
+    py = pix_ref[:, 1:2]
+    u = feat_ref[0:1, :]  # (1, BG)
+    v = feat_ref[1:2, :]
+    con_a = feat_ref[2:3, :]
+    con_b = feat_ref[3:4, :]
+    con_c = feat_ref[4:5, :]
+    radius = feat_ref[9:10, :]
+    opac = feat_ref[10:11, :]
+    mask = feat_ref[11:12, :]
+
+    dx = px - u  # (TP, BG)
+    dy = py - v
+    power = -0.5 * (con_a * dx * dx + con_c * dy * dy) - con_b * dx * dy
+    power = jnp.minimum(power, 0.0)
+    alpha = opac * jnp.exp(power) * mask
+    alpha = jnp.minimum(alpha, ALPHA_MAX)
+    # Same support as the oracle: alpha floor + 3-sigma box (|d| <= radius).
+    inside = (jnp.abs(dx) <= radius) & (jnp.abs(dy) <= radius)
+    alpha = jnp.where(inside & (alpha >= ALPHA_EPS), alpha, 0.0)
+
+    one_minus = 1.0 - alpha
+    cum = jnp.cumprod(one_minus, axis=1)  # (TP, BG)
+    excl = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+    w = alpha * excl * t_scr[...]  # (TP, BG)
+
+    colors = feat_ref[5:8, :]  # (3, BG)
+    rgb = jax.lax.dot_general(
+        w, colors, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TP, 3)
+    acc_scr[:, 0:3] = acc_scr[:, 0:3] + rgb
+    t_scr[...] = t_scr[...] * cum[:, -1:]
+
+
+def _finalize_out(bg_ref, out_ref, t_scr, acc_scr) -> None:
+    t = t_scr[...]
+    out = acc_scr[:, 0:3] + t * bg_ref[0, 0:3]
+    out_ref[:, 0:3] = out.astype(out_ref.dtype)
+    out_ref[:, 3:4] = t.astype(out_ref.dtype)
 
 
 def _raster_kernel(
@@ -51,42 +100,11 @@ def _raster_kernel(
         t_scr[...] = jnp.ones_like(t_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    px = pix_ref[:, 0:1]  # (TP, 1)
-    py = pix_ref[:, 1:2]
-    u = feat_ref[0:1, :]  # (1, BG)
-    v = feat_ref[1:2, :]
-    con_a = feat_ref[2:3, :]
-    con_b = feat_ref[3:4, :]
-    con_c = feat_ref[4:5, :]
-    opac = feat_ref[10:11, :]
-    mask = feat_ref[11:12, :]
-
-    dx = px - u  # (TP, BG)
-    dy = py - v
-    power = -0.5 * (con_a * dx * dx + con_c * dy * dy) - con_b * dx * dy
-    power = jnp.minimum(power, 0.0)
-    alpha = opac * jnp.exp(power) * mask
-    alpha = jnp.minimum(alpha, ALPHA_MAX)
-    alpha = jnp.where(alpha < ALPHA_EPS, 0.0, alpha)
-
-    one_minus = 1.0 - alpha
-    cum = jnp.cumprod(one_minus, axis=1)  # (TP, BG)
-    excl = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
-    w = alpha * excl * t_scr[...]  # (TP, BG)
-
-    colors = feat_ref[5:8, :]  # (3, BG)
-    rgb = jax.lax.dot_general(
-        w, colors, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (TP, 3)
-    acc_scr[:, 0:3] = acc_scr[:, 0:3] + rgb
-    t_scr[...] = t_scr[...] * cum[:, -1:]
+    _blend_block(pix_ref, feat_ref, t_scr, acc_scr)
 
     @pl.when(j == num_blocks - 1)
-    def _finalize():
-        t = t_scr[...]
-        out = acc_scr[:, 0:3] + t * bg_ref[0, 0:3]
-        out_ref[:, 0:3] = out.astype(out_ref.dtype)
-        out_ref[:, 3:4] = t.astype(out_ref.dtype)
+    def _fin():
+        _finalize_out(bg_ref, out_ref, t_scr, acc_scr)
 
 
 def build_pallas_call(
@@ -97,6 +115,7 @@ def build_pallas_call(
     interpret: bool = False,
     dtype=jnp.float32,
 ):
+    """Dense variant: every pixel tile visits every Gaussian block."""
     if num_pix % TILE_PIX:
         raise ValueError(f"{num_pix=} must divide TILE_PIX={TILE_PIX}")
     if num_gaussians % block_g:
@@ -119,5 +138,79 @@ def build_pallas_call(
             pltpu.VMEM((TILE_PIX, 1), jnp.float32),
             pltpu.VMEM((TILE_PIX, 4), jnp.float32),
         ],
+        interpret=interpret,
+    )
+
+
+def _binned_raster_kernel(
+    blist_ref,  # (num_tiles, max_blocks) int32 scalar-prefetch block list
+    pix_ref,  # (TILE_PIX, 2) pixel centers (screen-tile order)
+    feat_ref,  # (FEAT_ROWS, BG) block selected by the tile's list
+    bg_ref,  # (1, 4)
+    out_ref,  # (TILE_PIX, 4)
+    t_scr,
+    acc_scr,
+    *,
+    max_blocks: int,
+):
+    del blist_ref  # consumed by the BlockSpec index_map, not the body
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        t_scr[...] = jnp.ones_like(t_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    _blend_block(pix_ref, feat_ref, t_scr, acc_scr)
+
+    @pl.when(j == max_blocks - 1)
+    def _fin():
+        _finalize_out(bg_ref, out_ref, t_scr, acc_scr)
+
+
+def build_binned_pallas_call(
+    num_pix: int,
+    num_gaussians_padded: int,
+    num_tiles: int,
+    max_blocks: int,
+    *,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Binned variant: per-tile block lists drive the feature index_map.
+
+    Expects the packed feature operand to carry ``num_gaussians_padded``
+    lanes = (num_blocks + 1) * block_g, where the LAST block is all zeros —
+    the target of sentinel list entries.
+    """
+    if num_pix != num_tiles * TILE_PIX:
+        raise ValueError(f"{num_pix=} must equal {num_tiles=} * {TILE_PIX}")
+    if num_gaussians_padded % block_g:
+        raise ValueError(f"{num_gaussians_padded=} must divide {block_g=}")
+    grid = (num_tiles, max_blocks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_PIX, 2), lambda t, j, blist: (t, 0)),
+            # The per-tile block list picks which feature block lands in VMEM.
+            pl.BlockSpec(
+                (FEAT_ROWS, block_g), lambda t, j, blist: (0, blist[t, j])
+            ),
+            pl.BlockSpec((1, 4), lambda t, j, blist: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_PIX, 4), lambda t, j, blist: (t, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_PIX, 1), jnp.float32),
+            pltpu.VMEM((TILE_PIX, 4), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        functools.partial(_binned_raster_kernel, max_blocks=max_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_pix, 4), dtype),
         interpret=interpret,
     )

@@ -1,4 +1,10 @@
-"""Jitted public wrapper: full-image Pallas rasterization from packed features."""
+"""Jitted public wrappers: full-image Pallas rasterization from packed features.
+
+``tile_rasterize`` is the dense on-device oracle (every tile visits every
+block). ``tile_rasterize_binned`` is the production path: screen tiles visit
+only the blocks on their per-tile list (``repro.core.binning``), which the
+kernel consumes through a scalar-prefetched BlockSpec index map.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +13,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import binning as bin_lib
 from repro.core import rasterize as rast_lib
+from repro.kernels.gaussian_features.ref import unpack_features
 from repro.kernels.tile_rasterize import kernel as k
 
 
@@ -25,7 +33,7 @@ def tile_rasterize(
     block_g: int = k.DEFAULT_BLOCK_G,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Rasterize packed depth-sorted features to an (H, W, 3) image.
+    """Dense kernel: rasterize packed depth-sorted features to (H, W, 3).
 
     Pads pixels to full tiles and Gaussians to full blocks (mask row zeroed on
     the padding so blending is unaffected).
@@ -54,3 +62,85 @@ def tile_rasterize(
     )
     out = call(pix, packed, bg4)  # (P, 4)
     return out[:num_pix, 0:3].reshape(height, width, 3)
+
+
+def _tile_order_pixels(height_pad: int, width_pad: int, tile: int) -> jax.Array:
+    """Pixel centers of an H_pad x W_pad image in screen-tile-major order."""
+    pix = rast_lib.pixel_grid(height_pad, width_pad)
+    pix = pix.reshape(height_pad // tile, tile, width_pad // tile, tile, 2)
+    return pix.transpose(0, 2, 1, 3, 4).reshape(-1, 2)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "height", "width", "tile_size", "block_g", "max_blocks", "interpret"
+    ),
+)
+def tile_rasterize_binned(
+    packed_sorted: jax.Array,
+    height: int,
+    width: int,
+    background: jax.Array,
+    *,
+    tile_size: int = 16,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    max_blocks: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Binned kernel: each screen tile blends only its live feature blocks.
+
+    The per-tile block lists are built in JAX (``binning.tile_block_lists``)
+    from the packed record's uv/radius/mask rows and handed to the kernel as
+    a scalar-prefetch operand; sentinel entries point at one extra all-zero
+    block appended past the real features.
+
+    ``max_blocks`` statically caps each tile's list length — and with it the
+    kernel's inner grid dimension, the actual compute saving. None keeps the
+    worst-case bound (exact everywhere, but every tile pays the full trip
+    count; only DMA of repeated sentinel blocks is saved). On overflow the
+    front-most blocks win, mirroring ``tile_capacity``.
+    """
+    if tile_size * tile_size != k.TILE_PIX:
+        raise ValueError(
+            f"pallas raster path requires tile_size^2 == {k.TILE_PIX}, "
+            f"got tile_size={tile_size}"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    num_g = packed_sorted.shape[1]
+    bg4 = jnp.concatenate([background, jnp.zeros((1,), background.dtype)])[None, :]
+
+    feats = unpack_features(packed_sorted)
+    block_ids, num_blocks, max_blocks = bin_lib.tile_block_lists(
+        feats,
+        height,
+        width,
+        tile_size=tile_size,
+        block_g=block_g,
+        max_blocks=max_blocks,
+    )
+
+    # Features: pad the real lanes to whole blocks, then append the all-zero
+    # sentinel block (index num_blocks).
+    pad_g = num_blocks * block_g - num_g
+    packed = jnp.pad(packed_sorted, ((0, 0), (0, pad_g + block_g)))
+
+    tiles_y, tiles_x = bin_lib.tile_grid_shape(height, width, tile_size)
+    num_tiles = tiles_y * tiles_x
+    h_pad, w_pad = tiles_y * tile_size, tiles_x * tile_size
+    pix = _tile_order_pixels(h_pad, w_pad, tile_size)
+
+    call = k.build_binned_pallas_call(
+        num_tiles * k.TILE_PIX,
+        (num_blocks + 1) * block_g,
+        num_tiles,
+        max_blocks,
+        block_g=block_g,
+        interpret=interpret,
+        dtype=packed.dtype,
+    )
+    out = call(block_ids, pix, packed, bg4)  # (T*TILE_PIX, 4)
+    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
+    return img[:height, :width]

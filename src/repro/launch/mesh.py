@@ -13,24 +13,27 @@ Axis semantics:
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (tests / small-scale runs)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(max_devices: int | None = None) -> Mesh:
     """Largest (data, model)-style mesh available on the current host —
     used by CPU integration tests; falls back to (1, 1)."""
+    import jax
+
     n = len(jax.devices())
     if max_devices:
         n = min(n, max_devices)

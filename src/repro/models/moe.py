@@ -211,8 +211,10 @@ def moe_block(cfg: ModelConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.A
     w_dp = tuple(ctx.rules.get("win", ()))
     w_dp = tuple(a for a in w_dp if a in mesh.shape)
 
+    from repro.compat import shard_map
+
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(
             # x enters with its storage sharding (batch on dp, seq on model):

@@ -1,0 +1,194 @@
+"""Tile-binning subsystem: binned raster == dense oracle, list invariants,
+overflow behavior, gradient equivalence, RenderConfig plumbing."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RenderConfig,
+    compute_features_fused,
+    look_at_camera,
+    random_gaussians,
+    render,
+    render_jit,
+)
+from repro.core.binning import bin_gaussians, tile_block_lists
+from repro.core.rasterize import sort_by_depth
+
+
+def _scene(n=256, seed=0, w=48, h=48, base_scale=0.03, extent=2.0):
+    g = random_gaussians(
+        jax.random.PRNGKey(seed), n, base_scale=base_scale, extent=extent
+    )
+    cam = look_at_camera((0, 1.0, -6.0), (0, 0, 0), width=w, height=h)
+    return g, cam
+
+
+def _dense_vs_binned(g, cam, **cfg_kw):
+    dense = render(g, cam, RenderConfig(raster_path="dense"))
+    cfg = RenderConfig(
+        raster_path="binned", tile_capacity=g.num_gaussians, **cfg_kw
+    )
+    binned = render(g, cam, cfg)
+    return np.asarray(dense), np.asarray(binned)
+
+
+class TestBinnedMatchesDense:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_random_scenes(self, seed):
+        g, cam = _scene(n=300, seed=seed)
+        dense, binned = _dense_vs_binned(g, cam)
+        np.testing.assert_allclose(binned, dense, atol=1e-5)
+
+    def test_border_straddling_gaussians(self):
+        """Large-radius Gaussians overlap many tiles and cross every border."""
+        g, cam = _scene(n=128, seed=5, base_scale=0.3)
+        dense, binned = _dense_vs_binned(g, cam)
+        np.testing.assert_allclose(binned, dense, atol=1e-5)
+
+    def test_offscreen_gaussians(self):
+        g, cam = _scene(n=128, seed=6, extent=12.0)  # most miss the frustum
+        feats = compute_features_fused(g, cam)
+        assert float(feats.mask.sum()) < g.num_gaussians  # premise
+        dense, binned = _dense_vs_binned(g, cam)
+        np.testing.assert_allclose(binned, dense, atol=1e-5)
+
+    def test_partial_tiles(self):
+        """Image size not divisible by tile_size: crop path + edge tiles."""
+        g, cam = _scene(n=200, seed=7, w=50, h=34)
+        dense, binned = _dense_vs_binned(g, cam)
+        np.testing.assert_allclose(binned, dense, atol=1e-5)
+
+    def test_tile_chunking_invariant(self):
+        g, cam = _scene(n=200, seed=8)
+        _, a = _dense_vs_binned(g, cam, tile_chunk=None)
+        _, b = _dense_vs_binned(g, cam, tile_chunk=2)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+    def test_pallas_raster_path(self):
+        g, cam = _scene(n=300, seed=9, w=40, h=56)
+        dense = render(g, cam, RenderConfig(raster_path="dense"))
+        pallas = render(g, cam, RenderConfig(raster_path="pallas"))
+        np.testing.assert_allclose(
+            np.asarray(pallas), np.asarray(dense), rtol=1e-4, atol=1e-5
+        )
+
+    def test_pallas_max_blocks_cap(self):
+        """Capping the per-tile block list keeps the front-most blocks and
+        degrades gracefully (finite image, background may bleed through)."""
+        g, cam = _scene(n=300, seed=10)
+        img = render(
+            g, cam, RenderConfig(raster_path="pallas", max_blocks_per_tile=1)
+        )
+        assert np.isfinite(np.asarray(img)).all()
+
+
+class TestTileBins:
+    def test_list_invariants(self):
+        g, cam = _scene(n=200, seed=1)
+        feats = sort_by_depth(compute_features_fused(g, cam))
+        bins = bin_gaussians(feats, cam.height, cam.width, capacity=64)
+        idx = np.asarray(bins.indices)
+        count = np.asarray(bins.count)
+        n = g.num_gaussians
+        assert bins.tiles_y == 3 and bins.tiles_x == 3  # 48/16
+        for t in range(bins.num_tiles):
+            k = count[t]
+            valid = idx[t, :k]
+            assert (valid < n).all()
+            assert (np.diff(valid) > 0).all()  # ascending = front-to-back
+            assert (idx[t, k:] == n).all()  # sentinel padding
+
+    def test_overflow_keeps_front_most(self):
+        g, cam = _scene(n=300, seed=2, base_scale=0.3)  # heavy overlap
+        feats = sort_by_depth(compute_features_fused(g, cam))
+        full = bin_gaussians(feats, cam.height, cam.width, capacity=300)
+        tiny = bin_gaussians(feats, cam.height, cam.width, capacity=8)
+        assert bool(np.asarray(tiny.overflowed).any())  # premise
+        # The tiny list must be the PREFIX of the full list (front-most win).
+        f = np.asarray(full.indices)
+        t = np.asarray(tiny.indices)
+        for i in range(full.num_tiles):
+            k = min(8, int(np.asarray(full.count)[i]))
+            np.testing.assert_array_equal(t[i, :k], f[i, :k])
+
+    def test_overflow_renders_finite_and_conservative(self):
+        """Dropping back-most Gaussians can only let more background through;
+        the image stays finite and valid."""
+        g, cam = _scene(n=300, seed=3, base_scale=0.3)
+        img = render(
+            g,
+            cam,
+            RenderConfig(raster_path="binned", tile_capacity=8),
+        )
+        assert np.isfinite(np.asarray(img)).all()
+
+    def test_block_lists_cover_index_lists(self):
+        """Every Gaussian on a tile's index list lives in a block on that
+        tile's block list (the kernel sees a superset of the exact list)."""
+        g, cam = _scene(n=300, seed=4)
+        feats = sort_by_depth(compute_features_fused(g, cam))
+        bins = bin_gaussians(feats, cam.height, cam.width, capacity=300)
+        block_ids, num_blocks, _ = tile_block_lists(
+            feats, cam.height, cam.width, block_g=128
+        )
+        idx = np.asarray(bins.indices)
+        count = np.asarray(bins.count)
+        blocks = np.asarray(block_ids)
+        for t in range(bins.num_tiles):
+            need = set(idx[t, : count[t]] // 128)
+            have = set(b for b in blocks[t] if b < num_blocks)
+            assert need <= have, (t, need - have)
+
+
+class TestGradientEquivalence:
+    def test_binned_grads_match_dense(self):
+        g, cam = _scene(n=96, seed=0, w=32, h=32)
+        target = jnp.linspace(0, 1, 32 * 32 * 3).reshape(32, 32, 3)
+
+        def loss(gg, cfg):
+            return jnp.mean((render(gg, cam, cfg) - target) ** 2)
+
+        g_dense = jax.grad(loss)(
+            g, RenderConfig(raster_path="dense", pixel_chunk=None)
+        )
+        g_binned = jax.grad(loss)(
+            g, RenderConfig(raster_path="binned", tile_capacity=96)
+        )
+        for name in ["positions", "quats", "log_scales", "sh", "opacity_logit"]:
+            a = np.asarray(getattr(g_dense, name))
+            b = np.asarray(getattr(g_binned, name))
+            assert np.isfinite(b).all(), name
+            np.testing.assert_allclose(b, a, rtol=1e-4, atol=1e-6, err_msg=name)
+
+
+class TestRenderConfig:
+    def test_hashable_and_jit_static(self):
+        cfg = RenderConfig(background=[0.1, 0.2, 0.3])  # list normalizes
+        assert hash(cfg) == hash(RenderConfig(background=(0.1, 0.2, 0.3)))
+        g, cam = _scene(n=64, w=32, h=32)
+        img = render_jit(g, cam, cfg)
+        assert img.shape == (32, 32, 3)
+
+    def test_invalid_paths_rejected(self):
+        with pytest.raises(ValueError):
+            RenderConfig(feature_path="bogus")
+        with pytest.raises(ValueError):
+            RenderConfig(raster_path="bogus")
+
+    def test_legacy_kwargs_shim_warns_and_matches(self):
+        g, cam = _scene(n=64, w=32, h=32)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            old = render(g, cam, feature_path="staged", pixel_chunk=None)
+        assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+        new = render(
+            g,
+            cam,
+            RenderConfig(feature_path="staged", pixel_chunk=None),
+        )
+        np.testing.assert_allclose(np.asarray(old), np.asarray(new), atol=1e-7)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import abstract_mesh
 from repro.distributed.compression import dequantize_int8, quantize_int8
 from repro.distributed.sharding import RULE_SETS, ShardingContext
 
@@ -13,7 +14,7 @@ from repro.distributed.sharding import RULE_SETS, ShardingContext
 class TestShardingRules:
     def _ctx(self, shape=(4, 2), axes=("data", "model"), mode="fsdp_sp"):
         # AbstractMesh: rule logic only needs axis sizes, not real devices.
-        mesh = jax.sharding.AbstractMesh(shape, axes)
+        mesh = abstract_mesh(shape, axes)
         return ShardingContext(mesh=mesh, rules=RULE_SETS[mode])
 
     def test_divisible_dims_shard(self):
@@ -34,7 +35,7 @@ class TestShardingRules:
         assert parts.count("model") <= 1
 
     def test_multi_axis_group(self):
-        mesh = jax.sharding.AbstractMesh((1, 2, 2), ("pod", "data", "model"))
+        mesh = abstract_mesh((1, 2, 2), ("pod", "data", "model"))
         ctx = ShardingContext(mesh=mesh, rules=RULE_SETS["fsdp_sp"])
         spec = ctx.spec_for((8, 4), ("act_batch", None))
         assert spec[0] in (("pod", "data"), "data", ("data",))
@@ -69,10 +70,12 @@ class TestMultiDevice:
             """
             import jax, jax.numpy as jnp, numpy as np, functools
             from jax.sharding import PartitionSpec as P
+            from repro.compat import shard_map
             from repro.distributed.compression import compressed_psum
-            mesh = jax.make_mesh((4,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((4,), ("dp",))
 
-            @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
+            @functools.partial(shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
                                out_specs=(P("dp"), P("dp")))
             def sync(g, err):
                 s, new_err = compressed_psum(g, "dp", err)
@@ -108,7 +111,8 @@ class TestMultiDevice:
             g = random_gaussians(jax.random.PRNGKey(0), 256)
             cam = look_at_camera((0, 1.0, -6.0), (0,0,0), width=32, height=32)
             want = render(g, cam)
-            mesh = jax.make_mesh((4,), ("gs",), axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((4,), ("gs",))
             rr = sharded_render(mesh, ("gs",), ("gs",))
             got = jax.jit(rr)(g, cam, jnp.zeros(3))
             np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -2,11 +2,10 @@
 
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import params as P
@@ -61,8 +60,7 @@ class TestDispatch:
             c = expert_capacity(cfg, t)
             assert c % 8 == 0 and c >= 8
 
-    @hypothesis.given(seed=st.integers(0, 20))
-    @hypothesis.settings(deadline=None, max_examples=8)
+    @pytest.mark.parametrize("seed", [0, 3, 7, 11, 14, 17, 19, 20])
     def test_gates_normalized(self, seed):
         cfg, lp = _setup(seed=seed)
         x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, cfg.d_model))
@@ -86,8 +84,8 @@ class TestDispatch:
 class TestSortBasedRouting:
     """The argsort position-in-expert must equal the one-hot-cumsum reference."""
 
-    @hypothesis.given(seed=st.integers(0, 50), e=st.sampled_from([4, 8, 16]))
-    @hypothesis.settings(deadline=None, max_examples=20)
+    @pytest.mark.parametrize("seed", [0, 5, 13, 27, 41, 50])
+    @pytest.mark.parametrize("e", [4, 8, 16])
     def test_matches_cumsum_reference(self, seed, e):
         from repro.models.moe import _pos_in_expert
 

@@ -1,23 +1,17 @@
 """Rasterizer correctness + property tests (blending invariants)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    RenderConfig,
     compute_features_staged,
     look_at_camera,
     random_gaussians,
     render,
 )
-from repro.core.rasterize import (
-    accumulated_alpha,
-    pixel_grid,
-    rasterize,
-    sort_by_depth,
-)
+from repro.core.rasterize import accumulated_alpha, rasterize, sort_by_depth
 from repro.core.train3dgs import gsplat_loss, ssim
 
 
@@ -37,7 +31,7 @@ class TestBlending:
     def test_background_fills_empty_pixels(self):
         g, cam = _scene(n=1)
         g.opacity_logit = jnp.full_like(g.opacity_logit, -30.0)  # invisible
-        img = render(g, cam, background=(0.25, 0.5, 0.75))
+        img = render(g, cam, RenderConfig(background=(0.25, 0.5, 0.75)))
         np.testing.assert_allclose(img[0, 0], [0.25, 0.5, 0.75], atol=1e-5)
         np.testing.assert_allclose(img[-1, -1], [0.25, 0.5, 0.75], atol=1e-5)
 
@@ -70,9 +64,10 @@ class TestBlending:
     def test_gradients_flow_to_all_params(self):
         g, cam = _scene(n=64, size=32)
         target = jnp.zeros((32, 32, 3))
+        cfg = RenderConfig(pixel_chunk=None)
 
         def loss(g):
-            return jnp.mean((render(g, cam, pixel_chunk=None) - target) ** 2)
+            return jnp.mean((render(g, cam, cfg) - target) ** 2)
 
         grads = jax.grad(loss)(g)
         for name in ["positions", "quats", "log_scales", "sh", "opacity_logit"]:

@@ -13,8 +13,8 @@ class TestParserOnKnownWorkloads:
             sys.path.insert(0, "/root/repo")
             from jax.sharding import PartitionSpec as P, NamedSharding
             from benchmarks import roofline as R
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((2, 4), ("data", "model"))
             L = 7
             def step(w, x):
                 def body(c, _):

@@ -7,13 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import look_at_camera, random_gaussians, render
+from repro.core import RenderConfig, look_at_camera, random_gaussians, render
 from repro.core.train3dgs import (
-    DensifyConfig,
     accumulate_grad_stats,
     densify_and_prune,
-    gsplat_loss,
     init_densify_state,
+    render_loss,
     reset_opacity,
 )
 
@@ -94,10 +93,12 @@ def test_end_to_end_fit_loss_drops():
     )
     opt = adamw_init(g)
 
+    cfg = RenderConfig(pixel_chunk=None)
+
     @jax.jit
     def step(g, opt):
         loss, grads = jax.value_and_grad(
-            lambda gg: gsplat_loss(render(gg, cam, pixel_chunk=None), target)
+            lambda gg: render_loss(gg, cam, target, cfg)
         )(g)
         g, opt, _ = adamw_update(ocfg, g, grads, opt)
         return g, opt, loss
