@@ -1,12 +1,18 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
-Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract).
+Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
+writes ``BENCH_PR2.json`` — the machine-readable perf trajectory (render
+speedups, max-error, overflow rate, lane occupancy) — to the repo root.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import traceback
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR2.json"
 
 
 def main() -> None:
@@ -18,6 +24,7 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
+    metrics: dict = {}
     for mod in (
         bench_table1_kernels,
         bench_table2_throughput,
@@ -25,11 +32,16 @@ def main() -> None:
         bench_lm_steps,
     ):
         try:
-            mod.main()
+            section = mod.main()
         except Exception:
             print(f"# {mod.__name__} FAILED", file=sys.stderr)
             traceback.print_exc()
             raise
+        if isinstance(section, dict):
+            metrics[mod.__name__.removeprefix("benchmarks.")] = section
+
+    BENCH_JSON.write_text(json.dumps(metrics, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {BENCH_JSON}", file=sys.stderr)
 
 
 if __name__ == "__main__":

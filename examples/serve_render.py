@@ -21,7 +21,9 @@ def main() -> None:
     ap.add_argument("--gaussians", type=int, default=4096)
     ap.add_argument("--image-size", type=int, default=96)
     ap.add_argument(
-        "--raster-path", choices=("dense", "binned", "pallas"), default="binned"
+        "--raster-path",
+        choices=("dense", "binned", "pallas", "pallas_binned"),
+        default="binned",
     )
     ap.add_argument("--tile-capacity", type=int, default=512)
     args = ap.parse_args()

@@ -32,7 +32,9 @@ def main() -> None:
     ap.add_argument("--image-size", type=int, default=48)
     ap.add_argument("--densify-every", type=int, default=100)
     ap.add_argument(
-        "--raster-path", choices=("dense", "binned"), default="binned"
+        "--raster-path",
+        choices=("dense", "binned", "pallas_binned"),
+        default="binned",
     )
     args = ap.parse_args()
 

@@ -11,8 +11,22 @@ from __future__ import annotations
 import jax
 
 if hasattr(jax, "shard_map"):
-    shard_map = jax.shard_map
-else:  # jax <= 0.4.x
+    import inspect
+
+    _raw_shard_map = jax.shard_map
+    # Newer jax renamed check_rep -> check_vma; callers here use the old
+    # spelling, normalized to whichever kwarg this jax accepts.
+    _CHECK_KW = (
+        "check_rep"
+        if "check_rep" in inspect.signature(_raw_shard_map).parameters
+        else "check_vma"
+    )
+
+    def shard_map(*args, check_rep=None, **kw):
+        if check_rep is not None:
+            kw[_CHECK_KW] = check_rep
+        return _raw_shard_map(*args, **kw)
+else:  # jax <= 0.4.x: check_rep is the native kwarg
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")

@@ -1,6 +1,12 @@
 """Core 3DGS library — the paper's contribution as composable JAX modules."""
 
-from repro.core.binning import TileBins, bin_gaussians, rasterize_binned
+from repro.core.binning import (
+    TileBins,
+    bin_gaussians,
+    compact_tile_features,
+    lane_occupancy_stats,
+    rasterize_binned,
+)
 from repro.core.camera import Camera, look_at_camera, orbit_cameras
 from repro.core.config import DEFAULT_CONFIG, RenderConfig
 from repro.core.features import (
@@ -9,7 +15,11 @@ from repro.core.features import (
     compute_features_naive,
     compute_features_staged,
 )
-from repro.core.gaussians import GaussianParams, random_gaussians
+from repro.core.gaussians import (
+    GaussianParams,
+    clustered_gaussians,
+    random_gaussians,
+)
 from repro.core.render import render, render_jit
 
 __all__ = [
@@ -20,9 +30,12 @@ __all__ = [
     "RenderConfig",
     "TileBins",
     "bin_gaussians",
+    "clustered_gaussians",
+    "compact_tile_features",
     "compute_features_fused",
     "compute_features_naive",
     "compute_features_staged",
+    "lane_occupancy_stats",
     "look_at_camera",
     "orbit_cameras",
     "random_gaussians",

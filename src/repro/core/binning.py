@@ -206,6 +206,16 @@ def _tile_pixel_offsets(tile_size: int, dtype=jnp.float32) -> jax.Array:
     return jnp.stack([xs.reshape(-1), ys.reshape(-1)], axis=-1)
 
 
+# A chunk scan stops once every pixel's transmittance is below this: any
+# remaining contribution is smaller than one u8 quantization step.
+EARLY_EXIT_EPS = 1.0 / 255.0
+
+# Scan-chunk width of the binned blender's per-tile list traversal (the
+# early-exit granularity). Implementation detail, not a config knob: results
+# are chunk-size invariant up to f32 reassociation.
+SCAN_CHUNK = 64
+
+
 def rasterize_binned(
     feats_sorted: GaussianFeatures,
     bins: TileBins,
@@ -214,12 +224,26 @@ def rasterize_binned(
     background: jax.Array,
     *,
     tile_chunk: int | None = 64,
+    early_exit: bool = True,
 ) -> jax.Array:
     """Blend each tile against its index list only. Returns (H, W, 3).
 
     ``feats_sorted`` must be the same depth-sorted features the bins were
     built from. Gradients flow through the per-tile feature gather; the
     indices themselves are discrete.
+
+    The per-tile list is traversed in :data:`SCAN_CHUNK`-wide chunks
+    (front-to-back); a chunk is skipped entirely once
+
+    * the remaining entries of every tile in the chunk are sentinels (exact:
+      sentinels gather all-zero records and blend as alpha 0), or
+    * with ``early_exit``, every pixel's transmittance has saturated below
+      :data:`EARLY_EXIT_EPS` — front-most-first ordering means whatever is
+      left cannot move a u8 pixel by a quantization step.
+
+    The skip is a ``lax.cond`` on a scalar predicate (aggregated over the
+    ``tile_chunk`` tiles blended together), so it is a real compute saving
+    under ``jit`` and remains reverse-mode differentiable.
     """
     from repro.core import rasterize as rast_lib  # late: avoid import cycle
 
@@ -228,35 +252,71 @@ def rasterize_binned(
     num_tiles = bins.num_tiles
     feats_pad = _pad_features(feats_sorted)
     offsets = _tile_pixel_offsets(tile, dtype=feats_sorted.uv.dtype)
+    sentinel = jnp.int32(feats_sorted.uv.shape[0])
+
+    k = bins.capacity
+    sc = min(SCAN_CHUNK, k)
+    pad_k = (-k) % sc
+    idx_all = jnp.pad(bins.indices, ((0, 0), (0, pad_k)), constant_values=sentinel)
+    num_scan = (k + pad_k) // sc
 
     tile_ids = jnp.arange(num_tiles, dtype=jnp.int32)
     origin = jnp.stack(
         [(tile_ids % tiles_x) * tile, (tile_ids // tiles_x) * tile], axis=-1
     ).astype(feats_sorted.uv.dtype)  # (T, 2)
 
-    def blend_tiles(idx: jax.Array, org: jax.Array) -> jax.Array:
-        """((C, K) indices, (C, 2) origins) -> (C, tile^2, 3) RGB."""
-        tile_feats = jax.tree.map(lambda x: x[idx], feats_pad)  # (C, K, ...)
+    def blend_tiles(idx: jax.Array, org: jax.Array, count: jax.Array) -> jax.Array:
+        """((C, S*sc) indices, (C, 2) origins, (C,) counts) -> (C, tile^2, 3)."""
+        c_tiles = idx.shape[0]
         pix = org[:, None, :] + offsets[None, :, :]  # (C, tp, 2)
-        # One blending implementation for both paths: the dense oracle's
-        # pixel blender, vmapped over tiles. Whatever support contract
-        # _pixel_alphas defines, the binned path inherits verbatim.
-        return jax.vmap(rast_lib.rasterize_pixels, in_axes=(0, 0, None))(
-            pix, tile_feats, background
+        idx_chunks = idx.reshape(c_tiles, num_scan, sc).transpose(1, 0, 2)
+
+        def step(carry, xs):
+            t_run, acc = carry  # (C, tp, 1), (C, tp, 3)
+            s, idx_c = xs  # scalar step, (C, sc) indices
+            live = jnp.any(count > s * sc)
+            if early_exit:
+                live = live & (jnp.max(t_run) >= EARLY_EXIT_EPS)
+
+            def blend(c):
+                t_run, acc = c
+                tile_feats = jax.tree.map(lambda x: x[idx_c], feats_pad)
+                # The dense oracle's alpha model, vmapped over tiles: the
+                # binned path inherits _pixel_alphas' support contract
+                # (alpha floor + 3-sigma box) verbatim.
+                alpha = jax.vmap(rast_lib._pixel_alphas)(pix, tile_feats)
+                cum = jnp.cumprod(1.0 - alpha, axis=-1)  # (C, tp, sc)
+                t_prev = jnp.concatenate(
+                    [jnp.ones_like(cum[..., :1]), cum[..., :-1]], axis=-1
+                )
+                w = alpha * t_prev * t_run  # (C, tp, sc)
+                rgb = jnp.einsum("cps,csk->cpk", w, tile_feats.color)
+                return t_run * cum[..., -1:], acc + rgb
+
+            return jax.lax.cond(live, blend, lambda c: c, (t_run, acc)), None
+
+        init = (
+            jnp.ones((c_tiles, tile * tile, 1), feats_sorted.uv.dtype),
+            jnp.zeros((c_tiles, tile * tile, 3), feats_sorted.uv.dtype),
         )
+        (t_fin, acc), _ = jax.lax.scan(
+            step, init, (jnp.arange(num_scan, dtype=jnp.int32), idx_chunks)
+        )
+        return acc + t_fin * background[None, None, :]
 
     if tile_chunk is None or tile_chunk >= num_tiles:
-        out = blend_tiles(bins.indices, origin)  # (T, tp, 3)
+        out = blend_tiles(idx_all, origin, bins.count)  # (T, tp, 3)
     else:
         pad = (-num_tiles) % tile_chunk
-        sentinel = jnp.int32(feats_sorted.uv.shape[0])
-        idx_p = jnp.pad(bins.indices, ((0, pad), (0, 0)), constant_values=sentinel)
+        idx_p = jnp.pad(idx_all, ((0, pad), (0, 0)), constant_values=sentinel)
         org_p = jnp.pad(origin, ((0, pad), (0, 0)))
+        cnt_p = jnp.pad(bins.count, (0, pad))
         out = jax.lax.map(
             lambda args: blend_tiles(*args),
             (
-                idx_p.reshape(-1, tile_chunk, bins.capacity),
+                idx_p.reshape(-1, tile_chunk, k + pad_k),
                 org_p.reshape(-1, tile_chunk, 2),
+                cnt_p.reshape(-1, tile_chunk),
             ),
         )
         out = out.reshape(-1, tile * tile, 3)[:num_tiles]
@@ -267,6 +327,101 @@ def rasterize_binned(
         tiles_y * tile, tiles_x * tile, 3
     )
     return img[:height, :width]
+
+
+# ---------------------------------------------------------------------------
+# Gather-to-compact — dense per-tile feature tensors (the Pallas kernel diet)
+# ---------------------------------------------------------------------------
+
+# Compact feature record: uv(2) conic(3) color(3) radius opacity mask.
+# Depth is deliberately absent — the lists are depth-ordered by construction.
+COMPACT_FEAT_DIM = 11
+
+
+def compact_tile_features(
+    feats_sorted: GaussianFeatures, bins: TileBins
+) -> jax.Array:
+    """Gather each tile's index list into a dense (T, K, 11) feature tensor.
+
+    Row ``[t, r]`` holds the features of the ``r``-th front-most Gaussian
+    overlapping tile ``t`` for ``r < count[t]``, and all-zero sentinel
+    records past the count (zero mask -> zero alpha, so consumers blend the
+    tensor verbatim). This is the gather-to-compact stage: a kernel that
+    streams rows of this tensor holds a *live* Gaussian in every lane,
+    instead of blending masked-out lanes at 128-wide block granularity.
+
+    Differentiable w.r.t. the features (the gather's VJP scatter-adds
+    per-tile gradients back to per-Gaussian records, accumulating across
+    tiles); the indices are discrete.
+    """
+    feats_pad = _pad_features(feats_sorted)
+    g = jax.tree.map(lambda x: x[bins.indices], feats_pad)  # (T, K, ...)
+    return jnp.concatenate(
+        [
+            g.uv,
+            g.conic,
+            g.color,
+            g.radius[..., None],
+            g.opacity[..., None],
+            g.mask[..., None],
+        ],
+        axis=-1,
+    )
+
+
+def lane_occupancy_stats(
+    feats_sorted: GaussianFeatures,
+    height: int,
+    width: int,
+    *,
+    tile_size: int = 16,
+    capacity: int = DEFAULT_CAPACITY,
+    block_g: int = 128,
+) -> dict:
+    """Live-lane fraction of the two Pallas work-list formats.
+
+    A lane is *live* when it holds a Gaussian whose AABB overlaps the tile
+    being blended. The block-list kernel streams whole 128-wide blocks of
+    depth-consecutive Gaussians (a block is fetched if any member overlaps),
+    so on non-uniform scenes most lanes are masked; the compacted lists
+    waste lanes only in the final partial chunk of each tile.
+
+    Each format's numerator matches what *it* actually blends: the compact
+    lists are capped at ``capacity`` (front-most win on overflow), the block
+    lists are not — so under overflow the block kernel blends *more* live
+    lanes than the compact one, and the comparison stays fair.
+    """
+    import numpy as np
+
+    g = feats_sorted.uv.shape[0]
+    bins = bin_gaussians(
+        feats_sorted, height, width, tile_size=tile_size, capacity=capacity
+    )
+    count = np.asarray(bins.count)
+    live = int(count.sum())
+
+    nsteps = -(-count // block_g)  # per-tile compacted chunk count
+    compact_lanes = int(nsteps.sum()) * block_g
+
+    block_ids, num_blocks, _ = tile_block_lists(
+        feats_sorted, height, width, tile_size=tile_size, block_g=block_g
+    )
+    block_lanes = int((np.asarray(block_ids) < num_blocks).sum()) * block_g
+    # Uncapped overlap total — the block kernel has no capacity cap.
+    full = bin_gaussians(
+        feats_sorted, height, width, tile_size=tile_size, capacity=g
+    )
+    live_uncapped = int(np.asarray(full.count).sum())
+
+    return {
+        "live_lanes": live,
+        "live_lanes_uncapped": live_uncapped,
+        "compact_lanes": compact_lanes,
+        "compact_occupancy": live / max(compact_lanes, 1),
+        "block_lanes": block_lanes,
+        "block_occupancy": live_uncapped / max(block_lanes, 1),
+        "overflow_rate": float(np.asarray(bins.overflowed).mean()),
+    }
 
 
 # ---------------------------------------------------------------------------

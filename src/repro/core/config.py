@@ -14,7 +14,9 @@ Paths:
   ``pallas``.
 * ``raster_path``: how features become pixels — ``dense`` (the O(P*G)
   oracle blend), ``binned`` (tile-binned lists, O(P * G_visible_per_tile)),
-  or ``pallas`` (the tile-binned Pallas TPU kernel, forward-only).
+  ``pallas`` (block-list Pallas TPU kernel, forward-only), or
+  ``pallas_binned`` (gather-to-compact per-tile Gaussian lists + custom
+  VJP — the fast *and* trainable Pallas path).
 """
 
 from __future__ import annotations
@@ -22,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 
 FEATURE_PATHS = ("naive", "staged", "fused", "pallas")
-RASTER_PATHS = ("dense", "binned", "pallas")
+RASTER_PATHS = ("dense", "binned", "pallas", "pallas_binned")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,11 +43,17 @@ class RenderConfig:
         shot over all pixels.
       tile_chunk: binned-path tile chunking (peak-memory bound); None = all
         tiles in one vmapped pass.
-      block_g: Gaussian block width for the pallas raster path (lane dim).
+      block_g: Gaussian block width for the pallas raster paths (lane dim;
+        also the compacted-chunk width of the pallas_binned path).
       max_blocks_per_tile: static cap on the pallas path's per-tile block
         list (front-most blocks win on overflow, like tile_capacity). None =
         no cap: exact, but every tile's grid then spans all blocks and the
         kernel saves DMA traffic only, not trip count.
+      early_exit: binned-path early termination — a tile chunk's scan over
+        its list stops once every pixel's transmittance saturates below
+        1/255 or the remaining list entries are all sentinels. The sentinel
+        skip is exact; the saturation skip can only drop contributions a
+        u8 pixel cannot represent (error < 1/255).
     """
 
     feature_path: str = "fused"
@@ -60,6 +68,7 @@ class RenderConfig:
     tile_chunk: int | None = 64
     block_g: int = 128
     max_blocks_per_tile: int | None = None
+    early_exit: bool = True
 
     def __post_init__(self) -> None:
         if self.feature_path not in FEATURE_PATHS:

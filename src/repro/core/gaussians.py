@@ -93,6 +93,36 @@ def random_gaussians(
     )
 
 
+def clustered_gaussians(
+    key: jax.Array,
+    num: int,
+    *,
+    num_clusters: int = 6,
+    cluster_std: float = 0.12,
+    extent: float = 2.0,
+    base_scale: float = 0.03,
+    dtype: Any = jnp.float32,
+) -> GaussianParams:
+    """Non-uniform cloud: Gaussians bunched around a few cluster centers.
+
+    The worst case for block-granular raster sparsity (most screen tiles are
+    empty, a few are crowded) and therefore the scene where gather-to-compact
+    per-tile lists pay off most — used by the occupancy benchmarks/tests.
+    Everything except positions matches :func:`random_gaussians`.
+    """
+    kc, ka, kp, krest = jax.random.split(key, 4)
+    centers = jax.random.uniform(
+        kc, (num_clusters, 3), minval=-extent, maxval=extent
+    )
+    assign = jax.random.randint(ka, (num,), 0, num_clusters)
+    offsets = cluster_std * jax.random.normal(kp, (num, 3))
+    g = random_gaussians(
+        krest, num, extent=extent, base_scale=base_scale, dtype=dtype
+    )
+    positions = (centers[assign] + offsets).astype(dtype)
+    return dataclasses.replace(g, positions=positions)
+
+
 def pack_records(g: GaussianParams) -> jax.Array:
     """Pack to the paper's flat (N, 59) record stream (for IO-oriented benches)."""
     n = g.num_gaussians

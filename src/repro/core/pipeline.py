@@ -120,15 +120,26 @@ def sharded_render(
 
     With ``config.raster_path == "binned"`` (the default) every device builds
     tile lists for its own row slice of the image only — binning cost shards
-    with the pixels. ``"dense"`` keeps the all-pairs oracle blend.
+    with the pixels. ``"pallas_binned"`` additionally compacts each device's
+    tile lists and blends them through the compact Pallas kernel (custom
+    VJP, so the sharded path stays trainable); compaction, like binning,
+    runs per device on its own pixel rows. ``"dense"`` keeps the all-pairs
+    oracle blend.
     """
     cfg = _pipeline_config(config, sh_degree=sh_degree)
     feature_fn = _sharded_feature_fn(cfg)
-    # The pallas raster kernel is not differentiable/shardable here; use the
-    # jnp binned path on-device instead.
+    # The forward-only block-list pallas kernel is not differentiable; use
+    # the jnp binned path on-device instead. The compact kernel
+    # ("pallas_binned") IS per-device-callable and trainable: each device
+    # runs its own gather-to-compact over its pixel-row slice.
     raster_path = "binned" if cfg.raster_path == "pallas" else cfg.raster_path
 
     gspec = P(tuple(gaussian_axes))
+
+    # pallas_call has no shard_map replication rule; the compact path is
+    # rank-preserving by construction (each device writes only its own pixel
+    # rows), so disabling the static replication check is safe.
+    extra = {"check_rep": False} if raster_path == "pallas_binned" else {}
 
     def _render(g: GaussianParams, cam: Camera, background: jax.Array) -> jax.Array:
         @functools.partial(
@@ -136,6 +147,7 @@ def sharded_render(
             mesh=mesh,
             in_specs=(gspec, P(), P()),
             out_specs=P(tuple(pixel_axes)),
+            **extra,
         )
         def _impl(g_shard, cam_rep, bg):
             feats = feature_fn(g_shard, cam_rep, sh_degree=cfg.sh_degree)
@@ -148,7 +160,7 @@ def sharded_render(
             my_rows = cam_rep.height // _axis_size(pixel_axes)
             row0 = _pixel_axis_index(pixel_axes) * my_rows
 
-            if raster_path == "binned":
+            if raster_path in ("binned", "pallas_binned"):
                 # Shift screen space so this device's rows start at y=0, then
                 # bin + blend the my_rows x W sub-image locally.
                 shift = jnp.stack(
@@ -157,6 +169,27 @@ def sharded_render(
                 local = dataclasses.replace(
                     gathered, uv=gathered.uv - shift[None, :]
                 )
+                if raster_path == "pallas_binned":
+                    # Per-device gather-to-compact over this device's pixel
+                    # rows only; the compact Pallas kernel (custom VJP) does
+                    # the blending, so the sharded path trains too.
+                    from repro.kernels.gaussian_features.ref import (
+                        pack_features,
+                    )
+                    from repro.kernels.tile_rasterize.ops import (
+                        tile_rasterize_compact,
+                    )
+
+                    return tile_rasterize_compact(
+                        pack_features(local),
+                        my_rows,
+                        cam_rep.width,
+                        bg,
+                        tile_size=cfg.tile_size,
+                        capacity=cfg.tile_capacity,
+                        block_g=cfg.block_g,
+                        tile_chunk=cfg.tile_chunk,
+                    )
                 bins = bin_lib.bin_gaussians(
                     local,
                     my_rows,
@@ -172,6 +205,7 @@ def sharded_render(
                     cam_rep.width,
                     bg,
                     tile_chunk=cfg.tile_chunk,
+                    early_exit=cfg.early_exit,
                 )
 
             pix = rast_lib.pixel_grid(cam_rep.height, cam_rep.width)

@@ -147,7 +147,9 @@ def rasterize_features(
 
     ``dense`` runs the oracle above; ``binned`` builds per-tile index lists
     and blends each tile against its list only; ``pallas`` packs the features
-    and runs the tile-binned Pallas TPU kernel (forward-only).
+    and runs the block-list Pallas TPU kernel (forward-only);
+    ``pallas_binned`` runs the gather-to-compact Pallas kernel — every lane
+    holds a live Gaussian, and a custom VJP makes it trainable.
     """
     if config.raster_path == "dense":
         return rasterize(
@@ -172,7 +174,30 @@ def rasterize_features(
             tile_chunk=config.tile_chunk,
         )
         return binning.rasterize_binned(
-            feats, bins, height, width, bg, tile_chunk=config.tile_chunk
+            feats,
+            bins,
+            height,
+            width,
+            bg,
+            tile_chunk=config.tile_chunk,
+            early_exit=config.early_exit,
+        )
+
+    if config.raster_path == "pallas_binned":
+        from repro.kernels.gaussian_features.ref import pack_features
+        from repro.kernels.tile_rasterize.ops import tile_rasterize_compact
+
+        bg = jnp.asarray(config.background, dtype=feats.color.dtype)
+        feats = sort_by_depth(feats)
+        return tile_rasterize_compact(
+            pack_features(feats),
+            height,
+            width,
+            bg,
+            tile_size=config.tile_size,
+            capacity=config.tile_capacity,
+            block_g=config.block_g,
+            tile_chunk=config.tile_chunk,
         )
 
     if config.raster_path == "pallas":

@@ -78,8 +78,10 @@ def render_loss(
     """Render one view under ``config`` and score it against ``target``.
 
     The differentiable objective for a training step; the RenderConfig picks
-    the feature and raster paths (the binned path trains too — gradients flow
-    through the per-tile gathers).
+    the feature and raster paths. Every raster path except the forward-only
+    block-list ``"pallas"`` kernel trains: the binned path differentiates
+    through the per-tile gathers, and ``"pallas_binned"`` through the
+    compact kernel's custom VJP (gradients match the jnp binned path).
     """
     from repro.core.render import render  # late: render imports this module's peers
 

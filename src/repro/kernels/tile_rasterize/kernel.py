@@ -5,7 +5,7 @@ PS). Tiles of pixels stream depth-sorted Gaussian feature blocks through
 VMEM; the order-dependent front-to-back transmittance is carried in VMEM
 scratch across the sequentially-iterated innermost grid dimension.
 
-Two variants share one blending body:
+Three variants share one blending body:
 
 * **dense** — grid (num_pixel_tiles, num_gaussian_blocks): every tile visits
   every block (invisible Gaussians masked). The original kernel; retained as
@@ -13,10 +13,20 @@ Two variants share one blending body:
 * **binned** — grid (num_screen_tiles, max_blocks_per_tile): each 16x16
   screen tile visits only the feature blocks on its per-tile block list
   (built by ``repro.core.binning.tile_block_lists``). The list rides in as a
-  scalar-prefetch operand and drives the feature BlockSpec's ``index_map`` —
-  the TPU analogue of the reference CUDA rasterizer's per-tile ranges.
-  Padding entries index one extra all-zero block (mask row 0), so short
-  lists blend correctly without dynamic control flow.
+  scalar-prefetch operand and drives the feature BlockSpec's ``index_map``.
+  Sparsity granularity is the 128-wide block of depth-consecutive
+  Gaussians, so non-uniform scenes still blend mostly masked lanes.
+* **compact** — grid (num_screen_tiles, chunks_per_tile): tile ``t``, step
+  ``j`` DMAs chunk ``j`` of tile ``t``'s *gather-to-compact* feature tensor
+  (``repro.core.binning`` compaction over ``TileBins.indices``) via a
+  static BlockSpec index map. Every lane holds a Gaussian whose AABB
+  actually overlaps the tile — the paper's "every cycle processes a live
+  Gaussian" property. A scalar-prefetched per-tile chunk count skips the
+  all-sentinel tail. The compact variant also has a **backward kernel**
+  (`_compact_bwd_kernel`) that replays the compacted lists front-to-back,
+  recomputes per-step transmittance, and emits per-lane gradients for
+  uv/conic/color/opacity — the Pallas raster path trains through it (see
+  the custom VJP in ``ops.py``).
 
 Within a block the exclusive cumulative product of (1 - alpha) along the
 lane axis resolves intra-block ordering; the running transmittance scratch
@@ -27,6 +37,7 @@ remains the correctness anchor.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +51,35 @@ DEFAULT_BLOCK_G = 128  # gaussians per block (lane dim)
 FEAT_ROWS = 12  # packed feature record rows (see gaussian_features kernel)
 
 
-def _blend_block(pix_ref, feat_ref, t_scr, acc_scr) -> None:
-    """Blend one (TILE_PIX, BG) feature block into the running scratch."""
+class _LaneAlpha(NamedTuple):
+    """Per-lane alpha model intermediates (each (TILE_PIX, BG) or (1, BG)).
+
+    The backward kernel replays the forward model and chain-rules through
+    it, so both consume the SAME evaluation — this helper is the single
+    definition of the blending kernels' alpha math (mirroring the jnp
+    oracle ``rasterize._pixel_alphas``).
+    """
+
+    dx: jnp.ndarray
+    dy: jnp.ndarray
+    con_a: jnp.ndarray
+    con_b: jnp.ndarray
+    con_c: jnp.ndarray
+    power_raw: jnp.ndarray
+    expw: jnp.ndarray
+    alpha_raw: jnp.ndarray
+    gate: jnp.ndarray
+    alpha: jnp.ndarray
+    opac: jnp.ndarray
+    mask: jnp.ndarray
+
+
+def _lane_alpha(pix_ref, feat_ref) -> _LaneAlpha:
+    """Gated alpha of one (TILE_PIX, BG) feature block at the tile's pixels.
+
+    Same support as the oracle: alpha floor + 3-sigma box (|d| <= radius),
+    alpha capped at ALPHA_MAX.
+    """
     px = pix_ref[:, 0:1]  # (TP, 1)
     py = pix_ref[:, 1:2]
     u = feat_ref[0:1, :]  # (1, BG)
@@ -55,13 +93,22 @@ def _blend_block(pix_ref, feat_ref, t_scr, acc_scr) -> None:
 
     dx = px - u  # (TP, BG)
     dy = py - v
-    power = -0.5 * (con_a * dx * dx + con_c * dy * dy) - con_b * dx * dy
-    power = jnp.minimum(power, 0.0)
-    alpha = opac * jnp.exp(power) * mask
-    alpha = jnp.minimum(alpha, ALPHA_MAX)
-    # Same support as the oracle: alpha floor + 3-sigma box (|d| <= radius).
+    power_raw = -0.5 * (con_a * dx * dx + con_c * dy * dy) - con_b * dx * dy
+    expw = jnp.exp(jnp.minimum(power_raw, 0.0))
+    alpha_raw = opac * expw * mask
+    alpha_capped = jnp.minimum(alpha_raw, ALPHA_MAX)
     inside = (jnp.abs(dx) <= radius) & (jnp.abs(dy) <= radius)
-    alpha = jnp.where(inside & (alpha >= ALPHA_EPS), alpha, 0.0)
+    gate = inside & (alpha_capped >= ALPHA_EPS)
+    alpha = jnp.where(gate, alpha_capped, 0.0)
+    return _LaneAlpha(
+        dx, dy, con_a, con_b, con_c, power_raw, expw, alpha_raw, gate,
+        alpha, opac, mask,
+    )
+
+
+def _blend_block(pix_ref, feat_ref, t_scr, acc_scr) -> None:
+    """Blend one (TILE_PIX, BG) feature block into the running scratch."""
+    alpha = _lane_alpha(pix_ref, feat_ref).alpha
 
     one_minus = 1.0 - alpha
     cum = jnp.cumprod(one_minus, axis=1)  # (TP, BG)
@@ -212,5 +259,234 @@ def build_binned_pallas_call(
         functools.partial(_binned_raster_kernel, max_blocks=max_blocks),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_pix, 4), dtype),
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Compact variant: gather-to-compact per-tile Gaussian lists + backward pass
+# ---------------------------------------------------------------------------
+
+
+def _compact_raster_kernel(
+    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
+    pix_ref,  # (TILE_PIX, 2) pixel centers (screen-tile order)
+    feat_ref,  # (FEAT_ROWS, BG) compacted chunk j of tile t
+    bg_ref,  # (1, 4)
+    out_ref,  # (TILE_PIX, 4)
+    t_scr,
+    acc_scr,
+    *,
+    steps: int,
+):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        t_scr[...] = jnp.ones_like(t_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Past the tile's live chunks every lane is a sentinel (alpha 0): skip
+    # the blend math entirely. The DMA still lands, but compaction already
+    # bounds dead steps to < 1 per tile on average (the partial last chunk).
+    @pl.when(j < nsteps_ref[t])
+    def _blend():
+        _blend_block(pix_ref, feat_ref, t_scr, acc_scr)
+
+    @pl.when(j == steps - 1)
+    def _fin():
+        _finalize_out(bg_ref, out_ref, t_scr, acc_scr)
+
+
+def build_compact_pallas_call(
+    num_tiles: int,
+    steps: int,
+    *,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Compact variant: tile t, step j reads compacted chunk t*steps + j.
+
+    The feature operand is the (FEAT_ROWS, num_tiles * steps * block_g)
+    gather-to-compact tensor — per-tile lists flattened along the lane axis.
+    The chunk address is a *static* function of the grid position, so unlike
+    the block-list kernel no scalar-prefetch indirection is needed for the
+    DMA; the prefetched per-tile chunk counts only gate the blend compute.
+    """
+    grid = (num_tiles, steps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_PIX, 2), lambda t, j, ns: (t, 0)),
+            pl.BlockSpec(
+                (FEAT_ROWS, block_g), lambda t, j, ns: (0, t * steps + j)
+            ),
+            pl.BlockSpec((1, 4), lambda t, j, ns: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_PIX, 4), lambda t, j, ns: (t, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_PIX, 1), jnp.float32),
+            pltpu.VMEM((TILE_PIX, 4), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        functools.partial(_compact_raster_kernel, steps=steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype),
+        interpret=interpret,
+    )
+
+
+def _compact_bwd_kernel(
+    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
+    pix_ref,  # (TILE_PIX, 2)
+    feat_ref,  # (FEAT_ROWS, BG) compacted chunk (same layout as forward)
+    out_ref,  # (TILE_PIX, 4) forward output: rgb + final transmittance
+    gout_ref,  # (TILE_PIX, 4) cotangent of the forward output
+    dfeat_ref,  # (FEAT_ROWS, BG) gradient w.r.t. this compacted chunk
+    t_scr,  # (TILE_PIX, 1) running transmittance (replayed)
+    cum_scr,  # (TILE_PIX, 1) running sum of w_i * (c_i . d_rgb)
+    *,
+    steps: int,
+):
+    """Backward blend: replay the compacted list, emit per-lane grads.
+
+    Writing ``rgb = sum_i c_i a_i T_i + B T_N`` with ``T_i`` the exclusive
+    front-to-back transmittance, the alpha cotangent of lane ``i`` is
+
+        d_alpha_i = T_i (c_i . d_rgb) - (D - S_i) / (1 - a_i)
+                    - d_tout * T_N / (1 - a_i)
+
+    where ``D = rgb_out . d_rgb`` (everything the tile rendered, background
+    included) and ``S_i = sum_{j<=i} a_j T_j (c_j . d_rgb)`` is the running
+    front side — so the rear term ``sum_{j>i} ... + B T_N (B . d_rgb)``
+    never needs a back-to-front pass: one front-to-back replay with two
+    scalars of per-pixel scratch covers it. From ``d_alpha`` the chain rule
+    through ``alpha = min(opacity * exp(power) * mask, ALPHA_MAX)`` (with
+    the oracle's support gate) yields uv/conic/color/opacity/mask grads,
+    reduced over the tile's pixels into this chunk's gradient block. Each
+    (tile, chunk) grid cell owns its output block exclusively — per-Gaussian
+    accumulation across tiles happens in the gather's scatter-add VJP
+    outside the kernel.
+    """
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        t_scr[...] = jnp.ones_like(t_scr)
+        cum_scr[...] = jnp.zeros_like(cum_scr)
+
+    @pl.when(j < nsteps_ref[t])
+    def _bwd():
+        colors = feat_ref[5:8, :]  # (3, BG)
+
+        # --- replay the forward alpha model exactly (shared helper) -------
+        la = _lane_alpha(pix_ref, feat_ref)
+        dx, dy = la.dx, la.dy
+        alpha = la.alpha
+
+        one_minus = 1.0 - alpha
+        cum = jnp.cumprod(one_minus, axis=1)  # (TP, BG)
+        excl = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+        t_i = t_scr[...] * excl  # global exclusive transmittance
+        w = alpha * t_i
+
+        # --- alpha cotangent ----------------------------------------------
+        drgb = gout_ref[:, 0:3]  # (TP, 3)
+        dtout = gout_ref[:, 3:4]  # (TP, 1)
+        s = jax.lax.dot_general(
+            drgb, colors, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (TP, BG): c_i . d_rgb per lane
+        d_total = jnp.sum(
+            out_ref[:, 0:3] * drgb, axis=1, keepdims=True
+        )  # (TP, 1)
+        t_n = out_ref[:, 3:4]
+        cums = cum_scr[...] + jnp.cumsum(w * s, axis=1)  # inclusive S_i
+        dalpha = (
+            t_i * s
+            - (d_total - cums) / one_minus
+            - dtout * t_n / one_minus
+        )
+
+        # --- chain through the gated alpha model --------------------------
+        # alpha = where(gate, min(alpha_raw, ALPHA_MAX), 0): zero cotangent
+        # outside the support gate and on the ALPHA_MAX-capped branch —
+        # identical a.e. to jnp autodiff through the oracle.
+        d_araw = jnp.where(la.gate & (la.alpha_raw < ALPHA_MAX), dalpha, 0.0)
+        dopac = d_araw * la.expw * la.mask
+        dmask = d_araw * la.opac * la.expw
+        dpower = d_araw * la.alpha_raw
+        dpraw = jnp.where(la.power_raw < 0.0, dpower, 0.0)
+        ddx = dpraw * -(la.con_a * dx + la.con_b * dy)
+        ddy = dpraw * -(la.con_c * dy + la.con_b * dx)
+
+        def rsum(x):  # reduce over the tile's pixels -> (1, BG) grad row
+            return jnp.sum(x, axis=0, keepdims=True)
+
+        dfeat_ref[0:1, :] = rsum(-ddx)  # du (dx = px - u)
+        dfeat_ref[1:2, :] = rsum(-ddy)
+        dfeat_ref[2:3, :] = rsum(dpraw * (-0.5 * dx * dx))  # dconic a
+        dfeat_ref[3:4, :] = rsum(dpraw * (-dx * dy))  # dconic b
+        dfeat_ref[4:5, :] = rsum(dpraw * (-0.5 * dy * dy))  # dconic c
+        dfeat_ref[5:6, :] = rsum(w * drgb[:, 0:1])  # dcolor r
+        dfeat_ref[6:7, :] = rsum(w * drgb[:, 1:2])
+        dfeat_ref[7:8, :] = rsum(w * drgb[:, 2:3])
+        dfeat_ref[8:9, :] = jnp.zeros_like(la.opac)  # depth: sort key only
+        dfeat_ref[9:10, :] = jnp.zeros_like(la.opac)  # radius: discrete gate
+        dfeat_ref[10:11, :] = rsum(dopac)
+        dfeat_ref[11:12, :] = rsum(dmask)
+
+        t_scr[...] = t_scr[...] * cum[:, -1:]
+        cum_scr[...] = cums[:, -1:]
+
+    @pl.when(j >= nsteps_ref[t])
+    def _dead():
+        dfeat_ref[...] = jnp.zeros_like(dfeat_ref)
+
+
+def build_compact_bwd_pallas_call(
+    num_tiles: int,
+    steps: int,
+    *,
+    block_g: int = DEFAULT_BLOCK_G,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Backward pass over the compacted layout: one grad block per grid cell."""
+    grid = (num_tiles, steps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_PIX, 2), lambda t, j, ns: (t, 0)),
+            pl.BlockSpec(
+                (FEAT_ROWS, block_g), lambda t, j, ns: (0, t * steps + j)
+            ),
+            pl.BlockSpec((TILE_PIX, 4), lambda t, j, ns: (t, 0)),
+            pl.BlockSpec((TILE_PIX, 4), lambda t, j, ns: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (FEAT_ROWS, block_g), lambda t, j, ns: (0, t * steps + j)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((TILE_PIX, 1), jnp.float32),
+            pltpu.VMEM((TILE_PIX, 1), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        functools.partial(_compact_bwd_kernel, steps=steps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (FEAT_ROWS, num_tiles * steps * block_g), dtype
+        ),
         interpret=interpret,
     )

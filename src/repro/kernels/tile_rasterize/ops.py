@@ -1,9 +1,14 @@
 """Jitted public wrappers: full-image Pallas rasterization from packed features.
 
 ``tile_rasterize`` is the dense on-device oracle (every tile visits every
-block). ``tile_rasterize_binned`` is the production path: screen tiles visit
-only the blocks on their per-tile list (``repro.core.binning``), which the
-kernel consumes through a scalar-prefetched BlockSpec index map.
+block). ``tile_rasterize_binned`` visits only the 128-wide feature blocks on
+each screen tile's block list (``repro.core.binning``), consumed through a
+scalar-prefetched BlockSpec index map; forward-only.
+``tile_rasterize_compact`` is the production path: a gather-to-compact stage
+densifies each tile's exact Gaussian list so every kernel lane blends a live
+Gaussian, and a ``jax.custom_vjp`` backed by a backward Pallas kernel makes
+the whole thing trainable — gradients scatter back to per-Gaussian packed
+features through the compaction gather's VJP.
 """
 
 from __future__ import annotations
@@ -141,6 +146,176 @@ def tile_rasterize_binned(
         dtype=packed.dtype,
     )
     out = call(block_ids, pix, packed, bg4)  # (T*TILE_PIX, 4)
+    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
+    return img[:height, :width]
+
+
+# ---------------------------------------------------------------------------
+# Compact path: gather-to-compact lists + custom VJP (the trainable kernel)
+# ---------------------------------------------------------------------------
+
+
+def build_compact_operands(
+    packed_sorted: jax.Array,
+    height: int,
+    width: int,
+    *,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+) -> tuple[jax.Array, jax.Array, "bin_lib.TileBins", int]:
+    """Gather-to-compact over the *packed* row layout the kernel streams.
+
+    This is the same compaction ``binning.compact_tile_features`` defines
+    (a gather of each tile's ``TileBins.indices`` into dense sentinel-padded
+    per-tile records — a test pins the two together), laid out kernel-side:
+    all 12 packed rows kept, lists padded to whole ``block_g`` chunks and
+    flattened to (FEAT_ROWS, T * K) lanes. Differentiable w.r.t.
+    ``packed_sorted`` (the gather's VJP scatter-adds across tiles).
+
+    Returns (compact, nsteps (T,) float32 live-chunk counts, bins, steps).
+    """
+    num_g = packed_sorted.shape[1]
+    feats = unpack_features(packed_sorted)
+    bins = bin_lib.bin_gaussians(
+        feats,
+        height,
+        width,
+        tile_size=tile_size,
+        capacity=capacity,
+        tile_chunk=tile_chunk,
+    )
+    kk = bins.capacity
+    k_pad = max(block_g, -(-kk // block_g) * block_g)
+    idx = jnp.pad(
+        bins.indices, ((0, 0), (0, k_pad - kk)), constant_values=jnp.int32(num_g)
+    )
+
+    # One all-zero sentinel column appended, then the per-tile lists
+    # flattened along the lane axis.
+    packed_pad = jnp.pad(packed_sorted, ((0, 0), (0, 1)))
+    compact = packed_pad[:, idx.reshape(-1)]  # (FEAT_ROWS, T * k_pad)
+    nsteps = (
+        (bins.count + jnp.int32(block_g - 1)) // jnp.int32(block_g)
+    ).astype(jnp.float32)
+    return compact, nsteps, bins, k_pad // block_g
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _compact_blend(
+    compact: jax.Array,  # (FEAT_ROWS, T * steps * block_g) compacted features
+    pix: jax.Array,  # (T * TILE_PIX, 2) screen-tile-major pixel centers
+    bg4: jax.Array,  # (1, 4)
+    nsteps: jax.Array,  # (T,) float32 per-tile live-chunk counts
+    num_tiles: int,
+    steps: int,
+    block_g: int,
+    interpret: bool,
+) -> jax.Array:
+    """Forward compact Pallas blend -> (T * TILE_PIX, 4) rgb + transmittance.
+
+    ``nsteps`` travels as float32 so the custom VJP can hand back an
+    ordinary zero cotangent (it is cast to int32 for the scalar prefetch).
+    """
+    call = k.build_compact_pallas_call(
+        num_tiles,
+        steps,
+        block_g=block_g,
+        interpret=interpret,
+        dtype=compact.dtype,
+    )
+    return call(nsteps.astype(jnp.int32), pix, compact, bg4)
+
+
+def _compact_blend_fwd(compact, pix, bg4, nsteps, num_tiles, steps, block_g, interpret):
+    out = _compact_blend(
+        compact, pix, bg4, nsteps, num_tiles, steps, block_g, interpret
+    )
+    # Residuals: the backward kernel replays the compacted lists and needs
+    # the forward output (rgb for the rear-term trick, final transmittance).
+    return out, (compact, pix, nsteps, out)
+
+
+def _compact_blend_bwd(num_tiles, steps, block_g, interpret, res, gout):
+    compact, pix, nsteps, out = res
+    call = k.build_compact_bwd_pallas_call(
+        num_tiles,
+        steps,
+        block_g=block_g,
+        interpret=interpret,
+        dtype=compact.dtype,
+    )
+    dcompact = call(nsteps.astype(jnp.int32), pix, compact, out, gout)
+    # Background cotangent: rgb += T_final * bg, so d_bg = sum_p T_N * d_rgb.
+    dbg = jnp.sum(out[:, 3:4] * gout[:, 0:3], axis=0)
+    dbg4 = jnp.concatenate([dbg, jnp.zeros((1,), dbg.dtype)])[None, :]
+    return dcompact, jnp.zeros_like(pix), dbg4, jnp.zeros_like(nsteps)
+
+
+_compact_blend.defvjp(_compact_blend_fwd, _compact_blend_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "height", "width", "tile_size", "capacity", "block_g", "tile_chunk",
+        "interpret",
+    ),
+)
+def tile_rasterize_compact(
+    packed_sorted: jax.Array,
+    height: int,
+    width: int,
+    background: jax.Array,
+    *,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Compact kernel: every lane blends a live Gaussian. Differentiable.
+
+    Pipeline: bin the packed record's AABBs into per-tile index lists
+    (``binning.bin_gaussians``), gather-to-compact them into a dense
+    (FEAT_ROWS, T * K) tensor (sentinel index -> appended all-zero column),
+    and stream K/block_g chunks per tile through the compact Pallas kernel.
+    The gather is plain jnp, so its VJP scatter-adds the kernel's per-tile
+    feature gradients back to per-Gaussian packed rows — combined with the
+    kernel's custom VJP the whole path trains, matching the jnp binned path.
+
+    ``capacity`` mirrors ``RenderConfig.tile_capacity`` (front-most K kept on
+    overflow); it is rounded up to whole ``block_g`` chunks.
+    """
+    if tile_size * tile_size != k.TILE_PIX:
+        raise ValueError(
+            f"pallas raster path requires tile_size^2 == {k.TILE_PIX}, "
+            f"got tile_size={tile_size}"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    bg4 = jnp.concatenate([background, jnp.zeros((1,), background.dtype)])[None, :]
+
+    compact, nsteps, bins, steps = build_compact_operands(
+        packed_sorted,
+        height,
+        width,
+        tile_size=tile_size,
+        capacity=capacity,
+        block_g=block_g,
+        tile_chunk=tile_chunk,
+    )
+
+    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
+    num_tiles = bins.num_tiles
+    h_pad, w_pad = tiles_y * tile_size, tiles_x * tile_size
+    pix = _tile_order_pixels(h_pad, w_pad, tile_size)
+
+    out = _compact_blend(
+        compact, pix, bg4, nsteps, num_tiles, steps, block_g, interpret
+    )
     img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
     img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
     return img[:height, :width]

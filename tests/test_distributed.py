@@ -122,6 +122,29 @@ class TestMultiDevice:
         )
         assert "MATCH" in out
 
+    def test_sharded_pallas_binned_matches_single_device(self, run_multidevice):
+        """Per-device gather-to-compact + compact Pallas kernel inside
+        shard_map reproduces the single-device pallas_binned render."""
+        out = run_multidevice(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core import RenderConfig, random_gaussians, look_at_camera, render
+            from repro.core.pipeline import sharded_render
+            from repro.launch.mesh import make_mesh
+            g = random_gaussians(jax.random.PRNGKey(0), 256)
+            cam = look_at_camera((0, 1.0, -6.0), (0,0,0), width=32, height=32)
+            cfg = RenderConfig(raster_path="pallas_binned", tile_capacity=256)
+            want = render(g, cam, cfg)
+            mesh = make_mesh((4,), ("gs",))
+            rr = sharded_render(mesh, ("gs",), ("gs",), config=cfg)
+            got = jax.jit(rr)(g, cam, jnp.zeros(3))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+            print("COMPACT MATCH")
+            """,
+            devices=4,
+        )
+        assert "COMPACT MATCH" in out
+
     def test_trainer_restart_and_elastic_reshard(self, run_multidevice):
         out = run_multidevice(
             """

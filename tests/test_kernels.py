@@ -11,10 +11,17 @@ from repro.core.rasterize import pixel_grid, sort_by_depth
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gaussian_features.ops import gaussian_features_packed
-from repro.kernels.gaussian_features.ref import gaussian_features_ref, pack_features
+from repro.kernels.gaussian_features.ref import (
+    gaussian_features_ref,
+    pack_features,
+    unpack_features,
+)
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
-from repro.kernels.tile_rasterize.ops import tile_rasterize
+from repro.kernels.tile_rasterize.ops import (
+    tile_rasterize,
+    tile_rasterize_compact,
+)
 from repro.kernels.tile_rasterize.ref import tile_rasterize_ref
 
 
@@ -144,6 +151,90 @@ class TestTileRasterizeKernel:
         a = tile_rasterize(packed, 32, 32, bg, block_g=128)
         b = tile_rasterize(packed, 32, 32, bg, block_g=256)
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+class TestCompactRasterizeKernel:
+    """Gather-to-compact Pallas kernel: forward vs the full-image oracle,
+    custom VJP vs jnp autodiff through the binned path (interpret mode)."""
+
+    @pytest.mark.parametrize("n,size", [(100, 32), (500, 48), (1000, 64)])
+    def test_vs_fullimage_oracle(self, n, size):
+        g = random_gaussians(jax.random.PRNGKey(n), n)
+        cam = look_at_camera((0, 1, -6), (0, 0, 0), width=size, height=size)
+        packed = pack_features(sort_by_depth(compute_features_fused(g, cam)))
+        bg = jnp.array([0.1, 0.2, 0.3])
+        got = tile_rasterize_compact(
+            packed, cam.height, cam.width, bg, capacity=n
+        )
+        pix = pixel_grid(cam.height, cam.width)
+        want = tile_rasterize_ref(pix, packed, bg)[:, :3].reshape(
+            cam.height, cam.width, 3
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_chunk_width_invariance(self):
+        g = random_gaussians(jax.random.PRNGKey(3), 512)
+        cam = look_at_camera((0, 1, -6), (0, 0, 0), width=32, height=32)
+        packed = pack_features(sort_by_depth(compute_features_fused(g, cam)))
+        bg = jnp.zeros(3)
+        a = tile_rasterize_compact(packed, 32, 32, bg, capacity=512, block_g=128)
+        b = tile_rasterize_compact(packed, 32, 32, bg, capacity=512, block_g=256)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("capacity", [64, 300])
+    def test_custom_vjp_matches_jnp_binned_grads(self, capacity):
+        """The ISSUE acceptance bar at the packed-feature level: gradients
+        for uv / conic / color / opacity through the backward Pallas kernel
+        equal jnp autodiff through the binned path to 1e-4 — including
+        under list overflow (capacity 64 overflows this scene)."""
+        from repro.core import binning
+
+        g = random_gaussians(jax.random.PRNGKey(7), 300, base_scale=0.1)
+        cam = look_at_camera((0, 1, -6), (0, 0, 0), width=48, height=48)
+        packed = pack_features(sort_by_depth(compute_features_fused(g, cam)))
+        bg = jnp.array([0.2, 0.1, 0.3])
+        target = jnp.linspace(0, 1, 48 * 48 * 3).reshape(48, 48, 3)
+
+        def loss_pallas(p):
+            img = tile_rasterize_compact(p, 48, 48, bg, capacity=capacity)
+            return jnp.mean((img - target) ** 2)
+
+        def loss_jnp(p):
+            feats = unpack_features(p)
+            bins = binning.bin_gaussians(feats, 48, 48, capacity=capacity)
+            img = binning.rasterize_binned(
+                feats, bins, 48, 48, bg, early_exit=False
+            )
+            return jnp.mean((img - target) ** 2)
+
+        lp, gp = jax.value_and_grad(loss_pallas)(packed)
+        lj, gj = jax.value_and_grad(loss_jnp)(packed)
+        np.testing.assert_allclose(float(lp), float(lj), rtol=1e-5)
+        gp, gj = np.asarray(gp), np.asarray(gj)
+        rows = {
+            "uv": slice(0, 2),
+            "conic": slice(2, 5),
+            "color": slice(5, 8),
+            "opacity": slice(10, 11),
+        }
+        for name, sl in rows.items():
+            assert np.isfinite(gp[sl]).all(), name
+            np.testing.assert_allclose(
+                gp[sl], gj[sl], rtol=1e-4, atol=1e-7, err_msg=name
+            )
+
+    def test_background_gradient(self):
+        """d(loss)/d(bg) flows through the custom VJP's jnp-side term."""
+        g = random_gaussians(jax.random.PRNGKey(1), 128)
+        cam = look_at_camera((0, 1, -6), (0, 0, 0), width=32, height=32)
+        packed = pack_features(sort_by_depth(compute_features_fused(g, cam)))
+
+        def loss(bg):
+            img = tile_rasterize_compact(packed, 32, 32, bg, capacity=128)
+            return jnp.mean(img)
+
+        gbg = np.asarray(jax.grad(loss)(jnp.zeros(3)))
+        assert np.isfinite(gbg).all() and (gbg > 0).all()
 
 
 class TestRMSNormKernel:
