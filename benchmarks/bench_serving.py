@@ -1,0 +1,209 @@
+"""Serving throughput: batched multi-camera serving vs the sequential path.
+
+The paper's 226x claim is a *throughput* number — a trained model served
+against a camera stream. This benchmark measures exactly that trade on our
+substrate: req/s of the batched render path (``render_batch`` — one
+executable, pooled load-balanced tiles) against the sequential per-request
+baseline (one ``render_jit`` dispatch per camera), across batch sizes and
+raster paths, plus an end-to-end :class:`repro.serve.RenderServer` run that
+reports micro-batch occupancy and request latency percentiles.
+
+Every speedup is reported next to its occupancy/latency context — a
+throughput number without its batching regime is not a result.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import RenderConfig, orbit_cameras, random_gaussians, stack_cameras
+from repro.core.multicam import render_batch_jit
+from repro.core.render import render_jit
+from repro.serve import RenderServer
+
+N = 8_192
+SIZE = 128
+REQUESTS = 16
+BATCH_SIZES = (1, 2, 4, 8)
+
+TINY_N = 2_048
+TINY_SIZE = 64
+TINY_REQUESTS = 8
+TINY_BATCH_SIZES = (1, 4)
+
+
+def _median(samples: list[float]) -> float:
+    samples = sorted(samples)
+    return samples[len(samples) // 2]
+
+
+def _seq_req_s(model, cams, cfg, iters: int) -> tuple[float, np.ndarray]:
+    """Sequential baseline: one dispatch per request. Returns (req/s, lat ms)."""
+    render_jit(model, cams[0], cfg).block_until_ready()  # warmup/compile
+    walls, lat = [], []
+    for _ in range(iters):
+        lat = []
+        t0 = time.perf_counter()
+        for cam in cams:
+            t_req = time.perf_counter()
+            render_jit(model, cam, cfg).block_until_ready()
+            lat.append((time.perf_counter() - t_req) * 1e3)
+        walls.append(time.perf_counter() - t0)
+    return len(cams) / _median(walls), np.asarray(lat)
+
+
+def _batched_req_s(model, cams, cfg, batch_size: int, iters: int) -> float:
+    """Closed-loop batched throughput at a fixed batch size."""
+    if len(cams) % batch_size != 0:
+        raise ValueError(
+            f"{len(cams)} requests do not divide into batches of "
+            f"{batch_size}; the comparison against the sequential baseline "
+            "(which renders every camera) would silently drop the remainder"
+        )
+    groups = [
+        stack_cameras(cams[i : i + batch_size])
+        for i in range(0, len(cams) - batch_size + 1, batch_size)
+    ]
+    render_batch_jit(model, groups[0], cfg).block_until_ready()  # warmup
+    walls = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for gb in groups:
+            render_batch_jit(model, gb, cfg).block_until_ready()
+        walls.append(time.perf_counter() - t0)
+    return len(groups) * batch_size / _median(walls)
+
+
+def _server_run(model, cams, cfg, max_batch: int) -> dict:
+    """End-to-end RenderServer pass (closed loop): occupancy + latency."""
+    size = cams[0].width
+    server = RenderServer(
+        model, cfg, width=size, height=size, max_batch=max_batch, max_wait_ms=20.0
+    )
+    compile_ms = server.warmup(cams[0])
+    with server:
+        t0 = time.perf_counter()
+        futures = [server.submit(c) for c in cams]
+        results = [f.result() for f in futures]
+        wall = time.perf_counter() - t0
+    stats = server.stats()
+    lat = np.asarray([r.latency_ms for r in results])
+    return {
+        "req_s": len(cams) / wall,
+        "compile_ms": compile_ms,
+        "occupancy": stats["occupancy"],
+        "mean_batch_size": stats["mean_batch_size"],
+        "latency_ms_p50": float(np.percentile(lat, 50)),
+        "latency_ms_p95": float(np.percentile(lat, 95)),
+    }
+
+
+def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
+    """Run the serving benchmarks; returns machine-readable metrics
+    (``benchmarks/run.py`` folds them into ``BENCH_PR3.json``)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="CI smoke: small scene, binned only, asserts batched "
+        "throughput >= sequential",
+    )
+    args = ap.parse_args(list(argv))
+
+    n = TINY_N if args.tiny else N
+    size = TINY_SIZE if args.tiny else SIZE
+    requests = TINY_REQUESTS if args.tiny else REQUESTS
+    batch_sizes = TINY_BATCH_SIZES if args.tiny else BATCH_SIZES
+    # 3 samples -> a true median even on a noisy shared runner; the tiny
+    # smoke keeps CI in seconds with 1.
+    iters = 1 if args.tiny else 3
+    paths = ("binned",) if args.tiny else ("binned", "pallas_binned")
+
+    model = random_gaussians(jax.random.PRNGKey(0), n, extent=1.5)
+    cams = orbit_cameras(requests, radius=5.0, width=size, height=size)
+
+    metrics: dict = {
+        "gaussians": n,
+        "image_size": size,
+        "requests": requests,
+        "paths": {},
+    }
+
+    for path in paths:
+        cfg = RenderConfig(raster_path=path)
+        # The interpret-mode Pallas path is seconds per frame on CPU; keep
+        # its sweep to the largest batch so the full bench stays in minutes.
+        sizes = batch_sizes if path == "binned" else (batch_sizes[-1],)
+        p_reqs = requests if path == "binned" else max(sizes[-1], 4)
+        p_cams = cams[:p_reqs]
+        p_iters = iters if path == "binned" else 1
+
+        seq_req_s, seq_lat = _seq_req_s(model, p_cams, cfg, p_iters)
+        emit(
+            f"serving/{path}_sequential_req_s",
+            1e6 / seq_req_s,
+            f"{seq_req_s:.2f}req_s",
+        )
+
+        batched = {}
+        for bs in sizes:
+            req_s = _batched_req_s(model, p_cams, cfg, bs, p_iters)
+            batched[str(bs)] = {
+                "req_s": req_s,
+                "speedup_vs_sequential": req_s / seq_req_s,
+            }
+            emit(
+                f"serving/{path}_batched{bs}_req_s",
+                1e6 / req_s,
+                f"{req_s:.2f}req_s_{req_s / seq_req_s:.2f}x",
+            )
+
+        metrics["paths"][path] = {
+            "sequential_req_s": seq_req_s,
+            "sequential_latency_ms_p50": float(np.percentile(seq_lat, 50)),
+            "sequential_latency_ms_p95": float(np.percentile(seq_lat, 95)),
+            "batched": batched,
+        }
+
+    # End-to-end server pass (binned, largest batch): the occupancy and
+    # latency-percentile context for the throughput numbers above.
+    server_cfg = RenderConfig(raster_path="binned")
+    srv = _server_run(model, cams, server_cfg, max_batch=batch_sizes[-1])
+    metrics["server"] = srv
+    emit(
+        "serving/server_req_s",
+        1e6 / srv["req_s"],
+        f"{srv['req_s']:.2f}req_s_occ{srv['occupancy']:.0%}",
+    )
+    emit(
+        "serving/server_latency_p50",
+        srv["latency_ms_p50"] * 1e3,
+        f"p95={srv['latency_ms_p95']:.1f}ms",
+    )
+
+    if args.tiny:
+        top = metrics["paths"]["binned"]["batched"][str(batch_sizes[-1])]
+        assert top["speedup_vs_sequential"] >= 1.0, (
+            f"batched serving slower than sequential: {metrics['paths']}"
+        )
+        assert 0.0 < srv["occupancy"] <= 1.0, srv
+        print(
+            f"# tiny smoke OK: batched {top['speedup_vs_sequential']:.2f}x "
+            f"sequential at batch {batch_sizes[-1]}, "
+            f"server occupancy {srv['occupancy']:.0%}"
+        )
+
+    return metrics
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -1,8 +1,9 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR2.json`` — the machine-readable perf trajectory (render
-speedups, max-error, overflow rate, lane occupancy) — to the repo root.
+writes ``BENCH_PR3.json`` — the machine-readable perf trajectory (render
+speedups, max-error, lane occupancy, batched-serving throughput/occupancy/
+latency) — to the repo root.
 """
 
 from __future__ import annotations
@@ -12,13 +13,14 @@ import pathlib
 import sys
 import traceback
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR2.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR3.json"
 
 
 def main() -> None:
     from benchmarks import (
         bench_fig5_parallelism,
         bench_lm_steps,
+        bench_serving,
         bench_table1_kernels,
         bench_table2_throughput,
     )
@@ -30,6 +32,7 @@ def main() -> None:
         bench_table2_throughput,
         bench_fig5_parallelism,
         bench_lm_steps,
+        bench_serving,
     ):
         try:
             section = mod.main()

@@ -1,8 +1,12 @@
-"""Batched render serving — the paper's deployment shape: a trained Gaussian
-model served against a stream of camera requests (feature computation +
-rasterization per request, batched).
+"""Render serving under a Poisson request stream — the paper's deployment
+shape: a trained Gaussian model served against a stream of camera requests,
+with throughput (req/s) as the headline metric.
 
-    PYTHONPATH=src python examples/serve_render.py [--requests 12]
+Drives the async micro-batching :class:`repro.serve.RenderServer` with
+Poisson arrivals and compares it against the sequential per-request baseline
+(one ``render_jit`` dispatch per camera — the pre-batching serving path).
+
+    PYTHONPATH=src python examples/serve_render.py [--requests 32]
 """
 
 import argparse
@@ -13,11 +17,19 @@ import numpy as np
 
 from repro.core import RenderConfig, orbit_cameras, random_gaussians
 from repro.core.render import render_jit
+from repro.serve import RenderServer
+
+
+def percentiles(lat_ms: np.ndarray) -> str:
+    return (
+        f"p50={np.percentile(lat_ms, 50):.1f} ms "
+        f"p95={np.percentile(lat_ms, 95):.1f} ms"
+    )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--gaussians", type=int, default=4096)
     ap.add_argument("--image-size", type=int, default=96)
     ap.add_argument(
@@ -26,34 +38,96 @@ def main() -> None:
         default="binned",
     )
     ap.add_argument("--tile-capacity", type=int, default=512)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument(
+        "--arrival-rate",
+        type=float,
+        default=0.0,
+        help="mean Poisson arrivals per second; 0 = offered load arrives "
+        "all at once (closed-loop throughput test)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     model = random_gaussians(jax.random.PRNGKey(0), args.gaussians, extent=1.5)
     config = RenderConfig(
         raster_path=args.raster_path, tile_capacity=args.tile_capacity
     )
-    print(f"serving a {args.gaussians}-Gaussian model ({args.raster_path} raster)")
-
-    # request stream: cameras orbiting the scene (all same static image size
-    # -> one compiled executable serves every request)
-    cams = orbit_cameras(
-        args.requests, radius=5.0, width=args.image_size, height=args.image_size
+    size = args.image_size
+    print(
+        f"serving a {args.gaussians}-Gaussian model "
+        f"({args.raster_path} raster, {size}x{size})"
     )
 
-    lat = []
-    for i, cam in enumerate(cams):
-        t0 = time.perf_counter()
-        img = render_jit(model, cam, config)
-        img.block_until_ready()
-        ms = (time.perf_counter() - t0) * 1e3
-        lat.append(ms)
-        print(f"request {i:2d}: {ms:7.1f} ms   mean_rgb={float(img.mean()):.3f}")
+    # Request stream: cameras orbiting the scene (one static image size ->
+    # every batch hits one compiled executable).
+    cams = orbit_cameras(args.requests, radius=5.0, width=size, height=size)
+    rng = np.random.default_rng(args.seed)
+    if args.arrival_rate > 0:
+        gaps = rng.exponential(1.0 / args.arrival_rate, size=args.requests)
+    else:
+        gaps = np.zeros(args.requests)
 
-    lat = np.asarray(lat[1:])  # drop compile
+    # --- sequential baseline (the pre-batching serving path) --------------
+    # Explicit warmup: compile time is reported on its own line, never
+    # folded into request 0's latency.
+    t0 = time.perf_counter()
+    render_jit(model, cams[0], config).block_until_ready()
+    print(f"sequential compile: {(time.perf_counter() - t0) * 1e3:.0f} ms")
+
+    seq_lat = []
+    t_start = time.perf_counter()
+    for i, cam in enumerate(cams):
+        target = t_start + gaps[: i + 1].sum()
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        t_req = time.perf_counter()
+        render_jit(model, cam, config).block_until_ready()
+        seq_lat.append((time.perf_counter() - t_req) * 1e3)
+    seq_wall = time.perf_counter() - t_start
+    seq_lat = np.asarray(seq_lat)
     print(
-        f"\nserved {args.requests} requests: p50={np.percentile(lat, 50):.1f} ms "
-        f"p95={np.percentile(lat, 95):.1f} ms "
-        f"({1000.0 / np.percentile(lat, 50):.1f} req/s steady-state)"
+        f"sequential: {args.requests} requests in {seq_wall:.2f}s "
+        f"({args.requests / seq_wall:.2f} req/s), {percentiles(seq_lat)}"
+    )
+
+    # --- batched server ----------------------------------------------------
+    server = RenderServer(
+        model,
+        config,
+        width=size,
+        height=size,
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+    )
+    compile_ms = server.warmup(cams[0])
+    print(f"batched compile: {compile_ms:.0f} ms")
+
+    with server:
+        t_start = time.perf_counter()
+        futures = []
+        for i, cam in enumerate(cams):
+            target = t_start + gaps[: i + 1].sum()
+            now = time.perf_counter()
+            if target > now:
+                time.sleep(target - now)
+            futures.append(server.submit(cam))
+        results = [f.result() for f in futures]
+        wall = time.perf_counter() - t_start
+
+    stats = server.stats()
+    lat = np.asarray([r.latency_ms for r in results])
+    print(
+        f"batched:    {args.requests} requests in {wall:.2f}s "
+        f"({args.requests / wall:.2f} req/s), {percentiles(lat)}, "
+        f"occupancy {stats['occupancy']:.0%} "
+        f"(mean batch {stats['mean_batch_size']:.1f}/{args.max_batch})"
+    )
+    print(
+        f"throughput: batched = {seq_wall / wall:.2f}x sequential "
+        f"({args.requests / wall:.2f} vs {args.requests / seq_wall:.2f} req/s)"
     )
 
 

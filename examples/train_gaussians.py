@@ -11,12 +11,13 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import RenderConfig, render
+from repro.core import RenderConfig, render, stack_cameras
 from repro.core.train3dgs import (
     accumulate_grad_stats,
     densify_and_prune,
     init_densify_state,
     render_loss,
+    render_loss_batch,
     reset_opacity,
 )
 from repro.core.gaussians import random_gaussians
@@ -35,6 +36,13 @@ def main() -> None:
         "--raster-path",
         choices=("dense", "binned", "pallas_binned"),
         default="binned",
+    )
+    ap.add_argument(
+        "--camera-batch",
+        type=int,
+        default=1,
+        help="views per step; >1 optimizes a multi-view loss over a camera "
+        "batch through the batched render pipeline",
     )
     args = ap.parse_args()
 
@@ -61,19 +69,33 @@ def main() -> None:
     )
     opt = adamw_init(g)
 
+    cam_batch = max(1, min(args.camera_batch, args.views))
+
     @jax.jit
     def step(g, opt, cam, target):
-        loss, grads = jax.value_and_grad(
-            lambda gg: render_loss(gg, cam, target, config)
-        )(g)
+        if cam_batch > 1:
+            loss_fn = lambda gg: render_loss_batch(gg, cam, target, config)  # noqa: E731
+        else:
+            loss_fn = lambda gg: render_loss(gg, cam, target, config)  # noqa: E731
+        loss, grads = jax.value_and_grad(loss_fn)(g)
         uv_grad_proxy = grads.positions[:, :2]  # screen-space grad stand-in
         g, opt, _ = adamw_update(ocfg, g, grads, opt)
         return g, opt, loss, uv_grad_proxy
 
     t0 = time.time()
     for i in range(args.steps):
-        view = data.view_at(i)
-        g, opt, loss, uvg = step(g, opt, data.cameras[view], targets[view])
+        if cam_batch > 1:
+            # Multi-view step: a contiguous window of views per step (the
+            # camera batch shares one compiled executable across steps).
+            views = [
+                data.view_at(i * cam_batch + j) for j in range(cam_batch)
+            ]
+            cams_i = stack_cameras([data.cameras[v] for v in views])
+            tgt_i = jnp.stack([targets[v] for v in views])
+            g, opt, loss, uvg = step(g, opt, cams_i, tgt_i)
+        else:
+            view = data.view_at(i)
+            g, opt, loss, uvg = step(g, opt, data.cameras[view], targets[view])
         dstate = accumulate_grad_stats(
             dstate, uvg, jnp.ones((capacity,))
         )

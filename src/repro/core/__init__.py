@@ -20,10 +20,18 @@ from repro.core.gaussians import (
     clustered_gaussians,
     random_gaussians,
 )
+from repro.core.multicam import (
+    CameraBatch,
+    render_batch,
+    render_batch_jit,
+    stack_cameras,
+    unstack_cameras,
+)
 from repro.core.render import render, render_jit
 
 __all__ = [
     "Camera",
+    "CameraBatch",
     "DEFAULT_CONFIG",
     "GaussianFeatures",
     "GaussianParams",
@@ -41,5 +49,9 @@ __all__ = [
     "random_gaussians",
     "rasterize_binned",
     "render",
+    "render_batch",
+    "render_batch_jit",
     "render_jit",
+    "stack_cameras",
+    "unstack_cameras",
 ]

@@ -110,6 +110,7 @@ def bin_gaussians(
     tile_size: int = 16,
     capacity: int = DEFAULT_CAPACITY,
     tile_chunk: int | None = 64,
+    select: str = "topk",
 ) -> TileBins:
     """Build per-tile index lists from *depth-sorted* features.
 
@@ -122,9 +123,16 @@ def bin_gaussians(
       capacity: fixed list length K (clamped to G).
       tile_chunk: tiles processed per ``lax.map`` step — bounds the (chunk, G)
         overlap matrix; None = all tiles at once.
+      select: selection primitive for the front-most-K candidates — both
+        produce identical lists. ``"topk"`` (the original) runs
+        ``lax.top_k`` on the negated candidates; ``"sort"`` sorts the
+        candidate matrix and takes the prefix, which lowers much better on
+        CPU and under ``vmap`` (the batched multi-camera path uses it).
 
     Returns a :class:`TileBins`.
     """
+    if select not in ("topk", "sort"):
+        raise ValueError(f"select={select!r} not in ('topk', 'sort')")
     g = feats_sorted.uv.shape[0]
     tiles_y, tiles_x = tile_grid_shape(height, width, tile_size)
     num_tiles = tiles_y * tiles_x
@@ -150,9 +158,12 @@ def bin_gaussians(
             & (ty[:, None] <= y1[None, :])
         )  # (C, G)
         count = jnp.sum(overlap, axis=-1).astype(jnp.int32)
-        # Front-most K: smallest overlapping indices. top_k on the negated
-        # candidate index returns them descending -> negate back = ascending.
+        # Front-most K: the smallest overlapping indices, ascending.
         cand = jnp.where(overlap, iota_g[None, :], sentinel)
+        if select == "sort":
+            return jnp.sort(cand, axis=-1)[..., :k], count
+        # top_k on the negated candidates returns them descending ->
+        # negate back = ascending.
         neg_topk, _ = jax.lax.top_k(-cand, k)
         return -neg_topk, count
 
@@ -196,6 +207,32 @@ def _pad_features(feats: GaussianFeatures) -> GaussianFeatures:
     return jax.tree.map(pad1, feats)
 
 
+def tile_origins(
+    tiles_y: int, tiles_x: int, tile_size: int, dtype=jnp.float32
+) -> jax.Array:
+    """(T, 2) pixel-space origin (x, y) of each tile, row-major tile order."""
+    tile_ids = jnp.arange(tiles_y * tiles_x, dtype=jnp.int32)
+    return jnp.stack(
+        [(tile_ids % tiles_x) * tile_size, (tile_ids // tiles_x) * tile_size],
+        axis=-1,
+    ).astype(dtype)
+
+
+def untile_image(
+    out: jax.Array, tiles_y: int, tiles_x: int, tile_size: int,
+    height: int, width: int,
+) -> jax.Array:
+    """(..., T, tile^2, 3) row-major blended tiles -> (..., H, W, 3) crop."""
+    lead = out.shape[:-3]
+    img = out.reshape(lead + (tiles_y, tiles_x, tile_size, tile_size, 3))
+    n = len(lead)
+    perm = tuple(range(n)) + (n, n + 2, n + 1, n + 3, n + 4)
+    img = img.transpose(perm).reshape(
+        lead + (tiles_y * tile_size, tiles_x * tile_size, 3)
+    )
+    return img[..., :height, :width, :]
+
+
 def _tile_pixel_offsets(tile_size: int, dtype=jnp.float32) -> jax.Array:
     """(tile_size^2, 2) pixel-center offsets within one tile (x, y)."""
     ys, xs = jnp.meshgrid(
@@ -216,24 +253,45 @@ EARLY_EXIT_EPS = 1.0 / 255.0
 SCAN_CHUNK = 64
 
 
-def rasterize_binned(
-    feats_sorted: GaussianFeatures,
-    bins: TileBins,
-    height: int,
-    width: int,
+def blend_tile_chunks(
+    feats_pad: GaussianFeatures,
+    indices: jax.Array,
+    origins: jax.Array,
+    counts: jax.Array,
     background: jax.Array,
     *,
+    tile_size: int,
+    sentinel: int,
     tile_chunk: int | None = 64,
     early_exit: bool = True,
 ) -> jax.Array:
-    """Blend each tile against its index list only. Returns (H, W, 3).
+    """Chunked-scan blender over explicit per-tile work lists.
 
-    ``feats_sorted`` must be the same depth-sorted features the bins were
-    built from. Gradients flow through the per-tile feature gather; the
-    indices themselves are discrete.
+    The shared blending engine behind :func:`rasterize_binned` (one camera,
+    tiles in row-major order) and the batched multi-camera path
+    (``repro.core.multicam``, tiles pooled across cameras and count-sorted
+    for load balance). The caller owns the tile *schedule*; this function
+    owns the math.
+
+    Args:
+      feats_pad: gather source; every field has leading axis M, and row
+        ``sentinel`` (and any other index used as list padding) must be an
+        all-zero record so sentinel lanes blend as alpha 0.
+      indices: (Tn, K) int32 rows into ``feats_pad``, ascending depth order
+        per tile, padded with ``sentinel``.
+      origins: (Tn, 2) pixel-space origin (x, y) of each tile.
+      counts: (Tn,) int32 live entries per tile (drives the sentinel skip).
+      background: (3,) background color.
+      tile_size: tile edge in pixels.
+      sentinel: the padding index (used for internal tile/list padding too).
+      tile_chunk: tiles blended per ``lax.map`` step; None = all at once.
+      early_exit: also stop a chunk's scan once every pixel's transmittance
+        saturates below :data:`EARLY_EXIT_EPS`.
+
+    Returns (Tn, tile_size^2, 3) blended tiles (background already applied).
 
     The per-tile list is traversed in :data:`SCAN_CHUNK`-wide chunks
-    (front-to-back); a chunk is skipped entirely once
+    (front-to-back); a chunk of the scan is skipped entirely once
 
     * the remaining entries of every tile in the chunk are sentinels (exact:
       sentinels gather all-zero records and blend as alpha 0), or
@@ -247,23 +305,17 @@ def rasterize_binned(
     """
     from repro.core import rasterize as rast_lib  # late: avoid import cycle
 
-    tile = bins.tile_size
-    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
-    num_tiles = bins.num_tiles
-    feats_pad = _pad_features(feats_sorted)
-    offsets = _tile_pixel_offsets(tile, dtype=feats_sorted.uv.dtype)
-    sentinel = jnp.int32(feats_sorted.uv.shape[0])
+    tile = tile_size
+    num_tiles = indices.shape[0]
+    dtype = feats_pad.uv.dtype
+    offsets = _tile_pixel_offsets(tile, dtype=dtype)
+    sentinel = jnp.int32(sentinel)
 
-    k = bins.capacity
+    k = indices.shape[-1]
     sc = min(SCAN_CHUNK, k)
     pad_k = (-k) % sc
-    idx_all = jnp.pad(bins.indices, ((0, 0), (0, pad_k)), constant_values=sentinel)
+    idx_all = jnp.pad(indices, ((0, 0), (0, pad_k)), constant_values=sentinel)
     num_scan = (k + pad_k) // sc
-
-    tile_ids = jnp.arange(num_tiles, dtype=jnp.int32)
-    origin = jnp.stack(
-        [(tile_ids % tiles_x) * tile, (tile_ids // tiles_x) * tile], axis=-1
-    ).astype(feats_sorted.uv.dtype)  # (T, 2)
 
     def blend_tiles(idx: jax.Array, org: jax.Array, count: jax.Array) -> jax.Array:
         """((C, S*sc) indices, (C, 2) origins, (C,) counts) -> (C, tile^2, 3)."""
@@ -296,8 +348,8 @@ def rasterize_binned(
             return jax.lax.cond(live, blend, lambda c: c, (t_run, acc)), None
 
         init = (
-            jnp.ones((c_tiles, tile * tile, 1), feats_sorted.uv.dtype),
-            jnp.zeros((c_tiles, tile * tile, 3), feats_sorted.uv.dtype),
+            jnp.ones((c_tiles, tile * tile, 1), dtype),
+            jnp.zeros((c_tiles, tile * tile, 3), dtype),
         )
         (t_fin, acc), _ = jax.lax.scan(
             step, init, (jnp.arange(num_scan, dtype=jnp.int32), idx_chunks)
@@ -305,28 +357,57 @@ def rasterize_binned(
         return acc + t_fin * background[None, None, :]
 
     if tile_chunk is None or tile_chunk >= num_tiles:
-        out = blend_tiles(idx_all, origin, bins.count)  # (T, tp, 3)
-    else:
-        pad = (-num_tiles) % tile_chunk
-        idx_p = jnp.pad(idx_all, ((0, pad), (0, 0)), constant_values=sentinel)
-        org_p = jnp.pad(origin, ((0, pad), (0, 0)))
-        cnt_p = jnp.pad(bins.count, (0, pad))
-        out = jax.lax.map(
-            lambda args: blend_tiles(*args),
-            (
-                idx_p.reshape(-1, tile_chunk, k + pad_k),
-                org_p.reshape(-1, tile_chunk, 2),
-                cnt_p.reshape(-1, tile_chunk),
-            ),
-        )
-        out = out.reshape(-1, tile * tile, 3)[:num_tiles]
+        return blend_tiles(idx_all, origins, counts)  # (Tn, tp, 3)
 
-    # (T, tile^2, 3) -> (H_pad, W_pad, 3) -> crop
-    img = out.reshape(tiles_y, tiles_x, tile, tile, 3)
-    img = img.transpose(0, 2, 1, 3, 4).reshape(
-        tiles_y * tile, tiles_x * tile, 3
+    pad = (-num_tiles) % tile_chunk
+    idx_p = jnp.pad(idx_all, ((0, pad), (0, 0)), constant_values=sentinel)
+    org_p = jnp.pad(origins, ((0, pad), (0, 0)))
+    cnt_p = jnp.pad(counts, (0, pad))
+    out = jax.lax.map(
+        lambda args: blend_tiles(*args),
+        (
+            idx_p.reshape(-1, tile_chunk, k + pad_k),
+            org_p.reshape(-1, tile_chunk, 2),
+            cnt_p.reshape(-1, tile_chunk),
+        ),
     )
-    return img[:height, :width]
+    return out.reshape(-1, tile * tile, 3)[:num_tiles]
+
+
+def rasterize_binned(
+    feats_sorted: GaussianFeatures,
+    bins: TileBins,
+    height: int,
+    width: int,
+    background: jax.Array,
+    *,
+    tile_chunk: int | None = 64,
+    early_exit: bool = True,
+) -> jax.Array:
+    """Blend each tile against its index list only. Returns (H, W, 3).
+
+    ``feats_sorted`` must be the same depth-sorted features the bins were
+    built from. Gradients flow through the per-tile feature gather; the
+    indices themselves are discrete. The traversal/skip semantics live in
+    :func:`blend_tile_chunks` (shared with the batched multi-camera path).
+    """
+    tile = bins.tile_size
+    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
+    feats_pad = _pad_features(feats_sorted)
+    origin = tile_origins(tiles_y, tiles_x, tile, dtype=feats_sorted.uv.dtype)
+
+    out = blend_tile_chunks(
+        feats_pad,
+        bins.indices,
+        origin,
+        bins.count,
+        background,
+        tile_size=tile,
+        sentinel=feats_sorted.uv.shape[0],
+        tile_chunk=tile_chunk,
+        early_exit=early_exit,
+    )
+    return untile_image(out, tiles_y, tiles_x, tile, height, width)
 
 
 # ---------------------------------------------------------------------------

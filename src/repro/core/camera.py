@@ -97,11 +97,22 @@ def orbit_cameras(
     height_offset: float = 1.5,
     width: int = 128,
     height: int = 128,
-) -> list[Camera]:
-    """A ring of cameras orbiting the origin — synthetic multi-view training set."""
+    stacked: bool = False,
+):
+    """A ring of cameras orbiting the origin — synthetic multi-view training set.
+
+    Returns a python list of :class:`Camera` by default; with
+    ``stacked=True`` returns the same ring as one
+    :class:`repro.core.multicam.CameraBatch` (leading camera axis), ready
+    for ``render_batch`` / the batched training step.
+    """
     cams = []
     for i in range(num):
         theta = 2.0 * np.pi * i / num
         eye = (radius * np.cos(theta), height_offset, radius * np.sin(theta))
         cams.append(look_at_camera(eye, (0.0, 0.0, 0.0), width=width, height=height))
+    if stacked:
+        from repro.core.multicam import stack_cameras  # late: avoids cycle
+
+        return stack_cameras(cams)
     return cams

@@ -107,6 +107,91 @@ def sharded_features(
     return _features
 
 
+def _axis_size(mesh: Mesh, names: Sequence[str]) -> int:
+    s = 1
+    for nm in names:
+        s *= mesh.shape[nm]
+    return s
+
+
+def _axis_index(mesh: Mesh, names: Sequence[str]) -> jax.Array:
+    """Linearized index of this device along the given mesh axes."""
+    idx = jax.lax.axis_index(names[0])
+    for nm in names[1:]:
+        idx = idx * mesh.shape[nm] + jax.lax.axis_index(nm)
+    return idx
+
+
+def _multi_axis_all_gather(x, names: Sequence[str]):
+    for nm in reversed(names):
+        x = jax.lax.all_gather(x, nm, axis=0, tiled=True)
+    return x
+
+
+def _raster_device_rows(
+    gathered: GaussianFeatures,
+    cfg: RenderConfig,
+    raster_path: str,
+    my_rows: jax.Array | int,
+    width: int,
+    height: int,
+    row0: jax.Array,
+    bg: jax.Array,
+) -> jax.Array:
+    """Rasterize one device's slice of pixel rows from gathered, depth-sorted
+    features. Shared by :func:`sharded_render` (one camera per call) and
+    :func:`sharded_render_batch` (camera-major loop per device).
+
+    For the binned paths the features are shifted so this device's rows
+    start at y=0, then binned + blended as a ``my_rows x width`` sub-image
+    (the per-tile list build shards alongside the blending);
+    ``pallas_binned`` compacts the local lists and blends through the
+    compact Pallas kernel (custom VJP -> the sharded path stays trainable).
+    ``dense`` keeps the all-pairs oracle blend on the row slice.
+    """
+    if raster_path in ("binned", "pallas_binned"):
+        shift = jnp.stack([jnp.zeros((), bg.dtype), row0.astype(bg.dtype)])
+        local = dataclasses.replace(gathered, uv=gathered.uv - shift[None, :])
+        if raster_path == "pallas_binned":
+            from repro.kernels.gaussian_features.ref import pack_features
+            from repro.kernels.tile_rasterize.ops import tile_rasterize_compact
+
+            return tile_rasterize_compact(
+                pack_features(local),
+                my_rows,
+                width,
+                bg,
+                tile_size=cfg.tile_size,
+                capacity=cfg.tile_capacity,
+                block_g=cfg.block_g,
+                tile_chunk=cfg.tile_chunk,
+            )
+        bins = bin_lib.bin_gaussians(
+            local,
+            my_rows,
+            width,
+            tile_size=cfg.tile_size,
+            capacity=cfg.tile_capacity,
+            tile_chunk=cfg.tile_chunk,
+        )
+        return bin_lib.rasterize_binned(
+            local,
+            bins,
+            my_rows,
+            width,
+            bg,
+            tile_chunk=cfg.tile_chunk,
+            early_exit=cfg.early_exit,
+        )
+
+    pix = rast_lib.pixel_grid(height, width)
+    pix = jax.lax.dynamic_slice_in_dim(
+        pix.reshape(height, width, 2), row0, my_rows, axis=0
+    ).reshape(-1, 2)
+    out = rast_lib.rasterize_pixels(pix, gathered, bg)
+    return out.reshape(my_rows, width, 3)
+
+
 def sharded_render(
     mesh: Mesh,
     gaussian_axes: Sequence[str],
@@ -157,84 +242,95 @@ def sharded_render(
             )
             gathered = rast_lib.sort_by_depth(gathered)
             # Stage 3: every device rasterizes its slice of pixel rows.
-            my_rows = cam_rep.height // _axis_size(pixel_axes)
-            row0 = _pixel_axis_index(pixel_axes) * my_rows
-
-            if raster_path in ("binned", "pallas_binned"):
-                # Shift screen space so this device's rows start at y=0, then
-                # bin + blend the my_rows x W sub-image locally.
-                shift = jnp.stack(
-                    [jnp.zeros((), bg.dtype), row0.astype(bg.dtype)]
-                )
-                local = dataclasses.replace(
-                    gathered, uv=gathered.uv - shift[None, :]
-                )
-                if raster_path == "pallas_binned":
-                    # Per-device gather-to-compact over this device's pixel
-                    # rows only; the compact Pallas kernel (custom VJP) does
-                    # the blending, so the sharded path trains too.
-                    from repro.kernels.gaussian_features.ref import (
-                        pack_features,
-                    )
-                    from repro.kernels.tile_rasterize.ops import (
-                        tile_rasterize_compact,
-                    )
-
-                    return tile_rasterize_compact(
-                        pack_features(local),
-                        my_rows,
-                        cam_rep.width,
-                        bg,
-                        tile_size=cfg.tile_size,
-                        capacity=cfg.tile_capacity,
-                        block_g=cfg.block_g,
-                        tile_chunk=cfg.tile_chunk,
-                    )
-                bins = bin_lib.bin_gaussians(
-                    local,
-                    my_rows,
-                    cam_rep.width,
-                    tile_size=cfg.tile_size,
-                    capacity=cfg.tile_capacity,
-                    tile_chunk=cfg.tile_chunk,
-                )
-                return bin_lib.rasterize_binned(
-                    local,
-                    bins,
-                    my_rows,
-                    cam_rep.width,
-                    bg,
-                    tile_chunk=cfg.tile_chunk,
-                    early_exit=cfg.early_exit,
-                )
-
-            pix = rast_lib.pixel_grid(cam_rep.height, cam_rep.width)
-            pix = jax.lax.dynamic_slice_in_dim(
-                pix.reshape(cam_rep.height, cam_rep.width, 2),
-                row0,
+            my_rows = cam_rep.height // _axis_size(mesh, pixel_axes)
+            row0 = _axis_index(mesh, pixel_axes) * my_rows
+            return _raster_device_rows(
+                gathered,
+                cfg,
+                raster_path,
                 my_rows,
-                axis=0,
-            ).reshape(-1, 2)
-            out = rast_lib.rasterize_pixels(pix, gathered, bg)
-            return out.reshape(my_rows, cam_rep.width, 3)
-
-        def _axis_size(names):
-            s = 1
-            for nm in names:
-                s *= mesh.shape[nm]
-            return s
-
-        def _pixel_axis_index(names):
-            idx = jax.lax.axis_index(names[0])
-            for nm in names[1:]:
-                idx = idx * mesh.shape[nm] + jax.lax.axis_index(nm)
-            return idx
-
-        def _multi_axis_all_gather(x, names):
-            for nm in reversed(names):
-                x = jax.lax.all_gather(x, nm, axis=0, tiled=True)
-            return x
+                cam_rep.width,
+                cam_rep.height,
+                row0,
+                bg,
+            )
 
         return _impl(g, cam, background)
+
+    return _render
+
+
+def sharded_render_batch(
+    mesh: Mesh,
+    gaussian_axes: Sequence[str],
+    camera_axes: Sequence[str],
+    pixel_axes: Sequence[str],
+    *,
+    config: RenderConfig | None = None,
+):
+    """Batched multi-camera render sharded cameras x pixel-rows on the mesh.
+
+    The serving-scale layout: the camera batch shards along ``camera_axes``
+    (each device owns C / n_cam cameras), and within each camera every
+    device rasterizes its slice of pixel rows along ``pixel_axes`` — the
+    same row-sharding as :func:`sharded_render`, looped camera-major per
+    device. Feature computation shards Gaussians along ``gaussian_axes``
+    (disjoint from ``camera_axes``) and all-gathers the small feature
+    records, exactly like the single-camera pipeline.
+
+    Returns a callable ``(g, cams: CameraBatch, background) -> (C, H, W, 3)``
+    whose output is sharded over cameras (axis 0) and pixel rows (axis 1).
+    ``C`` must divide by the camera-axes size and ``H`` by the pixel-axes
+    size. Differentiable along every path the per-camera pipeline
+    differentiates (``pallas`` falls back to the jnp binned blend, as in
+    :func:`sharded_render`).
+    """
+    cfg = _pipeline_config(config)
+    feature_fn = _sharded_feature_fn(cfg)
+    raster_path = "binned" if cfg.raster_path == "pallas" else cfg.raster_path
+
+    if set(camera_axes) & set(gaussian_axes):
+        raise ValueError(
+            f"camera_axes {camera_axes} and gaussian_axes {gaussian_axes} "
+            "must be disjoint (cameras and Gaussians shard independently)"
+        )
+
+    gspec = P(tuple(gaussian_axes))
+    cspec = P(tuple(camera_axes))
+
+    extra = {"check_rep": False} if raster_path == "pallas_binned" else {}
+
+    def _render(g: GaussianParams, cams, background: jax.Array) -> jax.Array:
+        @functools.partial(
+            shard_map,
+            mesh=mesh,
+            in_specs=(gspec, cspec, P()),
+            out_specs=P(tuple(camera_axes), tuple(pixel_axes)),
+            **extra,
+        )
+        def _impl(g_shard, local_cams, bg):
+            my_rows = local_cams.height // _axis_size(mesh, pixel_axes)
+            row0 = _axis_index(mesh, pixel_axes) * my_rows
+
+            def per_camera(cam):
+                feats = feature_fn(g_shard, cam, sh_degree=cfg.sh_degree)
+                gathered = jax.tree.map(
+                    lambda x: _multi_axis_all_gather(x, gaussian_axes), feats
+                )
+                gathered = rast_lib.sort_by_depth(gathered)
+                return _raster_device_rows(
+                    gathered,
+                    cfg,
+                    raster_path,
+                    my_rows,
+                    cam.width,
+                    cam.height,
+                    row0,
+                    bg,
+                )
+
+            return jax.lax.map(per_camera, local_cams)
+
+        return _impl(g, cams, background)
 
     return _render

@@ -89,6 +89,32 @@ def render_loss(
     return gsplat_loss(img, target, lambda_dssim=lambda_dssim)
 
 
+def render_loss_batch(
+    params: GaussianParams,
+    cams,
+    targets: jax.Array,
+    config: RenderConfig | None = None,
+    *,
+    lambda_dssim: float = 0.2,
+) -> jax.Array:
+    """Multi-view objective: mean :func:`gsplat_loss` over a camera batch.
+
+    ``cams`` is a :class:`repro.core.multicam.CameraBatch` and ``targets``
+    the matching (C, H, W, 3) ground-truth stack. One training step against
+    C views through one compiled executable — gradients are identical (up
+    to f32 reassociation) to averaging C per-camera :func:`render_loss`
+    calls, but the render runs the batched pipeline (shared model
+    residency, cross-camera load-balanced blending).
+    """
+    from repro.core.multicam import render_batch  # late: imports render
+
+    imgs = render_batch(params, cams, config)
+    losses = jax.vmap(
+        lambda img, tgt: gsplat_loss(img, tgt, lambda_dssim=lambda_dssim)
+    )(imgs, targets)
+    return jnp.mean(losses)
+
+
 # ---------------------------------------------------------------------------
 # Densification / pruning state machine (fixed capacity, fully jittable)
 # ---------------------------------------------------------------------------

@@ -1,3 +1,4 @@
+from repro.serve.render_server import RenderResult, RenderServer
 from repro.serve.server import BatchedServer, GenerationResult
 
-__all__ = ["BatchedServer", "GenerationResult"]
+__all__ = ["BatchedServer", "GenerationResult", "RenderResult", "RenderServer"]

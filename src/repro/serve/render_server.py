@@ -1,0 +1,266 @@
+"""Async render serving — micro-batched camera requests over ``render_batch``.
+
+The deployment shape the paper targets: one trained Gaussian model, a stream
+of camera requests, throughput as the figure of merit. This server mirrors
+``BatchedServer``'s static-shape discipline for the render path:
+
+* requests enter a queue and are grouped by a **micro-batching window** —
+  the batcher thread takes the first waiting request, then collects until
+  either ``max_batch`` requests are in hand or ``max_wait_ms`` has elapsed
+  since the window opened;
+* the group is **padded to the fixed slot count** with sentinel cameras
+  (copies of the last real request), so every batch hits the same compiled
+  ``render_batch`` executable — no shape polymorphism, one warmup compile;
+* results fan back out to per-request futures, and the server records
+  per-request latency and batch occupancy (real requests / slots), the two
+  numbers that tell you whether the window is tuned for the arrival rate.
+
+The GIL is not a bottleneck here: the batcher thread spends its time inside
+XLA (which releases the GIL), so client threads keep enqueueing while a
+batch renders — queueing and compute overlap exactly as in a real server.
+
+A production deployment would add continuous batching (fill freed slots
+mid-flight) on top of the same jitted entry point; see DESIGN.md section 7.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.camera import Camera
+from repro.core.config import RenderConfig, as_config
+from repro.core.gaussians import GaussianParams
+from repro.core.multicam import CameraBatch, render_batch_jit, stack_cameras
+
+
+@dataclasses.dataclass
+class RenderResult:
+    """One served frame plus its request-level timing."""
+
+    image: np.ndarray  # (H, W, 3)
+    latency_ms: float  # enqueue -> result available
+    batch_size: int  # real requests in the batch that served this one
+
+
+@dataclasses.dataclass
+class _Request:
+    camera: Camera
+    future: Future
+    t_enqueue: float
+
+
+class RenderServer:
+    """Fixed-slot micro-batching render server over a resident model.
+
+    Args:
+      model: the Gaussian cloud to serve (resident for the server lifetime).
+      config: render configuration (static -> one executable per server).
+      width, height: static image size every request must match (the
+        batching contract; reject-on-mismatch keeps shapes static).
+      max_batch: batch slot count (the padded render width).
+      max_wait_ms: micro-batching window — how long the batcher waits for
+        the batch to fill after the first request arrives.
+    """
+
+    def __init__(
+        self,
+        model: GaussianParams,
+        config: RenderConfig | None = None,
+        *,
+        width: int = 128,
+        height: int = 128,
+        max_batch: int = 8,
+        max_wait_ms: float = 5.0,
+    ):
+        self.model = model
+        self.config = as_config(config)
+        self.width = int(width)
+        self.height = int(height)
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+
+        self._queue: queue.Queue[_Request | None] = queue.Queue()
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._stopping = False
+        self.compile_ms: float | None = None
+        # Stats (guarded by _lock): per-request latency, per-batch occupancy.
+        self._latencies_ms: list[float] = []
+        self._batch_sizes: list[int] = []
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warmup(self, camera: Camera | None = None) -> float:
+        """Compile the fixed-shape batch executable; returns compile ms.
+
+        Serving latencies must not fold compile time into request 0 — call
+        this before accepting traffic (``start`` does it for you).
+        """
+        cam = camera if camera is not None else self._dummy_camera()
+        batch = stack_cameras([cam] * self.max_batch)
+        t0 = time.perf_counter()
+        render_batch_jit(self.model, batch, self.config).block_until_ready()
+        self.compile_ms = (time.perf_counter() - t0) * 1e3
+        return self.compile_ms
+
+    def start(self) -> "RenderServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        if self.compile_ms is None:
+            self.warmup()
+        with self._lock:
+            self._stopping = False
+        self._thread = threading.Thread(target=self._batcher_loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        # Flip the stopping flag under the same lock submit() enqueues
+        # under: every successful submit's put strictly precedes the poison
+        # pill, so the batcher either serves it or its drain rejects it —
+        # no future is ever stranded.
+        with self._lock:
+            self._stopping = True
+            self._queue.put(None)  # poison pill
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "RenderServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, camera: Camera) -> Future:
+        """Enqueue one camera request; resolves to a :class:`RenderResult`."""
+        if (camera.width, camera.height) != (self.width, self.height):
+            raise ValueError(
+                f"request size {(camera.width, camera.height)} != server's "
+                f"static {(self.width, self.height)} (one executable per "
+                "server; run a second server for a second size)"
+            )
+        req = _Request(camera=camera, future=Future(), t_enqueue=time.perf_counter())
+        with self._lock:
+            if self._thread is None or self._stopping:
+                raise RuntimeError("server not started")
+            self._queue.put(req)
+        return req.future
+
+    def render(self, camera: Camera) -> RenderResult:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(camera).result()
+
+    def stats(self) -> dict:
+        """Latency percentiles + batch occupancy over the server lifetime."""
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, dtype=np.float64)
+            sizes = np.asarray(self._batch_sizes, dtype=np.float64)
+        if lat.size == 0:
+            # Same schema as the served case so pollers never KeyError on
+            # an idle server.
+            return {
+                "requests": 0,
+                "batches": 0,
+                "compile_ms": self.compile_ms,
+                "latency_ms_p50": 0.0,
+                "latency_ms_p95": 0.0,
+                "latency_ms_mean": 0.0,
+                "mean_batch_size": 0.0,
+                "occupancy": 0.0,
+            }
+        return {
+            "requests": int(lat.size),
+            "batches": int(sizes.size),
+            "compile_ms": self.compile_ms,
+            "latency_ms_p50": float(np.percentile(lat, 50)),
+            "latency_ms_p95": float(np.percentile(lat, 95)),
+            "latency_ms_mean": float(lat.mean()),
+            "mean_batch_size": float(sizes.mean()),
+            "occupancy": float(sizes.mean() / self.max_batch),
+        }
+
+    # -- batcher -----------------------------------------------------------
+
+    def _dummy_camera(self) -> Camera:
+        from repro.core.camera import look_at_camera
+
+        return look_at_camera(
+            (0.0, 1.0, -5.0), (0.0, 0.0, 0.0), width=self.width, height=self.height
+        )
+
+    def _collect_window(self, first: _Request) -> list[_Request]:
+        """Micro-batching window: up to max_batch requests or max_wait_ms."""
+        group = [first]
+        deadline = time.perf_counter() + self.max_wait_ms / 1e3
+        while len(group) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._queue.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is None:  # poison pill mid-window: put back, serve group
+                self._queue.put(None)
+                break
+            group.append(nxt)
+        return group
+
+    def _serve_batch(self, group: Sequence[_Request]) -> None:
+        # Pad to the slot count with sentinel cameras (static shapes); the
+        # sentinel is a copy of the last real camera, its output discarded.
+        pad = self.max_batch - len(group)
+        cams = [r.camera for r in group] + [group[-1].camera] * pad
+        batch: CameraBatch = stack_cameras(cams)
+        imgs = render_batch_jit(self.model, batch, self.config)
+        imgs = np.asarray(jax.device_get(imgs))
+        t_done = time.perf_counter()
+        with self._lock:
+            self._batch_sizes.append(len(group))
+            for r in group:
+                self._latencies_ms.append((t_done - r.t_enqueue) * 1e3)
+        for i, r in enumerate(group):
+            r.future.set_result(
+                RenderResult(
+                    image=imgs[i],
+                    latency_ms=(t_done - r.t_enqueue) * 1e3,
+                    batch_size=len(group),
+                )
+            )
+
+    def _batcher_loop(self) -> None:
+        while True:
+            req = self._queue.get()
+            if req is None:
+                break
+            group = self._collect_window(req)
+            try:
+                self._serve_batch(group)
+            except Exception as e:  # fan the failure out, keep serving
+                for r in group:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+        # Drain anything that raced in behind the poison pill (submit can
+        # pass the started check while stop() is joining) so no future is
+        # left unresolved forever.
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if req is not None and not req.future.done():
+                req.future.set_exception(
+                    RuntimeError("render server stopped before serving request")
+                )

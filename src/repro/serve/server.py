@@ -62,16 +62,19 @@ class BatchedServer:
     ) -> GenerationResult:
         """batch: family-specific prompt inputs (tokens [+frames/patches])."""
         state, logits = self._prefill(self.params, batch)
+        # Every sample folds its step index into the base key BEFORE use —
+        # the pre-loop sample is step 0, the loop samples are 1..steps. The
+        # raw PRNGKey(seed) is never consumed directly, so no two samples
+        # (and no other consumer of the seed) share a key.
         key = jax.random.PRNGKey(seed)
         toks, lps = [], []
-        tok = self._sample(logits, key)
+        tok = self._sample(logits, jax.random.fold_in(key, 0))
         for i in range(steps):
             lp = jax.nn.log_softmax(logits, axis=-1)
             lps.append(jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0])
             toks.append(tok)
             state, logits = self._decode(self.params, state, tok)
-            key = jax.random.fold_in(key, i)
-            tok = self._sample(logits, key)
+            tok = self._sample(logits, jax.random.fold_in(key, i + 1))
         return GenerationResult(
             tokens=np.stack([np.asarray(t) for t in toks], axis=1),
             logprobs=np.stack([np.asarray(l) for l in lps], axis=1),

@@ -145,6 +145,34 @@ class TestMultiDevice:
         )
         assert "COMPACT MATCH" in out
 
+    def test_sharded_render_batch_matches_single_device(self, run_multidevice):
+        """Camera x pixel-row sharded batch render reproduces render_batch
+        on a (cam=2, gs=2) mesh, binned and pallas_binned."""
+        out = run_multidevice(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core import (RenderConfig, random_gaussians,
+                                    orbit_cameras, render_batch)
+            from repro.core.pipeline import sharded_render_batch
+            from repro.launch.mesh import make_mesh
+            g = random_gaussians(jax.random.PRNGKey(0), 256)
+            cams = orbit_cameras(4, radius=5.0, width=32, height=32, stacked=True)
+            mesh = make_mesh((2, 2), ("cam", "gs"))
+            for path in ("binned", "pallas_binned"):
+                cfg = RenderConfig(raster_path=path, tile_capacity=256,
+                                   early_exit=False)
+                want = render_batch(g, cams, cfg)
+                rr = sharded_render_batch(mesh, ("gs",), ("cam",), ("gs",),
+                                          config=cfg)
+                got = jax.jit(rr)(g, cams, jnp.zeros(3))
+                np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                           rtol=1e-4, atol=1e-4)
+            print("BATCH MATCH")
+            """,
+            devices=4,
+        )
+        assert "BATCH MATCH" in out
+
     def test_trainer_restart_and_elastic_reshard(self, run_multidevice):
         out = run_multidevice(
             """

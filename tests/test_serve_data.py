@@ -43,6 +43,27 @@ class TestServer:
         b = srv.generate({"tokens": prompt}, steps=6, seed=1)
         assert (a.tokens != b.tokens).any()
 
+    def test_sampling_deterministic_and_first_key_folded(self):
+        """Same seed replays the same stream, and the *first* sample's key
+        is fold_in(PRNGKey(seed), 0) — never the raw un-folded seed key
+        (which another consumer of the seed could share)."""
+        cfg = get_smoke_config("tinyllama-1.1b")
+        mod = family_module(cfg)
+        params = P.init_tree(jax.random.PRNGKey(0), mod.param_defs(cfg))
+        srv = BatchedServer(cfg, params, max_seq=64, temperature=1.0)
+        prompt = jax.random.randint(jax.random.PRNGKey(9), (2, 8), 0, cfg.vocab_size)
+        a = srv.generate({"tokens": prompt}, steps=4, seed=3)
+        b = srv.generate({"tokens": prompt}, steps=4, seed=3)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(a.logprobs, b.logprobs)
+        # pin the fold: step-0 token == categorical(fold_in(key, 0), logits)
+        _, logits = srv._prefill(params, {"tokens": prompt})
+        key = jax.random.PRNGKey(3)
+        want = jax.random.categorical(
+            jax.random.fold_in(key, 0), logits / srv.temperature
+        )
+        np.testing.assert_array_equal(np.asarray(want), a.tokens[:, 0])
+
 
 class TestData:
     def test_deterministic_replay(self):
