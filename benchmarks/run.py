@@ -1,9 +1,9 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR3.json`` — the machine-readable perf trajectory (render
+writes ``BENCH_PR4.json`` — the machine-readable perf trajectory (render
 speedups, max-error, lane occupancy, batched-serving throughput/occupancy/
-latency) — to the repo root.
+latency, continuous-vs-microbatch scheduler sweep) — to the repo root.
 """
 
 from __future__ import annotations
@@ -13,7 +13,7 @@ import pathlib
 import sys
 import traceback
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR3.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
 
 
 def main() -> None:

@@ -1,12 +1,25 @@
-"""Render serving under a Poisson request stream — the paper's deployment
-shape: a trained Gaussian model served against a stream of camera requests,
-with throughput (req/s) as the headline metric.
+"""Render serving under bursty (and mixed-size) request streams — the
+paper's deployment shape: a trained Gaussian model served against a stream
+of camera requests, with throughput (req/s) as the headline metric.
 
-Drives the async micro-batching :class:`repro.serve.RenderServer` with
-Poisson arrivals and compares it against the sequential per-request baseline
-(one ``render_jit`` dispatch per camera — the pre-batching serving path).
+Drives the continuous-batching :class:`repro.serve.RenderServer` (persistent
+slot table, immediate refill, pipelined dispatch) against two baselines
+under the *same* arrival schedule:
+
+* the sequential per-request path (one ``render_jit`` dispatch per camera —
+  the pre-batching serving path);
+* the micro-batching window scheduler (``mode="microbatch"`` — PR 3's
+  collect-then-drain server).
+
+The stream is **bursty** Poisson by default (bursts of ``--burst`` requests
+at exponential gaps): exactly the shape where draining whole windows hurts,
+because a straggler behind a just-freed slot waits out ``max_wait_ms`` that
+the continuous scheduler never charges. ``--mixed-sizes`` adds a second
+image-size bucket (continuous mode only — the bucketed-executable contract),
+round-robining requests across sizes.
 
     PYTHONPATH=src python examples/serve_render.py [--requests 32]
+        [--arrival-rate 8] [--burst 3] [--mixed-sizes]
 """
 
 import argparse
@@ -17,7 +30,7 @@ import numpy as np
 
 from repro.core import RenderConfig, orbit_cameras, random_gaussians
 from repro.core.render import render_jit
-from repro.serve import RenderServer
+from repro.serve import RenderServer, replay_schedule
 
 
 def percentiles(lat_ms: np.ndarray) -> str:
@@ -25,6 +38,19 @@ def percentiles(lat_ms: np.ndarray) -> str:
         f"p50={np.percentile(lat_ms, 50):.1f} ms "
         f"p95={np.percentile(lat_ms, 95):.1f} ms"
     )
+
+
+def bursty_gaps(args, rng: np.random.Generator) -> np.ndarray:
+    """Per-request inter-arrival gaps: bursts of --burst at Poisson times."""
+    if args.arrival_rate <= 0:
+        return np.zeros(args.requests)  # one big burst (closed loop)
+    gaps = np.zeros(args.requests)
+    # Burst heads arrive at exponential gaps scaled so the *mean request*
+    # rate stays --arrival-rate; followers arrive immediately behind.
+    head_gap = args.burst / args.arrival_rate
+    for i in range(0, args.requests, args.burst):
+        gaps[i] = rng.exponential(head_gap)
+    return gaps
 
 
 def main() -> None:
@@ -43,12 +69,25 @@ def main() -> None:
     ap.add_argument(
         "--arrival-rate",
         type=float,
-        default=0.0,
+        default=8.0,
         help="mean Poisson arrivals per second; 0 = offered load arrives "
         "all at once (closed-loop throughput test)",
     )
+    ap.add_argument(
+        "--burst",
+        type=int,
+        default=3,
+        help="requests per arrival burst (1 = plain Poisson)",
+    )
+    ap.add_argument(
+        "--mixed-sizes",
+        action="store_true",
+        help="alternate requests between --image-size and half of it "
+        "(continuous server only: bucketed executables)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    args.burst = max(1, args.burst)
 
     model = random_gaussians(jax.random.PRNGKey(0), args.gaussians, extent=1.5)
     config = RenderConfig(
@@ -57,17 +96,15 @@ def main() -> None:
     size = args.image_size
     print(
         f"serving a {args.gaussians}-Gaussian model "
-        f"({args.raster_path} raster, {size}x{size})"
+        f"({args.raster_path} raster, {size}x{size}, "
+        f"bursts of {args.burst} at {args.arrival_rate:g} req/s)"
     )
 
-    # Request stream: cameras orbiting the scene (one static image size ->
-    # every batch hits one compiled executable).
+    # Request stream: cameras orbiting the scene (static image sizes ->
+    # every request hits a pre-compiled bucket executable).
     cams = orbit_cameras(args.requests, radius=5.0, width=size, height=size)
     rng = np.random.default_rng(args.seed)
-    if args.arrival_rate > 0:
-        gaps = rng.exponential(1.0 / args.arrival_rate, size=args.requests)
-    else:
-        gaps = np.zeros(args.requests)
+    gaps = bursty_gaps(args, rng)
 
     # --- sequential baseline (the pre-batching serving path) --------------
     # Explicit warmup: compile time is reported on its own line, never
@@ -77,58 +114,87 @@ def main() -> None:
     print(f"sequential compile: {(time.perf_counter() - t0) * 1e3:.0f} ms")
 
     seq_lat = []
-    t_start = time.perf_counter()
-    for i, cam in enumerate(cams):
-        target = t_start + gaps[: i + 1].sum()
-        now = time.perf_counter()
-        if target > now:
-            time.sleep(target - now)
+
+    def seq_submit(cam):
         t_req = time.perf_counter()
         render_jit(model, cam, config).block_until_ready()
-        seq_lat.append((time.perf_counter() - t_req) * 1e3)
-    seq_wall = time.perf_counter() - t_start
-    seq_lat = np.asarray(seq_lat)
+        lat = (time.perf_counter() - t_req) * 1e3
+        seq_lat.append(lat)
+        return lat
+
+    _, seq_wall = replay_schedule(seq_submit, cams, gaps)
     print(
-        f"sequential: {args.requests} requests in {seq_wall:.2f}s "
-        f"({args.requests / seq_wall:.2f} req/s), {percentiles(seq_lat)}"
+        f"sequential:  {args.requests} requests in {seq_wall:.2f}s "
+        f"({args.requests / seq_wall:.2f} req/s), "
+        f"{percentiles(np.asarray(seq_lat))}"
     )
 
-    # --- batched server ----------------------------------------------------
-    server = RenderServer(
-        model,
-        config,
-        width=size,
-        height=size,
-        max_batch=args.max_batch,
-        max_wait_ms=args.max_wait_ms,
-    )
-    compile_ms = server.warmup(cams[0])
-    print(f"batched compile: {compile_ms:.0f} ms")
-
-    with server:
-        t_start = time.perf_counter()
-        futures = []
-        for i, cam in enumerate(cams):
-            target = t_start + gaps[: i + 1].sum()
-            now = time.perf_counter()
-            if target > now:
-                time.sleep(target - now)
-            futures.append(server.submit(cam))
-        results = [f.result() for f in futures]
-        wall = time.perf_counter() - t_start
-
-    stats = server.stats()
-    lat = np.asarray([r.latency_ms for r in results])
+    # --- micro-batching baseline vs continuous batching -------------------
+    walls = {}
+    for mode in ("microbatch", "continuous"):
+        server = RenderServer(
+            model,
+            config,
+            width=size,
+            height=size,
+            max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms,
+            mode=mode,
+        )
+        compile_ms = server.warmup(cams[0])
+        print(f"{mode} compile: {compile_ms:.0f} ms")
+        with server:
+            results, wall = replay_schedule(server.submit, cams, gaps)
+        walls[mode] = wall
+        stats = server.stats()
+        lat = np.asarray([r.latency_ms for r in results])
+        print(
+            f"{mode + ':':<12} {args.requests} requests in {wall:.2f}s "
+            f"({args.requests / wall:.2f} req/s), {percentiles(lat)}, "
+            f"occupancy {stats['occupancy']:.0%} "
+            f"(mean batch {stats['mean_batch_size']:.1f}/{args.max_batch})"
+        )
     print(
-        f"batched:    {args.requests} requests in {wall:.2f}s "
-        f"({args.requests / wall:.2f} req/s), {percentiles(lat)}, "
-        f"occupancy {stats['occupancy']:.0%} "
-        f"(mean batch {stats['mean_batch_size']:.1f}/{args.max_batch})"
+        f"throughput:  continuous = {walls['microbatch'] / walls['continuous']:.2f}x "
+        f"micro-batching, {seq_wall / walls['continuous']:.2f}x sequential"
     )
-    print(
-        f"throughput: batched = {seq_wall / wall:.2f}x sequential "
-        f"({args.requests / wall:.2f} vs {args.requests / seq_wall:.2f} req/s)"
-    )
+
+    # --- mixed-size buckets (continuous only) ------------------------------
+    if args.mixed_sizes:
+        small = size // 2
+        mixed_cams = [
+            c
+            for pair in zip(
+                orbit_cameras(
+                    (args.requests + 1) // 2, radius=5.0, width=size, height=size
+                ),
+                orbit_cameras(
+                    (args.requests + 1) // 2, radius=5.0, width=small, height=small
+                ),
+            )
+            for c in pair
+        ][: args.requests]
+        server = RenderServer(
+            model,
+            config,
+            sizes=[(size, size), (small, small)],
+            max_batch=args.max_batch,
+            mode="continuous",
+        )
+        compile_ms = server.warmup()
+        print(
+            f"mixed sizes {size}^2 + {small}^2: compile {compile_ms:.0f} ms "
+            f"({len(server.buckets)} bucket executables)"
+        )
+        with server:
+            results, wall = replay_schedule(server.submit, mixed_cams, gaps)
+        lat = np.asarray([r.latency_ms for r in results])
+        stats = server.stats()
+        print(
+            f"mixed:       {args.requests} requests in {wall:.2f}s "
+            f"({args.requests / wall:.2f} req/s), {percentiles(lat)}, "
+            f"occupancy {stats['occupancy']:.0%}"
+        )
 
 
 if __name__ == "__main__":

@@ -24,6 +24,8 @@ from repro.core.multicam import (
     CameraBatch,
     render_batch,
     render_batch_jit,
+    render_batch_masked,
+    render_batch_masked_jit,
     stack_cameras,
     unstack_cameras,
 )
@@ -51,6 +53,8 @@ __all__ = [
     "render",
     "render_batch",
     "render_batch_jit",
+    "render_batch_masked",
+    "render_batch_masked_jit",
     "render_jit",
     "stack_cameras",
     "unstack_cameras",

@@ -15,7 +15,9 @@ Everything is static-shape and jittable:
   (one past the last Gaussian) and gather a padded all-zero feature record,
 * on overflow the *front-most* (nearest) Gaussians are kept — because the
   features are globally depth-sorted first, "front-most" is simply "smallest
-  index", so per-tile selection is a top-k over indices, no per-tile sort,
+  index", so per-tile selection is a smallest-K over indices (a sorted
+  prefix by default, ``lax.top_k`` behind ``select="topk"``) — no per-tile
+  depth sort,
 * the index selection is discrete (under ``stop_gradient``); gradients flow
   through the subsequent feature *gather*, the same idiom as
   ``rasterize.sort_by_depth``.
@@ -110,7 +112,7 @@ def bin_gaussians(
     tile_size: int = 16,
     capacity: int = DEFAULT_CAPACITY,
     tile_chunk: int | None = 64,
-    select: str = "topk",
+    select: str = "sort",
 ) -> TileBins:
     """Build per-tile index lists from *depth-sorted* features.
 
@@ -124,10 +126,13 @@ def bin_gaussians(
       tile_chunk: tiles processed per ``lax.map`` step — bounds the (chunk, G)
         overlap matrix; None = all tiles at once.
       select: selection primitive for the front-most-K candidates — both
-        produce identical lists. ``"topk"`` (the original) runs
-        ``lax.top_k`` on the negated candidates; ``"sort"`` sorts the
-        candidate matrix and takes the prefix, which lowers much better on
-        CPU and under ``vmap`` (the batched multi-camera path uses it).
+        produce identical lists (pinned by test). ``"sort"`` (the default)
+        sorts the candidate matrix and takes the prefix, which lowers much
+        better on CPU and under ``vmap`` (~3.5x faster single-camera
+        binning measured on the CPU backend at 2k G / 64^2; the batched
+        multi-camera path always used it). ``"topk"`` (the original) runs
+        ``lax.top_k`` on the negated candidates — kept for the equality
+        pin and comparison benches.
 
     Returns a :class:`TileBins`.
     """

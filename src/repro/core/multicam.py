@@ -170,9 +170,20 @@ def bin_gaussians_batch(
 
 
 def _render_batch_binned(
-    g: GaussianParams, cams: CameraBatch, cfg: RenderConfig
+    g: GaussianParams,
+    cams: CameraBatch,
+    cfg: RenderConfig,
+    active: jax.Array | None = None,
 ) -> jax.Array:
-    """The batched ``binned`` raster path. Returns (C, H, W, 3)."""
+    """The batched ``binned`` raster path. Returns (C, H, W, 3).
+
+    ``active`` (C,) bool masks out sentinel slots: an inactive camera's tile
+    lists are forced to zero count / all-sentinel indices *before* the pooled
+    count-sort, so the blender's sentinel skip ends its chunks after zero
+    scan steps — a masked slot skips all blend work and renders the
+    background color. (The vmapped features + binning still run at batch
+    width; only the blend scales with occupancy.)
+    """
     from repro.core.render import compute_features  # late: render imports us
 
     height, width = cams.height, cams.width
@@ -191,6 +202,11 @@ def _render_batch_binned(
         capacity=cfg.tile_capacity,
         tile_chunk=cfg.tile_chunk,
     )  # (C, T, K), (C, T)
+
+    if active is not None:
+        act = active.astype(bool)
+        counts = jnp.where(act[:, None], counts, 0)
+        indices = jnp.where(act[:, None, None], indices, jnp.int32(gn))
 
     tiles_y, tiles_x = binning.tile_grid_shape(height, width, cfg.tile_size)
     num_tiles = tiles_y * tiles_x
@@ -275,3 +291,57 @@ def render_batch_jit(
 ) -> jax.Array:
     """Jitted :func:`render_batch`; ``config`` is static (hashable)."""
     return render_batch(g, cams, config)
+
+
+def render_batch_masked(
+    g: GaussianParams,
+    cams: CameraBatch,
+    active: jax.Array,
+    config: RenderConfig | None = None,
+) -> jax.Array:
+    """Render only the ``active`` slots of a fixed-width camera batch.
+
+    The continuous-batching serving primitive: the slot table is a
+    fixed-width :class:`CameraBatch` (static shapes -> one executable per
+    image size) in which ``active`` (C,) bool — a *traced* operand, so any
+    occupancy pattern hits the same compile — marks the live slots. Inactive
+    slots return ``config.background`` and cost ~0 blend work:
+
+    * ``binned`` path: an inactive camera's tile lists are masked to zero
+      count / all-sentinel before the pooled count-sort, so the shared
+      blender's sentinel skip ends those chunks at zero scan steps;
+    * ``lax.map`` paths (``dense``, ``pallas``, ``pallas_binned``): each
+      camera's render sits under a ``lax.cond`` on its slot bit, skipped
+      entirely for inactive slots.
+
+    Active slots match :func:`render_batch` exactly (the masking only adds
+    empty tiles to the pooled schedule; per-tile math is untouched).
+    """
+    from repro.core.render import render  # late: render imports this module
+
+    cfg = as_config(config)
+    active = jnp.asarray(active, dtype=bool)
+    if cfg.raster_path == "binned" and cfg.feature_path != "pallas":
+        return _render_batch_binned(g, cams, cfg, active=active)
+    background = jnp.broadcast_to(
+        jnp.asarray(cfg.background, dtype=jnp.float32),
+        (cams.height, cams.width, 3),
+    )
+    return jax.lax.map(
+        lambda args: jax.lax.cond(
+            args[1], lambda cam: render(g, cam, cfg), lambda cam: background,
+            args[0],
+        ),
+        (cams, active),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def render_batch_masked_jit(
+    g: GaussianParams,
+    cams: CameraBatch,
+    active: jax.Array,
+    config: RenderConfig | None = None,
+) -> jax.Array:
+    """Jitted :func:`render_batch_masked`; ``config`` is static (hashable)."""
+    return render_batch_masked(g, cams, active, config)

@@ -1,4 +1,10 @@
-from repro.serve.render_server import RenderResult, RenderServer
+from repro.serve.render_server import RenderResult, RenderServer, replay_schedule
 from repro.serve.server import BatchedServer, GenerationResult
 
-__all__ = ["BatchedServer", "GenerationResult", "RenderResult", "RenderServer"]
+__all__ = [
+    "BatchedServer",
+    "GenerationResult",
+    "RenderResult",
+    "RenderServer",
+    "replay_schedule",
+]

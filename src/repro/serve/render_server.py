@@ -1,30 +1,54 @@
-"""Async render serving — micro-batched camera requests over ``render_batch``.
+"""Async render serving — continuous batching over a persistent slot table.
 
 The deployment shape the paper targets: one trained Gaussian model, a stream
-of camera requests, throughput as the figure of merit. This server mirrors
-``BatchedServer``'s static-shape discipline for the render path:
+of camera requests, throughput as the figure of merit. PR 3's server grouped
+requests into micro-batch windows and **drained** each window before admitting
+new work, so one slow window capped req/s. This server schedules the way
+Orca-style iteration-level batching and vLLM's slot reuse do (PAPERS.md):
 
-* requests enter a queue and are grouped by a **micro-batching window** —
-  the batcher thread takes the first waiting request, then collects until
-  either ``max_batch`` requests are in hand or ``max_wait_ms`` has elapsed
-  since the window opened;
-* the group is **padded to the fixed slot count** with sentinel cameras
-  (copies of the last real request), so every batch hits the same compiled
-  ``render_batch`` executable — no shape polymorphism, one warmup compile;
-* results fan back out to per-request futures, and the server records
-  per-request latency and batch occupancy (real requests / slots), the two
-  numbers that tell you whether the window is tuned for the arrival rate.
+* a **persistent slot table** of ``max_batch`` lanes backs one fixed-width
+  ``render_batch_masked`` executable per image-size bucket. A slot holds at
+  most one request; free slots render as masked sentinel cameras whose
+  blend work is skipped entirely (features/binning still pay the batch
+  width — see ``core.multicam.render_batch_masked``), unlike the
+  micro-batching baseline's copied-camera padding, which blends at full
+  price;
+* the scheduler **admits continuously — no batching window**. An idle
+  server dispatches the moment a request arrives (partial steps are fine:
+  masked slots cost ~0); while a step renders, arrivals accumulate into
+  the next full-width step, and the instant the step's compute finishes
+  (``is_ready``) its slots are freed and the next step is dispatched
+  *before* the finished step's host-side harvest runs — XLA renders the
+  new step while device transfer, stats, and future fan-out happen, so a
+  request waits only for compute it genuinely contends with, never for a
+  window and never for bookkeeping;
+* every render finishes in exactly one step, so **harvesting a step frees
+  its slots** and the queue refills them without waiting for any other
+  in-flight work. **Per-slot generation counters** stamp each assignment;
+  a harvested lane only routes its image to the future whose generation it
+  carries, so a reused slot can never deliver a stale frame;
+* **mixed image sizes** are admitted via a small set of bucketed
+  executables (``sizes=[(128, 128), (256, 256)]``): each step serves one
+  bucket (chosen oldest-waiting-first — FIFO across buckets, starvation
+  free), requests for a size outside the bucket set are rejected at submit.
+  The static-shape contract survives: one compiled executable per bucket,
+  any occupancy pattern hits it via the traced ``active`` mask.
 
-The GIL is not a bottleneck here: the batcher thread spends its time inside
-XLA (which releases the GIL), so client threads keep enqueueing while a
-batch renders — queueing and compute overlap exactly as in a real server.
+``mode="microbatch"`` keeps PR 3's window-then-drain scheduler as the
+measured baseline (``benchmarks/bench_serving.py`` sweeps the two against
+identical arrival schedules).
 
-A production deployment would add continuous batching (fill freed slots
-mid-flight) on top of the same jitted entry point; see DESIGN.md section 7.
+Cancellation: a request's future is *claimed* with
+``set_running_or_notify_cancel()`` at admission — a future cancelled while
+queued silently gives its slot to the next request, and a claimed future can
+no longer be cancelled, so result fan-out never races a cancel into
+``InvalidStateError`` (which previously poisoned every other request in the
+group).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -33,12 +57,20 @@ from concurrent.futures import Future
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.camera import Camera
+from repro.core.camera import Camera, look_at_camera
 from repro.core.config import RenderConfig, as_config
 from repro.core.gaussians import GaussianParams
-from repro.core.multicam import CameraBatch, render_batch_jit, stack_cameras
+from repro.core.multicam import (
+    CameraBatch,
+    render_batch_jit,
+    render_batch_masked_jit,
+    stack_cameras,
+)
+
+MODES = ("continuous", "microbatch")
 
 
 @dataclasses.dataclass
@@ -47,7 +79,31 @@ class RenderResult:
 
     image: np.ndarray  # (H, W, 3)
     latency_ms: float  # enqueue -> result available
-    batch_size: int  # real requests in the batch that served this one
+    batch_size: int  # real requests in the step/batch that served this one
+
+
+def replay_schedule(submit, cams, gaps):
+    """Replay an open-loop arrival schedule against ``submit``.
+
+    ``gaps`` holds inter-arrival seconds (all zeros = one burst at t0).
+    ``submit`` may return a Future (async server) or a final value
+    (synchronous baseline); futures are resolved after the stream ends.
+    Returns ``(results, wall_seconds)`` with wall measured from t0 to the
+    last result. Shared by ``examples/serve_render.py`` and
+    ``benchmarks/bench_serving.py`` so example and benchmark replay
+    byte-identical offered load.
+    """
+    t_start = time.perf_counter()
+    out = []
+    target = t_start
+    for gap, cam in zip(gaps, cams):
+        target += gap
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        out.append(submit(cam))
+    results = [f.result() if hasattr(f, "result") else f for f in out]
+    return results, time.perf_counter() - t_start
 
 
 @dataclasses.dataclass
@@ -57,17 +113,43 @@ class _Request:
     t_enqueue: float
 
 
+@dataclasses.dataclass
+class _Lane:
+    """One slot assignment inside an in-flight step."""
+
+    slot: int
+    gen: int  # the slot's generation counter at assignment time
+    req: _Request
+
+
+@dataclasses.dataclass
+class _Step:
+    """One dispatched (asynchronous) masked-batch render."""
+
+    bucket: tuple[int, int]
+    lanes: list[_Lane]
+    images: jax.Array  # (max_batch, H, W, 3); a device future until ready
+
+
 class RenderServer:
-    """Fixed-slot micro-batching render server over a resident model.
+    """Continuous-batching render server over a resident Gaussian model.
 
     Args:
       model: the Gaussian cloud to serve (resident for the server lifetime).
-      config: render configuration (static -> one executable per server).
-      width, height: static image size every request must match (the
-        batching contract; reject-on-mismatch keeps shapes static).
-      max_batch: batch slot count (the padded render width).
-      max_wait_ms: micro-batching window — how long the batcher waits for
-        the batch to fill after the first request arrives.
+      config: render configuration (static -> one executable per bucket).
+      width, height: the (single) image-size bucket when ``sizes`` is not
+        given — the PR 3 signature, still the common case.
+      sizes: optional sequence of ``(width, height)`` buckets the server
+        admits. Requests are routed to their exact bucket; any other size is
+        rejected at submit (the static-shape contract: one compiled
+        executable per bucket, never a fresh compile from traffic).
+      max_batch: slot-table width (the padded render width of every bucket).
+      max_wait_ms: micro-batching window (``mode="microbatch"`` only) — how
+        long the batcher waits for the batch to fill after the first
+        request arrives. The continuous scheduler never waits.
+      mode: ``"continuous"`` (slot table, refill-at-completion, dispatch
+        pipelined ahead of harvest — the default) or ``"microbatch"``
+        (PR 3's window-then-drain baseline; single bucket only).
     """
 
     def __init__(
@@ -77,39 +159,80 @@ class RenderServer:
         *,
         width: int = 128,
         height: int = 128,
+        sizes: Sequence[tuple[int, int]] | None = None,
         max_batch: int = 8,
         max_wait_ms: float = 5.0,
+        mode: str = "continuous",
     ):
+        if mode not in MODES:
+            raise ValueError(f"mode={mode!r} not in {MODES}")
         self.model = model
         self.config = as_config(config)
-        self.width = int(width)
-        self.height = int(height)
+        if sizes is None:
+            sizes = [(int(width), int(height))]
+        self.buckets: tuple[tuple[int, int], ...] = tuple(
+            dict.fromkeys((int(w), int(h)) for w, h in sizes)
+        )
+        if not self.buckets:
+            raise ValueError("server needs at least one image-size bucket")
+        if mode == "microbatch" and len(self.buckets) > 1:
+            raise ValueError(
+                "microbatch mode is the single-size PR 3 baseline; "
+                "mixed-size buckets need mode='continuous'"
+            )
+        # Back-compat attributes: the primary bucket.
+        self.width, self.height = self.buckets[0]
         self.max_batch = int(max_batch)
         self.max_wait_ms = float(max_wait_ms)
+        self.mode = mode
 
         self._queue: queue.Queue[_Request | None] = queue.Queue()
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()
         self._stopping = False
-        self.compile_ms: float | None = None
-        # Stats (guarded by _lock): per-request latency, per-batch occupancy.
+        self.compile_ms: float | None = None  # summed across buckets
+        self.compile_ms_by_bucket: dict[tuple[int, int], float] = {}
+        # Sentinel camera per bucket: fills free slots (masked -> ~0 work).
+        self._sentinels = {
+            (w, h): look_at_camera(
+                (0.0, 1.0, -5.0), (0.0, 0.0, 0.0), width=w, height=h
+            )
+            for (w, h) in self.buckets
+        }
+        # Slot table (scheduler-thread-private after start).
+        self._slot_req: list[_Request | None] = [None] * self.max_batch
+        self._slot_gen: list[int] = [0] * self.max_batch
+        # Stats (guarded by _lock): per-request latency, per-step occupancy.
         self._latencies_ms: list[float] = []
         self._batch_sizes: list[int] = []
 
     # -- lifecycle ---------------------------------------------------------
 
     def warmup(self, camera: Camera | None = None) -> float:
-        """Compile the fixed-shape batch executable; returns compile ms.
+        """Compile every bucket's fixed-shape executable; returns summed ms.
 
         Serving latencies must not fold compile time into request 0 — call
         this before accepting traffic (``start`` does it for you).
         """
-        cam = camera if camera is not None else self._dummy_camera()
-        batch = stack_cameras([cam] * self.max_batch)
-        t0 = time.perf_counter()
-        render_batch_jit(self.model, batch, self.config).block_until_ready()
-        self.compile_ms = (time.perf_counter() - t0) * 1e3
-        return self.compile_ms
+        total = 0.0
+        for bucket in self.buckets:
+            cam = self._sentinels[bucket]
+            if camera is not None and (camera.width, camera.height) == bucket:
+                cam = camera
+            batch = stack_cameras([cam] * self.max_batch)
+            t0 = time.perf_counter()
+            if self.mode == "continuous":
+                active = jnp.ones((self.max_batch,), dtype=bool)
+                render_batch_masked_jit(
+                    self.model, batch, active, self.config
+                ).block_until_ready()
+            else:
+                render_batch_jit(self.model, batch, self.config).block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3
+            self.compile_ms_by_bucket[bucket] = ms
+            total += ms
+        self.compile_ms = total
+        return total
 
     def start(self) -> "RenderServer":
         if self._thread is not None:
@@ -118,7 +241,12 @@ class RenderServer:
             self.warmup()
         with self._lock:
             self._stopping = False
-        self._thread = threading.Thread(target=self._batcher_loop, daemon=True)
+        target = (
+            self._scheduler_loop
+            if self.mode == "continuous"
+            else self._microbatch_loop
+        )
+        self._thread = threading.Thread(target=target, daemon=True)
         self._thread.start()
         return self
 
@@ -127,7 +255,7 @@ class RenderServer:
             return
         # Flip the stopping flag under the same lock submit() enqueues
         # under: every successful submit's put strictly precedes the poison
-        # pill, so the batcher either serves it or its drain rejects it —
+        # pill, so the scheduler either serves it or its drain rejects it —
         # no future is ever stranded.
         with self._lock:
             self._stopping = True
@@ -145,11 +273,12 @@ class RenderServer:
 
     def submit(self, camera: Camera) -> Future:
         """Enqueue one camera request; resolves to a :class:`RenderResult`."""
-        if (camera.width, camera.height) != (self.width, self.height):
+        key = (camera.width, camera.height)
+        if key not in self._sentinels:
             raise ValueError(
-                f"request size {(camera.width, camera.height)} != server's "
-                f"static {(self.width, self.height)} (one executable per "
-                "server; run a second server for a second size)"
+                f"request size {key} not in the server's static bucket set "
+                f"{self.buckets} (one compiled executable per bucket; pass "
+                "the size via sizes= at construction to admit it)"
             )
         req = _Request(camera=camera, future=Future(), t_enqueue=time.perf_counter())
         with self._lock:
@@ -163,7 +292,7 @@ class RenderServer:
         return self.submit(camera).result()
 
     def stats(self) -> dict:
-        """Latency percentiles + batch occupancy over the server lifetime."""
+        """Latency percentiles + slot/batch occupancy over the lifetime."""
         with self._lock:
             lat = np.asarray(self._latencies_ms, dtype=np.float64)
             sizes = np.asarray(self._batch_sizes, dtype=np.float64)
@@ -171,6 +300,7 @@ class RenderServer:
             # Same schema as the served case so pollers never KeyError on
             # an idle server.
             return {
+                "mode": self.mode,
                 "requests": 0,
                 "batches": 0,
                 "compile_ms": self.compile_ms,
@@ -181,6 +311,7 @@ class RenderServer:
                 "occupancy": 0.0,
             }
         return {
+            "mode": self.mode,
             "requests": int(lat.size),
             "batches": int(sizes.size),
             "compile_ms": self.compile_ms,
@@ -191,14 +322,223 @@ class RenderServer:
             "occupancy": float(sizes.mean() / self.max_batch),
         }
 
-    # -- batcher -----------------------------------------------------------
+    # -- continuous scheduler ---------------------------------------------
 
-    def _dummy_camera(self) -> Camera:
-        from repro.core.camera import look_at_camera
+    def _drain_arrivals(
+        self,
+        pending: dict[tuple[int, int], collections.deque],
+        *,
+        block: bool,
+        timeout: float | None = None,
+    ) -> bool:
+        """Move queued arrivals into per-bucket pending deques.
 
-        return look_at_camera(
-            (0.0, 1.0, -5.0), (0.0, 0.0, 0.0), width=self.width, height=self.height
-        )
+        Waits for the first item only when ``block`` (up to ``timeout``
+        seconds; None = indefinitely); everything already queued behind it
+        drains without blocking. Returns True once the poison pill is seen.
+        """
+        stopping = False
+        first = True
+        while True:
+            try:
+                if first and block:
+                    item = self._queue.get(timeout=timeout)
+                else:
+                    item = self._queue.get_nowait()
+            except queue.Empty:
+                return stopping
+            first = False
+            if item is None:
+                stopping = True
+            else:
+                pending[(item.camera.width, item.camera.height)].append(item)
+
+    @staticmethod
+    def _pick_bucket(
+        pending: dict[tuple[int, int], collections.deque],
+    ) -> tuple[int, int] | None:
+        """Bucket whose head request has waited longest (FIFO across sizes)."""
+        best, t_best = None, float("inf")
+        for bucket, dq in pending.items():
+            if dq and dq[0].t_enqueue < t_best:
+                best, t_best = bucket, dq[0].t_enqueue
+        return best
+
+    def _dispatch(
+        self, bucket: tuple[int, int], dq: collections.deque, free: list[int]
+    ) -> _Step | None:
+        """Fill free slots from one bucket's pending deque; dispatch async.
+
+        Claims each future via ``set_running_or_notify_cancel`` — a request
+        cancelled while queued never occupies a slot, and a claimed future
+        can no longer be cancelled out from under the in-flight render.
+        """
+        lanes: list[_Lane] = []
+        free_iter = iter(free)
+        slot = next(free_iter, None)
+        while dq and slot is not None:
+            req = dq.popleft()
+            if not req.future.set_running_or_notify_cancel():
+                continue  # cancelled while queued; slot stays free
+            self._slot_gen[slot] += 1
+            self._slot_req[slot] = req
+            lanes.append(_Lane(slot=slot, gen=self._slot_gen[slot], req=req))
+            slot = next(free_iter, None)
+        if not lanes:
+            return None
+
+        sentinel = self._sentinels[bucket]
+        cams = [sentinel] * self.max_batch
+        active = np.zeros((self.max_batch,), dtype=bool)
+        for lane in lanes:
+            cams[lane.slot] = lane.req.camera
+            active[lane.slot] = True
+        try:
+            # Asynchronous dispatch: XLA renders on its own threads while
+            # the scheduler returns to admitting the next step.
+            images = render_batch_masked_jit(
+                self.model, stack_cameras(cams), jnp.asarray(active), self.config
+            )
+        except Exception as e:  # fan the failure out, keep serving
+            for lane in lanes:
+                self._slot_req[lane.slot] = None
+                if not lane.req.future.done():
+                    lane.req.future.set_exception(e)
+            return None
+        return _Step(bucket=bucket, lanes=lanes, images=images)
+
+    def _harvest(self, step: _Step) -> None:
+        """Block on a step's images and fan results out to its lanes.
+
+        Slot freeing is NOT done here: the scheduler loop is the single
+        owner of the slot table and frees a step's matching-generation
+        slots the moment its compute is ready — before this harvest runs,
+        so the next step can already be rendering. Each lane routes by its
+        own (slot, gen, request) record, so a reused slot can never deliver
+        to the wrong future.
+        """
+        try:
+            images = np.asarray(jax.device_get(step.images))
+        except Exception as e:
+            for lane in step.lanes:
+                if not lane.req.future.done():
+                    lane.req.future.set_exception(e)
+            return
+        t_done = time.perf_counter()
+        n = len(step.lanes)
+        with self._lock:
+            self._batch_sizes.append(n)
+            for lane in step.lanes:
+                self._latencies_ms.append((t_done - lane.req.t_enqueue) * 1e3)
+        for lane in step.lanes:
+            if not lane.req.future.done():
+                lane.req.future.set_result(
+                    RenderResult(
+                        image=images[lane.slot],
+                        latency_ms=(t_done - lane.req.t_enqueue) * 1e3,
+                        batch_size=n,
+                    )
+                )
+
+    def _try_dispatch(
+        self,
+        pending: dict[tuple[int, int], collections.deque],
+        inflight: collections.deque,
+    ) -> bool:
+        """Dispatch one step from the oldest-waiting bucket into the free
+        slots; returns True if a step launched."""
+        free = [i for i in range(self.max_batch) if self._slot_req[i] is None]
+        bucket = self._pick_bucket(pending)
+        if bucket is None or not free:
+            return False
+        step = self._dispatch(bucket, pending[bucket], free)
+        if step is None:
+            return False
+        inflight.append(step)
+        return True
+
+    def _scheduler_loop(self) -> None:
+        """Continuous batching: admit -> dispatch -> harvest, no windows.
+
+        One step computes at a time (the substrate is one shared device —
+        concurrent partial steps would just split the cores), but the
+        pipeline still overlaps: the moment a step's compute finishes, its
+        slots are freed and the *next* step is dispatched before the
+        finished step's host-side harvest (device transfer, stats, future
+        fan-out) runs — XLA renders the new step while results fan out.
+        A request therefore waits only for compute it genuinely contends
+        with, never for a batching window and never for host-side
+        bookkeeping.
+        """
+        pending: dict[tuple[int, int], collections.deque] = {
+            b: collections.deque() for b in self.buckets
+        }
+        inflight: collections.deque[_Step] = collections.deque()
+        stopping = False
+        while True:
+            # Admit. Block only when fully idle (nothing pending anywhere,
+            # nothing in flight); while a step renders, a 1 ms tick below
+            # keeps arrivals flowing into the pending deques.
+            idle = not inflight and not any(pending.values())
+            stopping = self._drain_arrivals(
+                pending, block=idle and not stopping
+            ) or stopping
+
+            if inflight:
+                head = inflight[0]
+                if head.images.is_ready():
+                    # Refill-at-completion: compute is done, so the head's
+                    # slots are free for the next step *before* its harvest
+                    # — a reused slot's previous occupant may still be
+                    # fanning out while the new step renders, which is why
+                    # lanes route by their own (slot, gen, request) record.
+                    # With single-step pipelining the gen guard below is an
+                    # always-true invariant check (only the head ever holds
+                    # slots); it is kept because it makes the reuse-before-
+                    # delivery window auditable and stays correct if the
+                    # pipeline ever deepens.
+                    inflight.popleft()
+                    for lane in head.lanes:
+                        if self._slot_gen[lane.slot] == lane.gen:
+                            self._slot_req[lane.slot] = None
+                    self._try_dispatch(pending, inflight)
+                    self._harvest(head)
+                else:
+                    # Head still rendering: wait for *arrivals*, not for
+                    # the render — pending work keeps accumulating into
+                    # the next full-width step.
+                    stopping = (
+                        self._drain_arrivals(pending, block=True, timeout=0.001)
+                        or stopping
+                    )
+                continue
+
+            # Nothing in flight: launch immediately with whatever is
+            # pending (partial steps are fine — masked slots skip their
+            # blend work and an idle server must never make a request
+            # wait). One sub-millisecond coalesce tick first: siblings of
+            # the same client burst are usually already in flight through
+            # the queue, and catching them turns a 1-active ramp step into
+            # a full one. This is interrupt coalescing, not a batching
+            # window — 0.5 ms against a multi-ms render.
+            if any(pending.values()) and sum(map(len, pending.values())) < self.max_batch:
+                stopping = (
+                    self._drain_arrivals(pending, block=True, timeout=0.0005)
+                    or stopping
+                )
+            if self._try_dispatch(pending, inflight):
+                continue
+            # Exit only once every bucket's pending deque is empty: a
+            # no-lane dispatch (e.g. the oldest bucket's requests were all
+            # cancelled, or a dispatch error failed its lanes) must not
+            # strand dispatchable work in *another* bucket — the loop
+            # re-picks and drains it. Every retry pops at least one
+            # request, so this terminates.
+            if stopping and not any(pending.values()):
+                break
+        self._drain_after_stop()
+
+    # -- micro-batching baseline (PR 3 semantics) --------------------------
 
     def _collect_window(self, first: _Request) -> list[_Request]:
         """Micro-batching window: up to max_batch requests or max_wait_ms."""
@@ -219,28 +559,36 @@ class RenderServer:
         return group
 
     def _serve_batch(self, group: Sequence[_Request]) -> None:
+        # Claim every future first: a request cancelled while it waited in
+        # the window is dropped here, and a claimed future can no longer be
+        # cancelled — so the set_result fan-out below cannot hit
+        # InvalidStateError and poison the rest of the batch.
+        live = [r for r in group if r.future.set_running_or_notify_cancel()]
+        if not live:
+            return
         # Pad to the slot count with sentinel cameras (static shapes); the
         # sentinel is a copy of the last real camera, its output discarded.
-        pad = self.max_batch - len(group)
-        cams = [r.camera for r in group] + [group[-1].camera] * pad
+        pad = self.max_batch - len(live)
+        cams = [r.camera for r in live] + [live[-1].camera] * pad
         batch: CameraBatch = stack_cameras(cams)
         imgs = render_batch_jit(self.model, batch, self.config)
         imgs = np.asarray(jax.device_get(imgs))
         t_done = time.perf_counter()
         with self._lock:
-            self._batch_sizes.append(len(group))
-            for r in group:
+            self._batch_sizes.append(len(live))
+            for r in live:
                 self._latencies_ms.append((t_done - r.t_enqueue) * 1e3)
-        for i, r in enumerate(group):
-            r.future.set_result(
-                RenderResult(
-                    image=imgs[i],
-                    latency_ms=(t_done - r.t_enqueue) * 1e3,
-                    batch_size=len(group),
+        for i, r in enumerate(live):
+            if not r.future.done():
+                r.future.set_result(
+                    RenderResult(
+                        image=imgs[i],
+                        latency_ms=(t_done - r.t_enqueue) * 1e3,
+                        batch_size=len(live),
+                    )
                 )
-            )
 
-    def _batcher_loop(self) -> None:
+    def _microbatch_loop(self) -> None:
         while True:
             req = self._queue.get()
             if req is None:
@@ -252,9 +600,14 @@ class RenderServer:
                 for r in group:
                     if not r.future.done():
                         r.future.set_exception(e)
-        # Drain anything that raced in behind the poison pill (submit can
-        # pass the started check while stop() is joining) so no future is
-        # left unresolved forever.
+        self._drain_after_stop()
+
+    # -- shared shutdown ---------------------------------------------------
+
+    def _drain_after_stop(self) -> None:
+        """Fail anything that raced in behind the poison pill (submit can
+        pass the started check while stop() is joining) so no future is
+        left unresolved forever."""
         while True:
             try:
                 req = self._queue.get_nowait()

@@ -62,6 +62,7 @@ class TestCompression:
         np.testing.assert_array_equal(np.asarray(back), 0.0)
 
 
+@pytest.mark.slow  # subprocess-per-test with 8 fake devices: ~2 min total
 class TestMultiDevice:
     def test_compressed_psum_matches_exact_with_error_feedback(
         self, run_multidevice
@@ -235,6 +236,7 @@ class TestMultiDevice:
         assert "DRYRUN OK" in out
 
 
+@pytest.mark.slow  # subprocess with 8 fake devices, ~35s
 class TestExpertParallelMoE:
     def test_ep_shard_map_matches_plain_path(self, run_multidevice):
         """The EP (shard_map) MoE must be numerically identical to the

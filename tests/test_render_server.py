@@ -1,4 +1,7 @@
-"""RenderServer: micro-batching correctness, padding, and stats."""
+"""RenderServer: continuous-batching scheduler (slot refill, buckets,
+generation routing, cancellation) + the micro-batching baseline."""
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -105,3 +108,190 @@ class TestRenderServer:
         sizes = {r.batch_size for r in results}
         assert max(sizes) >= 2  # the burst batched, not 8 singletons
         assert srv.stats()["requests"] == 8
+
+
+class TestContinuousScheduler:
+    """Slot refill, bucket routing, and stats of the continuous mode."""
+
+    def test_invalid_mode_rejected(self):
+        model = random_gaussians(jax.random.PRNGKey(0), 32, extent=1.5)
+        with pytest.raises(ValueError, match="mode"):
+            _server(model, mode="windowed")
+
+    def test_bursty_poisson_arrivals_match_sequential_render(self):
+        """Every admitted camera's result equals the sequential render,
+        under a seeded bursty Poisson arrival stream."""
+        model = random_gaussians(jax.random.PRNGKey(7), 96, extent=1.5)
+        cams = orbit_cameras(10, radius=5.0, width=SIZE, height=SIZE)
+        rng = np.random.default_rng(0)
+        # Bursts of 1-3 requests at exponential gaps: slots free and refill
+        # at staggered times, exercising mid-flight admission.
+        gaps = rng.exponential(0.01, size=len(cams))
+        burst = rng.integers(1, 4, size=len(cams))
+        with _server(model, max_batch=2) as srv:
+            futures = []
+            i = 0
+            while i < len(cams):
+                for _ in range(int(burst[i % len(burst)])):
+                    if i >= len(cams):
+                        break
+                    futures.append(srv.submit(cams[i]))
+                    i += 1
+                time.sleep(gaps[i % len(gaps)])
+            results = [f.result(timeout=120) for f in futures]
+        assert srv.stats()["requests"] == len(cams)
+        for cam, res in zip(cams, results):
+            want = render(model, cam, srv.config)
+            np.testing.assert_allclose(
+                np.asarray(res.image), np.asarray(want), atol=1e-5
+            )
+
+    def test_no_request_waits_a_window_behind_a_freed_slot(self):
+        """The continuous scheduler serves a straggler immediately; the
+        micro-batching baseline makes it wait out a whole window."""
+        model = random_gaussians(jax.random.PRNGKey(8), 64, extent=1.5)
+        cams = orbit_cameras(5, radius=5.0, width=SIZE, height=SIZE)
+        window_ms = 250.0
+
+        def run(mode):
+            srv = _server(
+                model, max_batch=4, max_wait_ms=window_ms, mode=mode
+            )
+            with srv:
+                t0 = time.perf_counter()
+                futures = [srv.submit(c) for c in cams]
+                for f in futures:
+                    f.result(timeout=120)
+                return time.perf_counter() - t0
+
+        # Burst of 5 into 4 slots: the baseline's second window holds only
+        # the straggler and waits the full max_wait_ms for company; the
+        # continuous scheduler admits it the moment a slot frees.
+        micro_wall = run("microbatch")
+        cont_wall = run("continuous")
+        assert micro_wall >= window_ms / 1e3  # the straggler ate a window
+        assert cont_wall < micro_wall
+
+    def test_mixed_size_bucket_routing(self):
+        """Requests route to their exact bucket executable; results match
+        the per-camera render at each size; unknown sizes are rejected."""
+        model = random_gaussians(jax.random.PRNGKey(9), 96, extent=1.5)
+        cfg = RenderConfig(raster_path="binned", tile_capacity=64, early_exit=False)
+        small = orbit_cameras(3, radius=5.0, width=32, height=32)
+        large = orbit_cameras(3, radius=5.0, width=48, height=48)
+        interleaved = [c for pair in zip(small, large) for c in pair]
+        srv = RenderServer(
+            model, cfg, sizes=[(32, 32), (48, 48)], max_batch=4
+        )
+        with srv:
+            with pytest.raises(ValueError, match="bucket"):
+                srv.submit(look_at_camera((0, 1, -5), (0, 0, 0), width=64, height=64))
+            results = [
+                f.result(timeout=120)
+                for f in [srv.submit(c) for c in interleaved]
+            ]
+        assert set(srv.compile_ms_by_bucket) == {(32, 32), (48, 48)}
+        for cam, res in zip(interleaved, results):
+            assert res.image.shape == (cam.height, cam.width, 3)
+            want = render(model, cam, cfg)
+            np.testing.assert_allclose(
+                np.asarray(res.image), np.asarray(want), atol=1e-5
+            )
+
+    def test_microbatch_mode_rejects_multiple_buckets(self):
+        model = random_gaussians(jax.random.PRNGKey(10), 32, extent=1.5)
+        cfg = RenderConfig(raster_path="binned", tile_capacity=64)
+        with pytest.raises(ValueError, match="single-size"):
+            RenderServer(
+                model, cfg, sizes=[(32, 32), (48, 48)], mode="microbatch"
+            )
+
+    def test_stats_report_mode_and_occupancy(self):
+        model = random_gaussians(jax.random.PRNGKey(11), 64, extent=1.5)
+        cams = orbit_cameras(6, radius=5.0, width=SIZE, height=SIZE)
+        with _server(model) as srv:
+            [f.result(timeout=120) for f in [srv.submit(c) for c in cams]]
+        stats = srv.stats()
+        assert stats["mode"] == "continuous"
+        assert stats["requests"] == 6
+        assert stats["batches"] >= 2  # max_batch=4 < 6 requests
+        assert 0.0 < stats["occupancy"] <= 1.0
+
+
+class TestCancellation:
+    """A cancelled client future must not poison its batch (the PR 3 bug:
+    unguarded set_result raised InvalidStateError into the batcher's
+    exception handler, which then failed every other request in the group)."""
+
+    def test_cancelled_future_does_not_poison_microbatch(self):
+        """Deterministic pin: cancel inside an open micro-batching window
+        (the batch has not been claimed yet), the rest must still be served."""
+        model = random_gaussians(jax.random.PRNGKey(12), 64, extent=1.5)
+        cams = orbit_cameras(4, radius=5.0, width=SIZE, height=SIZE)
+        # max_batch > len(cams): the window stays open for max_wait_ms, so
+        # the cancel always lands before the batch is claimed.
+        with _server(
+            model, max_batch=8, max_wait_ms=400.0, mode="microbatch"
+        ) as srv:
+            futures = [srv.submit(c) for c in cams]
+            assert futures[1].cancel()
+            survivors = [f for i, f in enumerate(futures) if i != 1]
+            results = [f.result(timeout=120) for f in survivors]
+        assert futures[1].cancelled()
+        kept = [c for i, c in enumerate(cams) if i != 1]
+        for cam, res in zip(kept, results):
+            want = render(model, cam, srv.config)
+            np.testing.assert_allclose(
+                np.asarray(res.image), np.asarray(want), atol=1e-5
+            )
+        # Only the three survivors were rendered and counted.
+        assert srv.stats()["requests"] == 3
+
+    def test_stop_still_serves_other_bucket_behind_cancelled_head(self):
+        """Shutdown liveness: a cancelled request heading the oldest bucket
+        must not strand a valid pre-stop request in another bucket (the
+        scheduler must re-pick buckets until every pending deque drains)."""
+        model = random_gaussians(jax.random.PRNGKey(14), 64, extent=1.5)
+        cfg = RenderConfig(raster_path="binned", tile_capacity=64, early_exit=False)
+        srv = RenderServer(model, cfg, sizes=[(32, 32), (48, 48)], max_batch=4)
+        first = orbit_cameras(4, radius=5.0, width=32, height=32)
+        cam_a = look_at_camera((0, 1, -5), (0, 0, 0), width=32, height=32)
+        cam_b = look_at_camera((0, 1, -4), (0, 0, 0), width=48, height=48)
+        with srv:
+            # Occupy the scheduler with a full step so A and B queue behind
+            # it; cancel A while it is (very likely) still unclaimed, then
+            # stop() immediately — B must still be served, not failed.
+            busy = [srv.submit(c) for c in first]
+            fut_a = srv.submit(cam_a)
+            fut_b = srv.submit(cam_b)
+            a_cancelled = fut_a.cancel()
+        [f.result(timeout=120) for f in busy]
+        res_b = fut_b.result(timeout=120)
+        np.testing.assert_allclose(
+            np.asarray(res_b.image),
+            np.asarray(render(model, cam_b, cfg)),
+            atol=1e-5,
+        )
+        if not a_cancelled:  # scheduler claimed A first: it must be served
+            assert fut_a.result(timeout=120).image.shape == (32, 32, 3)
+
+    def test_cancel_one_of_n_inflight_continuous(self):
+        """Cancelling one of N requests mid-flight never breaks the rest.
+        (Whether the cancel wins depends on whether the scheduler claimed
+        the future first — both outcomes must leave the others served.)"""
+        model = random_gaussians(jax.random.PRNGKey(13), 64, extent=1.5)
+        cams = orbit_cameras(8, radius=5.0, width=SIZE, height=SIZE)
+        with _server(model, max_batch=2) as srv:
+            futures = [srv.submit(c) for c in cams]
+            won = futures[5].cancel()
+            for i, f in enumerate(futures):
+                if i == 5 and won:
+                    assert f.cancelled()
+                    continue
+                res = f.result(timeout=120)
+                want = render(model, cams[i], srv.config)
+                np.testing.assert_allclose(
+                    np.asarray(res.image), np.asarray(want), atol=1e-5
+                )
+        served = len(cams) - (1 if won else 0)
+        assert srv.stats()["requests"] == served

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.data import SyntheticLMData
@@ -12,6 +13,7 @@ from repro.serve import BatchedServer
 
 
 class TestServer:
+    @pytest.mark.slow  # full prefill+decode consistency sweep, ~8s
     def test_greedy_matches_teacher_forced(self):
         cfg = get_smoke_config("tinyllama-1.1b")
         mod = family_module(cfg)
