@@ -1,0 +1,266 @@
+"""Hierarchical culling throughput: SceneTree + frustum culling vs full-scene
+rendering at 100k–1M Gaussians.
+
+Every pre-PR-5 render path touches all N Gaussians per camera; the scene
+subsystem (``repro.core.scene``) gathers only the frustum-visible chunks, so
+per-camera cost tracks *visible* scene size. This benchmark measures that
+trade on uniform and clustered scenes with cameras placed **inside** the
+cloud (the unbounded-capture serving shape: any one view sees a fraction of
+the scene):
+
+* sequential req/s of the uncull path (``render_jit`` on the raw cloud)
+  vs the culled path (``render_jit`` on the ``SceneTree``) at a
+  conservative ``visible_capacity`` (>= the max visible-chunk count across
+  the camera orbit, so nothing is ever dropped);
+* pixel equality of the two (conservative culling only removes Gaussians
+  the rasterizer's support contract already excludes, so the tile lists —
+  and therefore the blended images — are identical);
+* the distance-LOD variant (``lod_thresholds``): per-chunk SH degree
+  3/1/0, reported with its per-band chunk counts;
+* visible-fraction stats per scene (the number the speedup should track).
+
+``--tiny`` is the CI smoke: a small clustered scene where <50% of chunks
+are visible; asserts culled >= uncull req/s and culled == uncull images,
+and drives a cull-configured RenderServer end to end in both scheduler
+modes (``continuous`` and ``microbatch``).
+
+    PYTHONPATH=src python -m benchmarks.bench_culling [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    RenderConfig,
+    build_scene_tree,
+    clustered_gaussians,
+    look_at_camera,
+    random_gaussians,
+    visibility_stats,
+)
+from repro.core.render import render_jit
+
+IMAGE_SIZE = 256
+CAMERAS = 2
+ITERS = 2
+LEAF_SIZE = 256
+# (scene kind, sizes): uniform capped at 500k to bound bench wall time.
+SWEEP = (
+    ("uniform", (100_000, 500_000)),
+    ("clustered", (100_000, 500_000, 1_000_000)),
+)
+# Chunk distance is conservative (to the bounding-sphere surface), and the
+# 3-sigma-padded Morton chunks of these scenes have ~0.5-1.0 radii, so
+# visible-chunk distances land in [0, ~0.8] — thresholds chosen to split
+# the orbit's visible set across all three SH bands.
+LOD_THRESHOLDS = (0.2, 0.5)
+
+TINY_IMAGE_SIZE = 96
+TINY_N = 20_000
+TINY_LEAF = 128
+
+
+def make_scene(kind: str, n: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    if kind == "uniform":
+        return random_gaussians(key, n, extent=2.0)
+    return clustered_gaussians(key, n, num_clusters=12, extent=2.0)
+
+
+def inside_cameras(num: int, size: int, radius: float = 0.8):
+    """Cameras inside the cloud looking outward — each view covers one
+    frustum's worth of an unbounded scene, not the whole cloud."""
+    cams = []
+    for i in range(num):
+        th = 2.0 * np.pi * i / num
+        eye = (radius * np.cos(th), 0.2, radius * np.sin(th))
+        tgt = (3 * radius * np.cos(th), 0.2, 3 * radius * np.sin(th))
+        cams.append(look_at_camera(eye, tgt, width=size, height=size))
+    return cams
+
+
+def _seq_req_s(model, cams, cfg, iters: int) -> tuple[float, list]:
+    """Sequential per-request throughput; returns (req/s, last images)."""
+    render_jit(model, cams[0], cfg).block_until_ready()  # compile+warm
+    walls, imgs = [], []
+    for _ in range(iters):
+        imgs = []
+        t0 = time.perf_counter()
+        for cam in cams:
+            imgs.append(render_jit(model, cam, cfg))
+        jax.block_until_ready(imgs)
+        walls.append(time.perf_counter() - t0)
+    walls.sort()
+    return len(cams) / walls[len(walls) // 2], imgs
+
+
+def bench_scene(
+    kind: str,
+    n: int,
+    *,
+    image_size: int,
+    leaf_size: int,
+    iters: int,
+) -> dict:
+    g = make_scene(kind, n)
+    t0 = time.perf_counter()
+    tree = build_scene_tree(g, leaf_size=leaf_size)
+    build_s = time.perf_counter() - t0
+    cams = inside_cameras(CAMERAS, image_size)
+
+    cfg = RenderConfig(raster_path="binned")
+    probe = cfg.replace(cull=True, lod_thresholds=LOD_THRESHOLDS)
+    stats = [visibility_stats(tree, c, probe) for c in cams]
+    vis_frac = [s["visible_fraction"] for s in stats]
+    # Conservative static capacity: every visible chunk of every camera
+    # fits, so culling never drops content and images must match exactly.
+    capacity = max(s["num_visible"] for s in stats)
+    cfg_cull = cfg.replace(cull=True, visible_capacity=capacity)
+    cfg_lod = cfg_cull.replace(lod_thresholds=LOD_THRESHOLDS)
+
+    # Uncull baseline renders the *resident* (Morton-permuted) cloud — the
+    # same model the culled path serves, same N, same cost as the raw
+    # order. Comparing against the raw cloud instead would differ at f32
+    # depth *ties* (order-dependent blending), not because culling drops
+    # content.
+    uncull_req_s, base_imgs = _seq_req_s(tree.gaussians, cams, cfg, iters)
+    culled_req_s, cull_imgs = _seq_req_s(tree, cams, cfg_cull, iters)
+    lod_req_s, lod_imgs = _seq_req_s(tree, cams, cfg_lod, iters)
+
+    eq_err = max(
+        float(jax.numpy.abs(a - b).max())
+        for a, b in zip(base_imgs, cull_imgs)
+    )
+    lod_err = max(
+        float(jax.numpy.abs(a - b).max())
+        for a, b in zip(base_imgs, lod_imgs)
+    )
+
+    tag = f"culling/{kind}_{n}"
+    emit(
+        f"{tag}_culled_req_s",
+        1e6 / culled_req_s,
+        f"{culled_req_s / uncull_req_s:.2f}x_uncull_vis{np.mean(vis_frac):.0%}",
+    )
+    return {
+        "gaussians": n,
+        "image_size": image_size,
+        "leaf_size": leaf_size,
+        "num_chunks": tree.num_chunks,
+        "tree_build_s": build_s,
+        "visible_fraction_mean": float(np.mean(vis_frac)),
+        "visible_capacity": capacity,
+        "uncull_req_s": uncull_req_s,
+        "culled_req_s": culled_req_s,
+        "culled_speedup": culled_req_s / uncull_req_s,
+        "culled_max_err": eq_err,
+        "lod_req_s": lod_req_s,
+        "lod_speedup": lod_req_s / uncull_req_s,
+        "lod_max_err_vs_full_sh": lod_err,
+        "lod_degree_counts": stats[0]["degree_counts"],
+    }
+
+
+def _tiny_serving(tree, cfg_cull, cams) -> dict:
+    """Drive a cull-configured RenderServer in both scheduler modes."""
+    from repro.serve import RenderServer, replay_schedule
+
+    base = [
+        np.asarray(render_jit(tree.gaussians, c, cfg_cull.replace(cull=False)))
+        for c in cams
+    ]
+    out = {}
+    size = cams[0].width
+    for mode in ("continuous", "microbatch"):
+        server = RenderServer(
+            tree, cfg_cull, width=size, height=size, max_batch=4, mode=mode
+        )
+        server.warmup(cams[0])
+        with server:
+            results, wall = replay_schedule(
+                server.submit, cams * 3, np.zeros(len(cams) * 3)
+            )
+        err = max(
+            float(np.abs(r.image - base[i % len(cams)]).max())
+            for i, r in enumerate(results)
+        )
+        out[mode] = {"req_s": len(results) / wall, "max_err_vs_uncull": err}
+        emit(
+            f"culling/serving_{mode}_req_s",
+            1e6 / out[mode]["req_s"],
+            f"err{err:.1e}",
+        )
+        assert err <= 1e-5, (
+            f"culled {mode} serving diverged from uncull render: {err}"
+        )
+    return out
+
+
+def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="CI smoke: small clustered scene, asserts culled >= uncull "
+        "req/s with <50%% of chunks visible + cull-serving in both modes",
+    )
+    args = ap.parse_args(list(argv))
+
+    if args.tiny:
+        n, size, leaf = TINY_N, TINY_IMAGE_SIZE, TINY_LEAF
+        entry = bench_scene(
+            "clustered", n, image_size=size, leaf_size=leaf, iters=1
+        )
+        metrics = {"clustered": {str(n): entry}}
+
+        assert entry["visible_fraction_mean"] < 0.5, (
+            "smoke scene must have <50% of chunks visible, got "
+            f"{entry['visible_fraction_mean']:.0%}"
+        )
+        assert entry["culled_max_err"] <= 1e-5, entry
+        assert entry["culled_req_s"] >= entry["uncull_req_s"], (
+            f"culled rendering slower than uncull: {entry}"
+        )
+
+        tree = build_scene_tree(make_scene("clustered", n), leaf_size=leaf)
+        cfg_cull = RenderConfig(
+            raster_path="binned",
+            cull=True,
+            visible_capacity=entry["visible_capacity"],
+        )
+        metrics["serving"] = _tiny_serving(
+            tree, cfg_cull, inside_cameras(CAMERAS, size)
+        )
+        print(
+            f"# tiny smoke OK: culled {entry['culled_speedup']:.2f}x uncull "
+            f"at {entry['visible_fraction_mean']:.0%} visible chunks, "
+            f"serving continuous {metrics['serving']['continuous']['req_s']:.2f} "
+            f"req/s / microbatch "
+            f"{metrics['serving']['microbatch']['req_s']:.2f} req/s"
+        )
+        return metrics
+
+    metrics: dict = {}
+    for kind, sizes in SWEEP:
+        metrics[kind] = {}
+        for n in sizes:
+            metrics[kind][str(n)] = bench_scene(
+                kind,
+                n,
+                image_size=IMAGE_SIZE,
+                leaf_size=LEAF_SIZE,
+                iters=ITERS,
+            )
+    return metrics
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

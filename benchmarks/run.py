@@ -1,9 +1,10 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR4.json`` — the machine-readable perf trajectory (render
+writes ``BENCH_PR5.json`` — the machine-readable perf trajectory (render
 speedups, max-error, lane occupancy, batched-serving throughput/occupancy/
-latency, continuous-vs-microbatch scheduler sweep) — to the repo root.
+latency, continuous-vs-microbatch scheduler sweep, culled-octree
+throughput + visible-fraction stats) — to the repo root.
 """
 
 from __future__ import annotations
@@ -13,11 +14,12 @@ import pathlib
 import sys
 import traceback
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR4.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR5.json"
 
 
 def main() -> None:
     from benchmarks import (
+        bench_culling,
         bench_fig5_parallelism,
         bench_lm_steps,
         bench_serving,
@@ -33,6 +35,7 @@ def main() -> None:
         bench_fig5_parallelism,
         bench_lm_steps,
         bench_serving,
+        bench_culling,
     ):
         try:
             section = mod.main()

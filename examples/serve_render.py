@@ -85,6 +85,13 @@ def main() -> None:
         help="alternate requests between --image-size and half of it "
         "(continuous server only: bucketed executables)",
     )
+    ap.add_argument(
+        "--cull",
+        action="store_true",
+        help="serve against a frustum-culled SceneTree (the server builds "
+        "the hierarchy once at startup; every request then renders only "
+        "its visible chunks)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     args.burst = max(1, args.burst)
@@ -93,11 +100,20 @@ def main() -> None:
     config = RenderConfig(
         raster_path=args.raster_path, tile_capacity=args.tile_capacity
     )
+    if args.cull:
+        # Conservative capacity: the orbit cameras see most of the compact
+        # synthetic scene, so this demonstrates the plumbing (resident
+        # hierarchy, per-camera culling inside the serving executables)
+        # rather than a speedup — bench_culling measures that on
+        # inside-the-cloud cameras.
+        config = config.replace(cull=True, leaf_size=256)
     size = args.image_size
     print(
         f"serving a {args.gaussians}-Gaussian model "
         f"({args.raster_path} raster, {size}x{size}, "
-        f"bursts of {args.burst} at {args.arrival_rate:g} req/s)"
+        f"bursts of {args.burst} at {args.arrival_rate:g} req/s"
+        + (", frustum-culled SceneTree" if args.cull else "")
+        + ")"
     )
 
     # Request stream: cameras orbiting the scene (static image sizes ->

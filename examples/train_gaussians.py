@@ -3,9 +3,21 @@
 side of the paper's pipeline at laptop scale.
 
     PYTHONPATH=src python examples/train_gaussians.py [--steps 300]
+
+``--dataset colmap:<dir>`` swaps the synthetic orbit for a real COLMAP
+text model (tandt_db layout: the directory holding cameras.txt /
+images.txt / points3D.txt): real camera poses, and the sparse point cloud
+seeding the ground-truth Gaussians. The sparse model carries no pixels, so
+targets are rendered from the point-seeded cloud and the trainable cloud
+starts from a perturbed copy — real poses + real point init, synthetic
+supervision.
+
+    PYTHONPATH=src python examples/train_gaussians.py \
+        --dataset colmap:tests/data/colmap --steps 100
 """
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -25,6 +37,33 @@ from repro.data import SyntheticMultiView
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
+def _load_colmap(path: str, image_size: int):
+    """COLMAP model dir -> (cameras, GT cloud, initial trainable cloud)."""
+    from repro.data.colmap import load_colmap_scene, scale_camera
+
+    scene = load_colmap_scene(path)
+    # Downscale the real image planes to the example's working resolution.
+    native = max(max(c.width, c.height) for c in scene.cameras)
+    factor = min(1.0, image_size / native)
+    cams = [scale_camera(c, factor) for c in scene.cameras]
+    gt = scene.gaussians
+    # Trainable start: the same point init, jittered (the sparse model has
+    # no pixels, so the point-seeded cloud doubles as ground truth).
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    init = dataclasses.replace(
+        gt,
+        positions=gt.positions
+        + 0.02 * jax.random.normal(k1, gt.positions.shape),
+        sh=gt.sh + 0.05 * jax.random.normal(k2, gt.sh.shape),
+    )
+    print(
+        f"colmap scene {path}: {len(cams)} cameras "
+        f"({cams[0].width}x{cams[0].height} at {factor:.2f}x native), "
+        f"{gt.num_gaussians} seed points"
+    )
+    return cams, gt, init
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
@@ -32,6 +71,12 @@ def main() -> None:
     ap.add_argument("--views", type=int, default=8)
     ap.add_argument("--image-size", type=int, default=48)
     ap.add_argument("--densify-every", type=int, default=100)
+    ap.add_argument(
+        "--dataset",
+        default="synthetic",
+        help='"synthetic" (orbit of views over a random GT cloud) or '
+        '"colmap:<dir>" (COLMAP text model: real poses + point-cloud init)',
+    )
     ap.add_argument(
         "--raster-path",
         choices=("dense", "binned", "pallas_binned"),
@@ -47,18 +92,40 @@ def main() -> None:
     args = ap.parse_args()
 
     config = RenderConfig(raster_path=args.raster_path, pixel_chunk=None)
-    data = SyntheticMultiView(
-        num_gaussians=args.gaussians,
-        num_views=args.views,
-        image_size=args.image_size,
-        render_config=config,
-    )
-    targets = data.targets()
-    print(f"synthetic scene: {args.gaussians} GT Gaussians, {args.views} views")
+    if args.dataset.startswith("colmap:"):
+        cameras, gt, init = _load_colmap(
+            args.dataset.split(":", 1)[1], args.image_size
+        )
+        targets = [render(gt, c, config) for c in cameras]
+        num_active = init.num_gaussians
+        capacity = 2 * num_active
+        # Invisible padding rows double as free densification slots.
+        from repro.core.gaussians import pad_to_multiple
 
-    capacity = args.gaussians * 2
-    g = random_gaussians(jax.random.PRNGKey(1), capacity, extent=1.5)
-    dstate = init_densify_state(capacity, args.gaussians)
+        g, _ = pad_to_multiple(init, capacity)
+        dstate = init_densify_state(capacity, num_active)
+    elif args.dataset == "synthetic":
+        data = SyntheticMultiView(
+            num_gaussians=args.gaussians,
+            num_views=args.views,
+            image_size=args.image_size,
+            render_config=config,
+        )
+        cameras = data.cameras
+        targets = data.targets()
+        print(
+            f"synthetic scene: {args.gaussians} GT Gaussians, "
+            f"{args.views} views"
+        )
+        capacity = args.gaussians * 2
+        g = random_gaussians(jax.random.PRNGKey(1), capacity, extent=1.5)
+        dstate = init_densify_state(capacity, args.gaussians)
+    else:
+        raise SystemExit(
+            f"unknown --dataset {args.dataset!r} (use 'synthetic' or "
+            "'colmap:<dir>')"
+        )
+    num_views = len(cameras)
 
     ocfg = AdamWConfig(
         learning_rate=1.5e-2,
@@ -69,7 +136,13 @@ def main() -> None:
     )
     opt = adamw_init(g)
 
-    cam_batch = max(1, min(args.camera_batch, args.views))
+    cam_batch = max(1, min(args.camera_batch, num_views))
+    if cam_batch > 1 and len({(c.width, c.height) for c in cameras}) > 1:
+        raise SystemExit(
+            "--camera-batch > 1 needs one image size across all cameras "
+            "(stack_cameras / stacked targets are fixed-shape); this "
+            "dataset has mixed resolutions — use --camera-batch 1"
+        )
 
     @jax.jit
     def step(g, opt, cam, target):
@@ -88,14 +161,14 @@ def main() -> None:
             # Multi-view step: a contiguous window of views per step (the
             # camera batch shares one compiled executable across steps).
             views = [
-                data.view_at(i * cam_batch + j) for j in range(cam_batch)
+                (i * cam_batch + j) % num_views for j in range(cam_batch)
             ]
-            cams_i = stack_cameras([data.cameras[v] for v in views])
+            cams_i = stack_cameras([cameras[v] for v in views])
             tgt_i = jnp.stack([targets[v] for v in views])
             g, opt, loss, uvg = step(g, opt, cams_i, tgt_i)
         else:
-            view = data.view_at(i)
-            g, opt, loss, uvg = step(g, opt, data.cameras[view], targets[view])
+            view = i % num_views
+            g, opt, loss, uvg = step(g, opt, cameras[view], targets[view])
         dstate = accumulate_grad_stats(
             dstate, uvg, jnp.ones((capacity,))
         )
@@ -115,7 +188,7 @@ def main() -> None:
           f"({1000*dt/args.steps:.0f} ms/step)")
 
     # held-out view PSNR
-    img = render(g, data.cameras[0], config)
+    img = render(g, cameras[0], config)
     mse = float(jnp.mean((img - targets[0]) ** 2))
     psnr = -10.0 * jnp.log10(mse)
     print(f"view-0 PSNR: {float(psnr):.1f} dB")

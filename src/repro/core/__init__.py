@@ -30,15 +30,35 @@ from repro.core.multicam import (
     unstack_cameras,
 )
 from repro.core.render import render, render_jit
+from repro.core.scene import (
+    ChunkVisibility,
+    SceneTree,
+    apply_sh_lod,
+    build_scene_tree,
+    cull_chunks,
+    gather_visible,
+    resolve_scene,
+    select_visible_chunks,
+    visibility_stats,
+)
 
 __all__ = [
     "Camera",
     "CameraBatch",
+    "ChunkVisibility",
     "DEFAULT_CONFIG",
     "GaussianFeatures",
     "GaussianParams",
     "RenderConfig",
+    "SceneTree",
     "TileBins",
+    "apply_sh_lod",
+    "build_scene_tree",
+    "cull_chunks",
+    "gather_visible",
+    "resolve_scene",
+    "select_visible_chunks",
+    "visibility_stats",
     "bin_gaussians",
     "clustered_gaussians",
     "compact_tile_features",

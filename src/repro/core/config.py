@@ -54,6 +54,22 @@ class RenderConfig:
         1/255 or the remaining list entries are all sentinels. The sentinel
         skip is exact; the saturation skip can only drop contributions a
         u8 pixel cannot represent (error < 1/255).
+      cull: enable per-camera frustum culling when the render entry points
+        are handed a ``repro.core.scene.SceneTree`` instead of raw
+        ``GaussianParams`` — only the visible chunks' Gaussians are
+        gathered, featured, and binned. Ignored for raw clouds.
+      visible_capacity: static capacity (in *chunks*) of the culled
+        compact set. None = the tree's full chunk count (conservative:
+        nothing is ever dropped, the gather only reorders). Smaller values
+        bound the per-camera compute; on overflow the nearest visible
+        chunks win.
+      lod_thresholds: ``(near, far)`` camera-distance cutoffs for the
+        distance-based SH level of detail: chunks nearer than ``near``
+        keep SH degree 3, chunks nearer than ``far`` drop to degree 1,
+        everything beyond renders degree 0 (DC color only). None disables
+        LOD (every chunk uses ``sh_degree``).
+      leaf_size: Gaussians per scene-tree chunk when a component (e.g.
+        the render server) builds the tree itself from this config.
     """
 
     feature_path: str = "fused"
@@ -69,6 +85,10 @@ class RenderConfig:
     block_g: int = 128
     max_blocks_per_tile: int | None = None
     early_exit: bool = True
+    cull: bool = False
+    visible_capacity: int | None = None
+    lod_thresholds: tuple[float, float] | None = None
+    leaf_size: int = 256
 
     def __post_init__(self) -> None:
         if self.feature_path not in FEATURE_PATHS:
@@ -84,6 +104,25 @@ class RenderConfig:
         if self.tile_capacity <= 0:
             raise ValueError(
                 f"tile_capacity must be positive, got {self.tile_capacity}"
+            )
+        if self.visible_capacity is not None and self.visible_capacity <= 0:
+            raise ValueError(
+                f"visible_capacity must be positive or None, got "
+                f"{self.visible_capacity}"
+            )
+        if self.leaf_size <= 0:
+            raise ValueError(
+                f"leaf_size must be positive, got {self.leaf_size}"
+            )
+        if self.lod_thresholds is not None:
+            near, far = self.lod_thresholds
+            if not (0.0 <= near <= far):
+                raise ValueError(
+                    "lod_thresholds must be (near, far) with "
+                    f"0 <= near <= far, got {self.lod_thresholds}"
+                )
+            object.__setattr__(
+                self, "lod_thresholds", (float(near), float(far))
             )
         # Normalize background to a plain float tuple so two configs built
         # from a list and a tuple hash identically.

@@ -35,6 +35,12 @@ from repro.core.gaussians import GaussianParams
 COV2D_BLUR = 0.3
 # Minimum camera-space depth for a Gaussian to be considered in-frustum.
 NEAR_PLANE = 0.2
+# Blending alpha floor (rasterize.ALPHA_EPS aliases this): a Gaussian whose
+# post-sigmoid opacity is below it can never pass the rasterizer's alpha
+# cutoff (alpha <= opacity), so the validity mask culls it outright. That
+# keeps sentinel/padding records (opacity ~1e-13) out of tile lists, where
+# they would otherwise crowd the fixed capacity without contributing.
+ALPHA_EPS = 1.0 / 255.0
 # Guard band on the projection-plane coordinates before the Jacobian (the
 # reference clamps x/z, y/z to 1.3 * tan(fov) to keep J finite off-screen).
 FOV_GUARD = 1.3
@@ -264,7 +270,12 @@ def _finalize(
         & (uv[..., 1] > -radius)
         & (uv[..., 1] < cam.height + radius)
     )
-    mask = (depth > NEAR_PLANE) & (radius > 0.0) & onscreen
+    mask = (
+        (depth > NEAR_PLANE)
+        & (radius > 0.0)
+        & onscreen
+        & (opacity >= ALPHA_EPS)
+    )
     return GaussianFeatures(
         uv=uv,
         conic=conic,

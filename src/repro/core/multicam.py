@@ -47,6 +47,7 @@ from repro.core.camera import Camera
 from repro.core.config import RenderConfig, as_config
 from repro.core.features import GaussianFeatures
 from repro.core.gaussians import GaussianParams
+from repro.core.scene import SceneTree, resolve_scene
 
 
 @jax.tree_util.register_dataclass
@@ -170,7 +171,7 @@ def bin_gaussians_batch(
 
 
 def _render_batch_binned(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cams: CameraBatch,
     cfg: RenderConfig,
     active: jax.Array | None = None,
@@ -183,6 +184,12 @@ def _render_batch_binned(
     scan steps — a masked slot skips all blend work and renders the
     background color. (The vmapped features + binning still run at batch
     width; only the blend scales with occupancy.)
+
+    A :class:`~repro.core.scene.SceneTree` with ``cfg.cull`` is culled *per
+    camera inside the vmap*: each lane gathers its own compact visible set
+    (one static ``visible_capacity``-shaped gather per camera), so the
+    vmapped features/sort/binning run at the compact width instead of the
+    resident scene size.
     """
     from repro.core.render import compute_features  # late: render imports us
 
@@ -190,7 +197,9 @@ def _render_batch_binned(
     c = cams.num_cameras
 
     feats = jax.vmap(
-        lambda cam: rast_lib.sort_by_depth(compute_features(g, cam, cfg))
+        lambda cam: rast_lib.sort_by_depth(
+            compute_features(resolve_scene(g, cam, cfg), cam, cfg)
+        )
     )(cams)  # (C, G, ...)
     gn = feats.uv.shape[-2]
 
@@ -258,7 +267,7 @@ def _render_batch_binned(
 
 
 def render_batch(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cams: CameraBatch,
     config: RenderConfig | None = None,
 ) -> jax.Array:
@@ -269,6 +278,10 @@ def render_batch(
     ``pallas_binned``) reuse the per-camera implementation camera-major via
     ``lax.map`` inside the same jit — one compiled executable and one model
     residency either way, which is what the serving layer needs.
+
+    ``g`` may be a :class:`~repro.core.scene.SceneTree`: with
+    ``config.cull`` every camera (vmap lane or ``lax.map`` iteration) culls
+    the resident hierarchy and renders only its own compact visible set.
 
     Differentiable along every path the per-camera render differentiates
     (everything but the forward-only block-list ``pallas`` kernel).
@@ -285,7 +298,7 @@ def render_batch(
 
 @functools.partial(jax.jit, static_argnames=("config",))
 def render_batch_jit(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cams: CameraBatch,
     config: RenderConfig | None = None,
 ) -> jax.Array:
@@ -294,7 +307,7 @@ def render_batch_jit(
 
 
 def render_batch_masked(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cams: CameraBatch,
     active: jax.Array,
     config: RenderConfig | None = None,
@@ -338,7 +351,7 @@ def render_batch_masked(
 
 @functools.partial(jax.jit, static_argnames=("config",))
 def render_batch_masked_jit(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cams: CameraBatch,
     active: jax.Array,
     config: RenderConfig | None = None,

@@ -39,6 +39,7 @@ from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.features import GaussianFeatures
 from repro.core.gaussians import GaussianParams
 from repro.core.render import FEATURE_PATHS
+from repro.core.scene import resolve_scene
 
 
 def _pipeline_config(config: RenderConfig | None, **legacy) -> RenderConfig:
@@ -221,12 +222,17 @@ def sharded_render(
 
     gspec = P(tuple(gaussian_axes))
 
-    # pallas_call has no shard_map replication rule; the compact path is
-    # rank-preserving by construction (each device writes only its own pixel
-    # rows), so disabling the static replication check is safe.
-    extra = {"check_rep": False} if raster_path == "pallas_binned" else {}
+    # pallas_call has no shard_map replication rule, and the culled-gather
+    # path's data-dependent chunk selection defeats static replication
+    # inference; both are rank-preserving by construction (each device
+    # writes only its own pixel rows), so disabling the check is safe.
+    extra = (
+        {"check_rep": False}
+        if raster_path == "pallas_binned" or cfg.cull
+        else {}
+    )
 
-    def _render(g: GaussianParams, cam: Camera, background: jax.Array) -> jax.Array:
+    def _render(g, cam: Camera, background: jax.Array) -> jax.Array:
         @functools.partial(
             shard_map,
             mesh=mesh,
@@ -235,7 +241,13 @@ def sharded_render(
             **extra,
         )
         def _impl(g_shard, cam_rep, bg):
-            feats = feature_fn(g_shard, cam_rep, sh_degree=cfg.sh_degree)
+            # A SceneTree shards chunk-aligned (chunk table and Gaussians
+            # split along the same axes), so each device culls its *own*
+            # chunk slice and features only its local compact visible set;
+            # ``visible_capacity`` is therefore per device here. Raw
+            # clouds pass through untouched.
+            local = resolve_scene(g_shard, cam_rep, cfg)
+            feats = feature_fn(local, cam_rep, sh_degree=cfg.sh_degree)
             # Stage 2: gather the small feature records from all shards.
             gathered = jax.tree.map(
                 lambda x: _multi_axis_all_gather(x, gaussian_axes), feats
@@ -298,9 +310,13 @@ def sharded_render_batch(
     gspec = P(tuple(gaussian_axes))
     cspec = P(tuple(camera_axes))
 
-    extra = {"check_rep": False} if raster_path == "pallas_binned" else {}
+    extra = (
+        {"check_rep": False}
+        if raster_path == "pallas_binned" or cfg.cull
+        else {}
+    )
 
-    def _render(g: GaussianParams, cams, background: jax.Array) -> jax.Array:
+    def _render(g, cams, background: jax.Array) -> jax.Array:
         @functools.partial(
             shard_map,
             mesh=mesh,
@@ -313,7 +329,11 @@ def sharded_render_batch(
             row0 = _axis_index(mesh, pixel_axes) * my_rows
 
             def per_camera(cam):
-                feats = feature_fn(g_shard, cam, sh_degree=cfg.sh_degree)
+                # Per-camera, per-device culling (see sharded_render): a
+                # SceneTree slice is compacted before features, so the
+                # all-gather below moves the culled width, not the scene.
+                local = resolve_scene(g_shard, cam, cfg)
+                feats = feature_fn(local, cam, sh_degree=cfg.sh_degree)
                 gathered = jax.tree.map(
                     lambda x: _multi_axis_all_gather(x, gaussian_axes), feats
                 )

@@ -30,9 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import RenderConfig
-from repro.core.features import GaussianFeatures
+from repro.core.features import ALPHA_EPS, GaussianFeatures
 
-ALPHA_EPS = 1.0 / 255.0
 ALPHA_MAX = 0.99
 
 

@@ -17,6 +17,7 @@ from repro.core import rasterize as rast_lib
 from repro.core.camera import Camera
 from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.gaussians import GaussianParams
+from repro.core.scene import SceneTree, resolve_scene
 
 FEATURE_PATHS = {
     "naive": feat_lib.compute_features_naive,
@@ -52,7 +53,7 @@ def compute_features(
 
 
 def render(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cam: Camera,
     config: RenderConfig | None = None,
     *,
@@ -64,7 +65,10 @@ def render(
     """Render one view. Returns (H, W, 3) in [0, ~1].
 
     Args:
-      g: Gaussian cloud.
+      g: Gaussian cloud, or a :class:`repro.core.scene.SceneTree` — with
+        ``config.cull`` the tree is frustum-culled against ``cam`` and only
+        the visible chunks are featured/binned/blended (see
+        ``scene.resolve_scene``).
       cam: camera (height/width are static ints on the camera).
       config: full render configuration; defaults to
         ``repro.core.config.DEFAULT_CONFIG`` (fused features, binned raster).
@@ -80,13 +84,14 @@ def render(
             pixel_chunk=pixel_chunk,
         ),
     )
+    g = resolve_scene(g, cam, cfg)
     feats = compute_features(g, cam, cfg)
     return rast_lib.rasterize_features(feats, cam.height, cam.width, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
 def render_jit(
-    g: GaussianParams,
+    g: "GaussianParams | SceneTree",
     cam: Camera,
     config: RenderConfig | None = None,
 ) -> jax.Array:

@@ -1,0 +1,438 @@
+"""Hierarchical scene subsystem — Morton-chunked AABB tree, frustum culling,
+and distance-based spherical-harmonic LOD for million-Gaussian scenes.
+
+Every render path so far touches all N Gaussians per camera: features are
+computed for the whole cloud and the binner scans every Gaussian against
+every tile. That caps scene size long before the serving stack saturates.
+This module makes *scene size* the scaling axis:
+
+* :func:`build_scene_tree` — a **static** spatial hierarchy built once per
+  scene (at server startup / training checkpoints). Gaussians are sorted
+  along a Morton (Z-order) curve so that each run of ``leaf_size``
+  consecutive Gaussians is spatially coherent, and each such run becomes a
+  *chunk* with a conservative world-space AABB (member positions padded by
+  their 3-sigma support radius). A flat array of chunk AABBs over a
+  locality-preserving permutation is the octree collapsed to its leaf
+  level — exactly the part per-camera culling consumes, with none of the
+  pointer chasing.
+* :func:`cull_chunks` — per-camera frustum test of every chunk AABB (near
+  plane + the four side planes, expanded by a screen-space margin so the
+  test is conservative w.r.t. the rasterizer's 3-sigma/alpha-floor support
+  contract), plus a per-chunk camera distance that drives LOD.
+* :func:`select_visible_chunks` / :func:`gather_visible` — the
+  gather-to-compact pattern from ``binning.compact_tile_features`` lifted
+  to whole chunks: a **static-capacity** list of visible chunk indices
+  (nearest-first on overflow, sentinel-padded) gathers a compact
+  ``GaussianParams`` of ``capacity * leaf_size`` records. Static shapes ->
+  one compiled executable per capacity; the traced camera only changes
+  *which* chunks are gathered. Sentinel slots gather an invisible record
+  (opacity below the alpha floor, mask-culled by the feature pipeline) and
+  contribute exactly zero color/alpha in every blend path.
+* :func:`apply_sh_lod` — distance-banded SH degree (3 near / 1 mid / 0 far
+  by ``RenderConfig.lod_thresholds``): coefficients above each Gaussian's
+  band are zeroed, which makes the degree-3 evaluator produce *exactly* the
+  lower-degree color (the SH basis is orthogonal per coefficient). Under
+  one executable the saving is bandwidth/accuracy-shaped; the static
+  ``RenderConfig.sh_degree`` knob cuts basis FLOPs for the whole scene.
+
+Everything below :func:`build_scene_tree` is jit/vmap/shard_map-friendly:
+the tree is a pytree (``leaf_size`` static), culling + gather are pure
+static-shape jnp, and gradients flow through the chunk gather back to the
+resident cloud (scatter-add), so a culled render remains trainable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.camera import Camera
+from repro.core.config import RenderConfig
+from repro.core.features import NEAR_PLANE
+from repro.core.gaussians import GaussianParams, pad_to_multiple
+
+# World-space support radius of a Gaussian = AABB_SIGMA * max axis scale.
+# 3 sigma matches the rasterizer's screen-space support box; the frustum
+# margin below absorbs the blur/rounding slop on top.
+AABB_SIGMA = 3.0
+
+# Screen-space slack (pixels) added to the frustum side planes: the
+# rasterizer's support radius includes the COV2D_BLUR screen blur
+# (3 * sqrt(0.3) ~ 1.65 px), a ceil() on the radius (< 1 px) and the
+# half-pixel center offset. 4 px over-covers all three.
+FRUSTUM_MARGIN_PX = 4.0
+
+# Morton quantization: 10 bits per axis -> 30-bit codes.
+_MORTON_BITS = 10
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SceneTree:
+    """Static chunked scene hierarchy (the octree's leaf level, flattened).
+
+    Attributes:
+      gaussians: (N_pad, ...) Morton-permuted cloud, padded to a whole
+        number of chunks with invisible records (``pad_to_multiple``).
+      chunk_lo, chunk_hi: (M, 3) conservative world AABB of each chunk
+        (member positions padded by their 3-sigma support radius).
+      leaf_size: Gaussians per chunk (static; N_pad == M * leaf_size).
+      num_real: original Gaussian count before padding (static).
+    """
+
+    gaussians: GaussianParams
+    chunk_lo: jax.Array
+    chunk_hi: jax.Array
+    leaf_size: int = dataclasses.field(metadata=dict(static=True))
+    num_real: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_chunks(self) -> int:
+        return self.chunk_lo.shape[0]
+
+    @property
+    def num_gaussians(self) -> int:
+        """Padded resident count (= num_chunks * leaf_size)."""
+        return self.gaussians.positions.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ChunkVisibility:
+    """Per-camera, per-chunk culling verdict.
+
+    Attributes:
+      visible: (M,) bool — chunk AABB intersects the (margin-expanded)
+        view frustum.
+      distance: (M,) float — conservative camera distance (to the nearest
+        point of the chunk's bounding sphere, clamped at 0).
+      sh_degree: (M,) int32 — LOD band from ``lod_thresholds`` (3 under
+        the near threshold, 1 under the far one, 0 beyond).
+    """
+
+    visible: jax.Array
+    distance: jax.Array
+    sh_degree: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Tree construction (host-side, once per scene)
+# ---------------------------------------------------------------------------
+
+
+def _part1by2(v: np.ndarray) -> np.ndarray:
+    """Spread the low 10 bits of v so they occupy every third bit."""
+    v = v.astype(np.uint64) & 0x3FF
+    v = (v | (v << 16)) & 0x030000FF
+    v = (v | (v << 8)) & 0x0300F00F
+    v = (v | (v << 4)) & 0x030C30C3
+    v = (v | (v << 2)) & 0x09249249
+    return v
+
+
+def morton_codes(positions: np.ndarray) -> np.ndarray:
+    """(N, 3) positions -> (N,) 30-bit Morton (Z-order) codes.
+
+    Quantized on the positions' own AABB; degenerate axes collapse to 0.
+    """
+    pos = np.asarray(positions, dtype=np.float64)
+    lo = pos.min(axis=0)
+    span = pos.max(axis=0) - lo
+    span = np.where(span > 0, span, 1.0)
+    q = ((pos - lo) / span * ((1 << _MORTON_BITS) - 1)).astype(np.uint64)
+    return (
+        _part1by2(q[:, 0])
+        | (_part1by2(q[:, 1]) << 1)
+        | (_part1by2(q[:, 2]) << 2)
+    )
+
+
+def build_scene_tree(g: GaussianParams, leaf_size: int = 256) -> SceneTree:
+    """Build the static chunk hierarchy for a Gaussian cloud.
+
+    Host-side (called once per scene, e.g. at server startup): Morton codes
+    and the sort permutation are computed in numpy; the permutation itself
+    is applied as a jnp gather, so the resident ``tree.gaussians`` stays
+    differentiable w.r.t. ``g`` (the permutation is a constant).
+
+    The cloud is padded to a whole number of chunks with invisible records
+    (below the alpha floor — see ``gaussians.pad_to_multiple``); only the
+    final chunk can contain padding, and its AABB ignores the padded rows.
+    """
+    if leaf_size <= 0:
+        raise ValueError(f"leaf_size must be positive, got {leaf_size}")
+    n = g.num_gaussians
+    if n == 0:
+        raise ValueError("cannot build a scene tree over an empty cloud")
+
+    codes = morton_codes(np.asarray(jax.device_get(g.positions)))
+    perm = np.argsort(codes, kind="stable").astype(np.int32)
+
+    permuted = jax.tree.map(lambda x: x[jnp.asarray(perm)], g)
+    padded, _ = pad_to_multiple(permuted, leaf_size)
+    n_pad = padded.num_gaussians
+    m = n_pad // leaf_size
+
+    # Conservative per-Gaussian support radius; padded rows are excluded
+    # from the chunk AABBs (their -10 log-scale would not hurt, but their
+    # zero position would).
+    pos = padded.positions.reshape(m, leaf_size, 3)
+    radius = (AABB_SIGMA * jnp.exp(padded.log_scales).max(axis=-1)).reshape(
+        m, leaf_size, 1
+    )
+    valid = (jnp.arange(n_pad) < n).reshape(m, leaf_size, 1)
+    big = jnp.asarray(jnp.finfo(pos.dtype).max, pos.dtype)
+    lo = jnp.min(jnp.where(valid, pos - radius, big), axis=1)
+    hi = jnp.max(jnp.where(valid, pos + radius, -big), axis=1)
+
+    return SceneTree(
+        gaussians=padded,
+        chunk_lo=lo,
+        chunk_hi=hi,
+        leaf_size=leaf_size,
+        num_real=n,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-camera culling + LOD (jit/vmap-friendly)
+# ---------------------------------------------------------------------------
+
+
+def cull_chunks(
+    tree: SceneTree,
+    cam: Camera,
+    *,
+    lod_thresholds: tuple[float, float] | None = None,
+    margin_px: float = FRUSTUM_MARGIN_PX,
+) -> ChunkVisibility:
+    """Frustum-test every chunk AABB against one camera.
+
+    The AABB is transformed to camera space in center/half-extent form
+    (``e_cam = |R| e`` — conservative under rotation) and tested against
+    the five frustum planes: near (``z > NEAR_PLANE``) and the four side
+    planes, whose tangents are widened by ``margin_px / focal`` so a
+    Gaussian whose screen support pokes in from off-frustum is never
+    culled (the AABB already carries the 3-sigma world pad; the margin
+    covers the screen-space blur + rounding).
+
+    Distance (to the chunk's bounding sphere) drives the LOD band:
+    ``lod_thresholds = (near, far)`` selects SH degree 3 below ``near``,
+    1 below ``far``, 0 beyond; ``None`` pins every chunk to degree 3.
+    """
+    center = 0.5 * (tree.chunk_lo + tree.chunk_hi)
+    half = 0.5 * (tree.chunk_hi - tree.chunk_lo)
+
+    c_cam = center @ cam.r_cw.T + cam.t_cw  # (M, 3)
+    e_cam = half @ jnp.abs(cam.r_cw).T  # (M, 3) conservative extents
+
+    tanx, tany = cam.tan_fov()
+    # tan_fov is the symmetric half-angle; an off-center principal point
+    # (real COLMAP captures) widens one side of the frustum beyond it, so
+    # widen both sides by the offset to stay conservative.
+    tx = tanx + jnp.abs(cam.cx - 0.5 * cam.width) / cam.fx + margin_px / cam.fx
+    ty = tany + jnp.abs(cam.cy - 0.5 * cam.height) / cam.fy + margin_px / cam.fy
+
+    cx, cy, cz = c_cam[:, 0], c_cam[:, 1], c_cam[:, 2]
+    ex, ey, ez = e_cam[:, 0], e_cam[:, 1], e_cam[:, 2]
+
+    near_ok = cz + ez > NEAR_PLANE
+    # Side planes through the camera center with inward normals
+    # (±1, 0, tan) / (0, ±1, tan): the AABB is inside-or-crossing iff the
+    # farthest-inside corner (n·c + Σ|n_i| e_i) is non-negative.
+    slack_x = ex + tx * ez
+    slack_y = ey + ty * ez
+    left_ok = cx + tx * cz + slack_x >= 0
+    right_ok = -cx + tx * cz + slack_x >= 0
+    top_ok = cy + ty * cz + slack_y >= 0
+    bot_ok = -cy + ty * cz + slack_y >= 0
+    visible = near_ok & left_ok & right_ok & top_ok & bot_ok
+
+    sphere_r = jnp.linalg.norm(half, axis=-1)
+    dist = jnp.maximum(
+        jnp.linalg.norm(center - cam.cam_pos, axis=-1) - sphere_r, 0.0
+    )
+
+    if lod_thresholds is None:
+        degree = jnp.full(dist.shape, 3, dtype=jnp.int32)
+    else:
+        near_t, far_t = lod_thresholds
+        degree = jnp.where(
+            dist < near_t,
+            jnp.int32(3),
+            jnp.where(dist < far_t, jnp.int32(1), jnp.int32(0)),
+        )
+    return ChunkVisibility(visible=visible, distance=dist, sh_degree=degree)
+
+
+def select_visible_chunks(
+    vis: ChunkVisibility, capacity: int
+) -> tuple[jax.Array, jax.Array]:
+    """Compact the visible set into a static-capacity chunk index list.
+
+    The chunk-level twin of ``binning.bin_gaussians``' front-most-K
+    selection: sort the (stop-gradiented) ``visible -> distance`` key and
+    take the prefix, so on overflow the *nearest* visible chunks win;
+    padding slots carry the sentinel ``M`` (one past the last chunk).
+
+    Distance decides only **which** chunks survive — the survivors are
+    re-sorted by chunk index, so the gathered compact set preserves the
+    resident (Morton) order. That keeps the downstream depth sort's
+    tie-breaking identical to an uncull render of the same tree: f32
+    depth ties are real at 1e5+ Gaussians, and equal-depth Gaussians
+    blended in a different order would break the culled == uncull
+    equality contract.
+
+    Returns ``(chunk_idx (capacity,) int32, num_visible () int32)``.
+    ``num_visible`` is the pre-clamp count — callers can detect overflow
+    (``num_visible > capacity`` means far chunks were dropped and the
+    render is no longer conservative).
+    """
+    m = vis.visible.shape[0]
+    cap = min(capacity, m)
+    key = jnp.where(
+        vis.visible, jax.lax.stop_gradient(vis.distance), jnp.inf
+    )
+    order = jnp.argsort(key).astype(jnp.int32)
+    sel = order[:cap]
+    chunk_idx = jnp.where(vis.visible[sel], sel, jnp.int32(m))
+    return jnp.sort(chunk_idx), jnp.sum(vis.visible).astype(jnp.int32)
+
+
+def _append_invisible(g: GaussianParams) -> GaussianParams:
+    """Append one sentinel record that no blend path can see.
+
+    Mirrors ``pad_to_multiple``'s padding: opacity sigmoid(-30) is ~1e-13,
+    far below the rasterizer's 1/255 alpha floor, and the feature
+    pipeline's mask additionally culls sub-floor opacities outright — so
+    a sentinel contributes exactly zero color/alpha everywhere (pinned by
+    tests/test_scene.py).
+    """
+
+    def pad1(x, fill):
+        widths = [(0, 1)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    return GaussianParams(
+        positions=pad1(g.positions, 0.0),
+        quats=pad1(g.quats, 1.0),
+        log_scales=pad1(g.log_scales, -10.0),
+        sh=pad1(g.sh, 0.0),
+        opacity_logit=pad1(g.opacity_logit, -30.0),
+    )
+
+
+def gather_visible(
+    tree: SceneTree, chunk_idx: jax.Array
+) -> tuple[GaussianParams, jax.Array]:
+    """Gather the selected chunks into one compact ``GaussianParams``.
+
+    ``chunk_idx`` is the static-capacity sentinel-padded list from
+    :func:`select_visible_chunks`; every sentinel slot's ``leaf_size``
+    rows gather the appended invisible record. Differentiable w.r.t. the
+    resident cloud (the gather's VJP scatter-adds per-chunk gradients
+    back), the indices are discrete.
+
+    Returns ``(params (capacity * leaf_size, ...), valid (capacity,)
+    bool)`` — ``valid`` marks real (non-sentinel) chunk slots.
+    """
+    leaf = tree.leaf_size
+    m = tree.num_chunks
+    n_pad = tree.num_gaussians
+    valid = chunk_idx < m
+    rows = chunk_idx[:, None] * leaf + jnp.arange(leaf, dtype=jnp.int32)
+    # Sentinel chunks (index M) land exactly at n_pad .. n_pad + leaf - 1;
+    # clamp them onto the single appended invisible record.
+    rows = jnp.minimum(rows, jnp.int32(n_pad)).reshape(-1)
+    g_pad = _append_invisible(tree.gaussians)
+    return jax.tree.map(lambda x: x[rows], g_pad), valid
+
+
+def apply_sh_lod(sh: jax.Array, degree: jax.Array) -> jax.Array:
+    """Zero SH coefficients above each Gaussian's LOD degree.
+
+    ``sh`` is (..., 16, 3), ``degree`` broadcasts over the leading axes.
+    Zeroing bands k >= (degree+1)^2 makes the full degree-3 evaluator
+    return exactly the degree-``d`` color (each basis function multiplies
+    its own coefficient), so LOD composes with every feature path without
+    a second executable.
+    """
+    nb = (degree + 1) ** 2
+    keep = jnp.arange(sh.shape[-2], dtype=nb.dtype) < nb[..., None]
+    return sh * keep[..., None].astype(sh.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Render-stack entry point
+# ---------------------------------------------------------------------------
+
+
+def resolve_scene(
+    scene: "SceneTree | GaussianParams",
+    cam: Camera | None,
+    config: RenderConfig,
+) -> GaussianParams:
+    """The render stack's scene adapter: tree + camera -> compact params.
+
+    * plain ``GaussianParams`` pass through untouched;
+    * a :class:`SceneTree` with ``config.cull`` disabled renders its full
+      resident (Morton-permuted) cloud — same image as the raw cloud, the
+      permutation only reorders depth-sort ties;
+    * with ``config.cull`` the tree is frustum-culled against ``cam``,
+      the visible chunks (nearest-first under ``config.visible_capacity``)
+      are gathered to a compact static-shape cloud, and — when
+      ``config.lod_thresholds`` is set — each chunk's SH coefficients are
+      banded down by camera distance.
+
+    Pure static-shape jnp after tree construction, so it traces inside
+    ``jit``/``vmap``/``shard_map``: per-camera culling lives *inside* the
+    existing executables (one compile per capacity, any camera).
+    """
+    if not isinstance(scene, SceneTree):
+        return scene
+    if not config.cull:
+        return scene.gaussians
+    if cam is None:
+        raise ValueError("config.cull needs a camera to cull against")
+    vis = cull_chunks(scene, cam, lod_thresholds=config.lod_thresholds)
+    capacity = config.visible_capacity or scene.num_chunks
+    chunk_idx, _ = select_visible_chunks(vis, capacity)
+    g, _ = gather_visible(scene, chunk_idx)
+    if config.lod_thresholds is not None:
+        # Per-Gaussian degree: the owning chunk's band (sentinels -> 0),
+        # clamped by the global static degree knob.
+        deg_pad = jnp.concatenate(
+            [vis.sh_degree, jnp.zeros((1,), jnp.int32)]
+        )
+        deg = jnp.minimum(deg_pad[chunk_idx], jnp.int32(config.sh_degree))
+        deg = jnp.repeat(
+            deg,
+            scene.leaf_size,
+            total_repeat_length=deg.shape[0] * scene.leaf_size,
+        )
+        g = dataclasses.replace(g, sh=apply_sh_lod(g.sh, deg))
+    return g
+
+
+def visibility_stats(
+    tree: SceneTree, cam: Camera, config: RenderConfig
+) -> dict:
+    """Host-side culling summary for one camera (benchmarks/examples)."""
+    vis = cull_chunks(tree, cam, lod_thresholds=config.lod_thresholds)
+    visible = np.asarray(jax.device_get(vis.visible))
+    degree = np.asarray(jax.device_get(vis.sh_degree))
+    capacity = config.visible_capacity or tree.num_chunks
+    num_visible = int(visible.sum())
+    return {
+        "num_chunks": int(visible.size),
+        "num_visible": num_visible,
+        "visible_fraction": num_visible / max(1, visible.size),
+        "capacity": int(capacity),
+        "overflowed": num_visible > capacity,
+        "degree_counts": {
+            str(d): int(((degree == d) & visible).sum()) for d in (0, 1, 3)
+        },
+    }

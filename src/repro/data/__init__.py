@@ -1,3 +1,9 @@
+from repro.data.colmap import ColmapScene, load_colmap_scene
 from repro.data.synthetic import SyntheticLMData, SyntheticMultiView
 
-__all__ = ["SyntheticLMData", "SyntheticMultiView"]
+__all__ = [
+    "ColmapScene",
+    "SyntheticLMData",
+    "SyntheticMultiView",
+    "load_colmap_scene",
+]

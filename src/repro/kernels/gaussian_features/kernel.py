@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.features import COV2D_BLUR, FOV_GUARD, NEAR_PLANE
+from repro.core.features import ALPHA_EPS, COV2D_BLUR, FOV_GUARD, NEAR_PLANE
 from repro.core.sh import SH_C0, SH_C1, SH_C2, SH_C3
 
 # Camera constant-vector layout (packed into a (1, 32) f32 operand).
@@ -202,7 +202,12 @@ def gaussian_features_kernel(
     onscreen = (
         (u > -radius) & (u < width + radius) & (v > -radius) & (v < height + radius)
     )
-    mask = ((pcz > NEAR_PLANE) & (radius > 0.0) & onscreen).astype(u.dtype)
+    mask = (
+        (pcz > NEAR_PLANE)
+        & (radius > 0.0)
+        & onscreen
+        & (opacity >= ALPHA_EPS)
+    ).astype(u.dtype)
 
     out_ref[0, :] = u
     out_ref[1, :] = v

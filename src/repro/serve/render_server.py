@@ -69,6 +69,7 @@ from repro.core.multicam import (
     render_batch_masked_jit,
     stack_cameras,
 )
+from repro.core.scene import SceneTree, build_scene_tree
 
 MODES = ("continuous", "microbatch")
 
@@ -136,6 +137,12 @@ class RenderServer:
 
     Args:
       model: the Gaussian cloud to serve (resident for the server lifetime).
+        With ``config.cull`` a raw cloud is promoted to a
+        :class:`~repro.core.scene.SceneTree` **once at startup**
+        (``config.leaf_size`` chunks), so every request renders against
+        the resident hierarchy: each step's executables frustum-cull per
+        camera and touch only the visible chunks. A prebuilt tree is also
+        accepted (e.g. shared across servers).
       config: render configuration (static -> one executable per bucket).
       width, height: the (single) image-size bucket when ``sizes`` is not
         given — the PR 3 signature, still the common case.
@@ -166,8 +173,10 @@ class RenderServer:
     ):
         if mode not in MODES:
             raise ValueError(f"mode={mode!r} not in {MODES}")
-        self.model = model
         self.config = as_config(config)
+        if self.config.cull and not isinstance(model, SceneTree):
+            model = build_scene_tree(model, leaf_size=self.config.leaf_size)
+        self.model: GaussianParams | SceneTree = model
         if sizes is None:
             sizes = [(int(width), int(height))]
         self.buckets: tuple[tuple[int, int], ...] = tuple(

@@ -1,0 +1,155 @@
+"""COLMAP text-format loader: parsing, pose convention, point-cloud init.
+
+The fixture under ``tests/data/colmap/`` is a 3-camera orbit written in
+COLMAP's text layout (one camera per supported model: PINHOLE,
+SIMPLE_PINHOLE, SIMPLE_RADIAL) over a small two-cluster point cloud; poses
+were generated from the repo's own ``look_at_camera``, so loading must
+reproduce them.
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RenderConfig, build_scene_tree, render
+from repro.core.camera import orbit_cameras
+from repro.core.sh import SH_C0, eval_sh_color
+from repro.data.colmap import (
+    gaussians_from_points,
+    load_colmap_scene,
+    read_cameras_txt,
+    scale_camera,
+)
+
+FIXTURE = pathlib.Path(__file__).parent / "data" / "colmap"
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return load_colmap_scene(FIXTURE)
+
+
+class TestParsing:
+    def test_counts(self, scene):
+        assert len(scene.cameras) == 3
+        assert len(scene.image_names) == 3
+        assert scene.points.shape == (40, 3)
+        assert scene.colors.shape == (40, 3)
+        assert scene.gaussians.num_gaussians == 40
+
+    def test_intrinsics_all_models(self, scene):
+        # One camera per model; all share the generator's focal/principal.
+        for cam in scene.cameras:
+            assert (cam.width, cam.height) == (64, 48)
+            np.testing.assert_allclose(float(cam.fx), float(cam.fy))
+            np.testing.assert_allclose(float(cam.cx), 32.0)
+            np.testing.assert_allclose(float(cam.cy), 24.0)
+
+    def test_poses_match_generator(self, scene):
+        want = orbit_cameras(3, radius=5.0, width=64, height=48)
+        for got, ref in zip(scene.cameras, want):
+            np.testing.assert_allclose(
+                np.asarray(got.r_cw), np.asarray(ref.r_cw), atol=1e-5
+            )
+            np.testing.assert_allclose(
+                np.asarray(got.t_cw), np.asarray(ref.t_cw), atol=1e-5
+            )
+            r = np.asarray(got.r_cw)
+            np.testing.assert_allclose(r @ r.T, np.eye(3), atol=1e-5)
+
+    def test_colors_in_unit_range(self, scene):
+        assert (scene.colors >= 0.0).all() and (scene.colors <= 1.0).all()
+
+    def test_missing_file_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            load_colmap_scene(tmp_path)
+
+    def test_image_name_with_spaces_survives(self, tmp_path):
+        """COLMAP preserves original filenames; a space in the name must
+        not make the pose line parse as an observation line."""
+        from repro.data.colmap import read_images_txt
+
+        (tmp_path / "images.txt").write_text(
+            "1 1.0 0.0 0.0 0.0 0.1 0.2 0.3 1 IMG 0012.jpg\n\n"
+        )
+        cams, names = read_images_txt(
+            tmp_path / "images.txt",
+            {1: dict(width=64, height=48, fx=70.0, fy=70.0, cx=32.0, cy=24.0)},
+        )
+        assert len(cams) == 1
+        assert names == ["IMG 0012.jpg"]
+
+    def test_unsupported_model_raises(self, tmp_path):
+        (tmp_path / "cameras.txt").write_text(
+            "1 OPENCV 64 48 70 70 32 24 0 0 0 0\n"
+        )
+        with pytest.raises(ValueError, match="unsupported"):
+            read_cameras_txt(tmp_path / "cameras.txt")
+
+
+class TestPointInit:
+    def test_dc_color_reproduces_point_color(self, scene):
+        g = scene.gaussians
+        np.testing.assert_allclose(
+            np.asarray(g.sh[:, 0, :]) * SH_C0 + 0.5,
+            scene.colors,
+            atol=1e-5,
+        )
+        # Degree-0 evaluation returns the point color for any direction.
+        dirs = jnp.tile(jnp.asarray([0.0, 0.0, 1.0]), (40, 1))
+        col = eval_sh_color(g.sh, dirs, degree=0)
+        np.testing.assert_allclose(
+            np.asarray(col), scene.colors, atol=1e-5
+        )
+
+    def test_scales_track_local_density(self):
+        # Two points close together + one far away: the pair gets a much
+        # smaller init scale than the outlier.
+        pts = np.array(
+            [[0.0, 0, 0], [0.01, 0, 0], [5.0, 0, 0]], np.float32
+        )
+        cols = np.full((3, 3), 0.5, np.float32)
+        g = gaussians_from_points(pts, cols)
+        s = np.exp(np.asarray(g.log_scales))[:, 0]
+        assert s[0] < s[2] and s[1] < s[2]
+
+    def test_opacity_uniform_start(self, scene):
+        opa = jax.nn.sigmoid(np.asarray(scene.gaussians.opacity_logit))
+        np.testing.assert_allclose(opa, 0.1, atol=1e-5)
+
+
+class TestIntegration:
+    def test_render_from_loaded_pose(self, scene):
+        img = render(
+            scene.gaussians,
+            scene.cameras[0],
+            RenderConfig(raster_path="binned"),
+        )
+        assert img.shape == (48, 64, 3)
+        assert np.isfinite(np.asarray(img)).all()
+        assert float(img.max()) > 0.0  # the cloud is on screen
+
+    def test_scale_camera(self, scene):
+        half = scale_camera(scene.cameras[0], 0.5)
+        assert (half.width, half.height) == (32, 24)
+        np.testing.assert_allclose(
+            float(half.fx), 0.5 * float(scene.cameras[0].fx)
+        )
+        img = render(scene.gaussians, half, RenderConfig())
+        assert img.shape == (24, 32, 3)
+
+    def test_scene_tree_over_colmap_points(self, scene):
+        tree = build_scene_tree(scene.gaussians, leaf_size=16)
+        cfg = RenderConfig(raster_path="binned", cull=True, early_exit=False)
+        culled = render(tree, scene.cameras[0], cfg)
+        base = render(
+            scene.gaussians,
+            scene.cameras[0],
+            cfg.replace(cull=False),
+        )
+        np.testing.assert_allclose(
+            np.asarray(culled), np.asarray(base), atol=1e-5
+        )

@@ -1,0 +1,531 @@
+"""Scene hierarchy: tree construction, frustum culling, LOD, sentinels.
+
+The load-bearing contracts:
+
+* **conservative culling** — a chunk is culled only when no member Gaussian
+  can touch the screen under the rasterizer's support contract (3-sigma box
+  + alpha floor), so at conservative capacity the culled tile lists equal
+  the uncull ones and the images match exactly on every raster path;
+* **sentinel neutrality** — visible-set gather sentinels (and
+  ``pad_to_multiple`` padding generally) carry sub-alpha-floor opacity and
+  are mask-culled by the feature pipeline, so they contribute exactly zero
+  color/alpha in every blend path and never crowd tile-list capacity;
+* **SH LOD exactness** — zeroing coefficients above degree k reproduces the
+  degree-k evaluation bit-for-bit, so the distance-banded LOD (and the
+  static ``sh_degree`` knob) need no second executable.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RenderConfig,
+    SceneTree,
+    apply_sh_lod,
+    build_scene_tree,
+    clustered_gaussians,
+    cull_chunks,
+    gather_visible,
+    random_gaussians,
+    render,
+    render_batch,
+    render_batch_masked,
+    select_visible_chunks,
+    visibility_stats,
+)
+from repro.core.camera import look_at_camera, orbit_cameras
+from repro.core.features import compute_features_fused
+from repro.core.gaussians import pad_to_multiple
+from repro.core.sh import eval_sh_color
+
+
+def _scene(n=300, seed=0, extent=1.5):
+    return random_gaussians(jax.random.PRNGKey(seed), n, extent=extent)
+
+
+def _cam(size=32, eye=(0.0, 1.0, -5.0)):
+    return look_at_camera(eye, (0.0, 0.0, 0.0), width=size, height=size)
+
+
+# The O(P*G) dense oracle is compile-heavy at these scene sizes; its params
+# run in the slow CI suite (dense==binned is pinned separately in
+# test_binning), the production + Pallas paths stay in tier-1.
+ALL_PATHS = [
+    pytest.param("dense", marks=pytest.mark.slow),
+    "binned",
+    "pallas",
+    "pallas_binned",
+]
+
+
+class TestBuildTree:
+    def test_shapes_and_padding(self):
+        g = _scene(n=300)
+        tree = build_scene_tree(g, leaf_size=64)
+        assert tree.num_chunks == 5  # 300 -> 320 padded
+        assert tree.num_gaussians == 5 * 64
+        assert tree.num_real == 300
+        assert tree.chunk_lo.shape == tree.chunk_hi.shape == (5, 3)
+
+    def test_permutation_preserves_cloud(self):
+        g = _scene(n=128)
+        tree = build_scene_tree(g, leaf_size=32)
+        # Same multiset of positions in the first num_real rows.
+        a = np.sort(np.asarray(g.positions), axis=0)
+        b_all = np.asarray(tree.gaussians.positions)
+        # Padding rows are invisible (opacity below the alpha floor).
+        opa = jax.nn.sigmoid(np.asarray(tree.gaussians.opacity_logit))
+        real = opa >= 1.0 / 255.0
+        assert real.sum() == 128
+        np.testing.assert_allclose(np.sort(b_all[real], axis=0), a)
+
+    def test_chunks_are_spatially_coherent(self):
+        """Morton ordering: chunk AABB volumes are far below the scene
+        AABB volume (random order would give every chunk ~the full box)."""
+        g = _scene(n=4096, extent=2.0)
+        tree = build_scene_tree(g, leaf_size=256)
+        ext = np.asarray(tree.chunk_hi - tree.chunk_lo)
+        scene_vol = np.prod(
+            np.asarray(g.positions).max(0) - np.asarray(g.positions).min(0)
+        )
+        assert np.median(np.prod(ext, axis=1)) < 0.25 * scene_vol
+
+    def test_aabbs_contain_members_with_sigma_pad(self):
+        g = _scene(n=200)
+        tree = build_scene_tree(g, leaf_size=64)
+        pos = np.asarray(tree.gaussians.positions)
+        rad = 3.0 * np.exp(np.asarray(tree.gaussians.log_scales)).max(-1)
+        valid = np.arange(pos.shape[0]) < 200
+        for c in range(tree.num_chunks):
+            sl = slice(c * 64, (c + 1) * 64)
+            v = valid[sl]
+            if not v.any():
+                continue
+            lo = np.asarray(tree.chunk_lo[c])
+            hi = np.asarray(tree.chunk_hi[c])
+            assert (pos[sl][v] - rad[sl][v, None] >= lo - 1e-5).all()
+            assert (pos[sl][v] + rad[sl][v, None] <= hi + 1e-5).all()
+
+    def test_rejects_empty_and_bad_leaf(self):
+        g = _scene(n=8)
+        with pytest.raises(ValueError, match="leaf_size"):
+            build_scene_tree(g, leaf_size=0)
+
+
+class TestCullChunks:
+    def test_all_visible_from_far_camera(self):
+        tree = build_scene_tree(_scene(), leaf_size=64)
+        vis = cull_chunks(tree, _cam(eye=(0, 1, -8)))
+        assert bool(np.asarray(vis.visible).all())
+
+    def test_behind_camera_culled(self):
+        """Two separated clusters; the one behind the camera is culled."""
+        front = _scene(n=128, seed=0, extent=0.4)
+        back = dataclasses.replace(
+            _scene(n=128, seed=1, extent=0.4),
+            positions=_scene(n=128, seed=1, extent=0.4).positions
+            + jnp.asarray([0.0, 0.0, -20.0]),
+        )
+        g = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), front, back
+        )
+        tree = build_scene_tree(g, leaf_size=32)
+        cam = _cam(eye=(0.0, 0.0, -5.0))  # looking at the front cluster
+        vis = np.asarray(cull_chunks(tree, cam).visible)
+        assert vis.any() and not vis.all()
+        # The culled chunks are exactly the far-cluster ones.
+        centers = np.asarray(0.5 * (tree.chunk_lo + tree.chunk_hi))
+        assert (centers[~vis][:, 2] < -5.0).all()
+
+    def test_off_center_principal_point_stays_conservative(self):
+        """An off-center cx widens one side of the frustum beyond the
+        symmetric tan_fov; culling must still keep every chunk that can
+        reach the screen (COLMAP captures are routinely asymmetric)."""
+        g = _scene(n=512, extent=2.0)
+        tree = build_scene_tree(g, leaf_size=64)
+        cam = look_at_camera(
+            (0.0, 0.0, 0.0), (0.0, 0.0, 3.0), width=64, height=64
+        )
+        # Shift the principal point hard toward one edge: content near the
+        # wide edge sits outside the symmetric half-angle.
+        cam = dataclasses.replace(
+            cam, cx=jnp.asarray(8.0, jnp.float32)
+        )
+        cfg = RenderConfig(
+            raster_path="binned", early_exit=False, cull=True
+        )
+        base = render(tree, cam, cfg.replace(cull=False))
+        culled = render(tree, cam, cfg)
+        np.testing.assert_allclose(
+            np.asarray(culled), np.asarray(base), atol=1e-6
+        )
+
+    def test_lod_bands_by_distance(self):
+        tree = build_scene_tree(_scene(extent=0.3), leaf_size=64)
+        cam_near = _cam(eye=(0, 0, -1.5))
+        cam_far = _cam(eye=(0, 0, -30.0))
+        near = cull_chunks(tree, cam_near, lod_thresholds=(5.0, 20.0))
+        far = cull_chunks(tree, cam_far, lod_thresholds=(5.0, 20.0))
+        assert (np.asarray(near.sh_degree) == 3).all()
+        assert (np.asarray(far.sh_degree) == 0).all()
+
+    def test_select_nearest_first_on_overflow(self):
+        tree = build_scene_tree(_scene(n=512), leaf_size=64)
+        vis = cull_chunks(tree, _cam(eye=(0, 1, -8)))
+        idx, nvis = select_visible_chunks(vis, capacity=3)
+        assert int(nvis) == tree.num_chunks  # all visible, overflowed
+        dist = np.asarray(vis.distance)
+        kept = np.asarray(idx)
+        assert (kept < tree.num_chunks).all()
+        # Kept chunks are the 3 nearest.
+        assert set(kept) == set(np.argsort(dist)[:3])
+
+    def test_sentinel_padding_in_select(self):
+        tree = build_scene_tree(_scene(n=256), leaf_size=64)
+        vis = cull_chunks(tree, _cam())
+        # Force one chunk invisible to exercise sentinel padding.
+        vis = dataclasses.replace(
+            vis, visible=vis.visible.at[0].set(False)
+        )
+        idx, nvis = select_visible_chunks(vis, capacity=tree.num_chunks)
+        assert int(nvis) == tree.num_chunks - 1
+        assert int(np.asarray(idx[-1])) == tree.num_chunks  # sentinel
+
+
+class TestCulledRenderEquivalence:
+    @pytest.mark.parametrize("path", ALL_PATHS)
+    def test_all_visible_matches_uncull(self, path):
+        g = _scene(n=256)
+        tree = build_scene_tree(g, leaf_size=64)
+        cam = _cam()
+        cfg = RenderConfig(
+            raster_path=path,
+            tile_capacity=128,
+            early_exit=False,
+            pixel_chunk=None,
+        )
+        base = render(g, cam, cfg)
+        culled = render(tree, cam, cfg.replace(cull=True))
+        np.testing.assert_allclose(
+            np.asarray(culled), np.asarray(base), atol=1e-5, rtol=1e-5
+        )
+
+    @pytest.mark.parametrize(
+        "path",
+        [
+            # The O(P*G) oracle at 600 G is compile-heavy; the binned
+            # production path keeps the pixel-exactness pin in tier-1.
+            pytest.param("dense", marks=pytest.mark.slow),
+            "binned",
+        ],
+    )
+    def test_conservative_drop_is_pixel_exact(self, path):
+        """Camera inside the scene: far/behind chunks culled, image equal
+        on the in-frustum content (conservative culling only removes
+        Gaussians the support contract already excludes)."""
+        g = _scene(n=600, extent=2.0)
+        tree = build_scene_tree(g, leaf_size=64)
+        # Camera inside the cloud looking outward: one frustum's worth of
+        # the scene is visible, the rest is conservatively culled.
+        cam = look_at_camera(
+            (0.0, 0.0, 0.0), (0.0, 0.0, 3.0), width=32, height=32
+        )
+        cfg = RenderConfig(
+            raster_path=path, early_exit=False, pixel_chunk=None
+        )
+        stats = visibility_stats(tree, cam, cfg.replace(cull=True))
+        assert 0 < stats["num_visible"] < stats["num_chunks"]
+        base = render(g, cam, cfg)
+        culled = render(tree, cam, cfg.replace(cull=True))
+        np.testing.assert_allclose(
+            np.asarray(culled), np.asarray(base), atol=1e-6
+        )
+
+    def test_capacity_overflow_drops_far_content_only(self):
+        g = _scene(n=512)
+        tree = build_scene_tree(g, leaf_size=64)
+        cam = _cam()
+        cfg = RenderConfig(
+            raster_path="binned",
+            early_exit=False,
+            cull=True,
+            visible_capacity=2,
+        )
+        out = render(tree, cam, cfg)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_one_executable_many_cameras(self):
+        """Culling is traced: different cameras hit one compiled fn."""
+        from repro.core import render_jit
+
+        tree = build_scene_tree(_scene(n=128), leaf_size=32)
+        cfg = RenderConfig(raster_path="binned", cull=True, visible_capacity=4)
+        cams = orbit_cameras(3, radius=5.0, width=16, height=16)
+        render_jit(tree, cams[0], cfg)
+        before = render_jit._cache_size()
+        render_jit(tree, cams[1], cfg)
+        render_jit(tree, cams[2], cfg)
+        assert render_jit._cache_size() == before
+
+    @pytest.mark.slow  # value_and_grad through cull+gather: compile-heavy
+    def test_gradients_flow_through_culled_render(self):
+        g = _scene(n=128)
+        tree = build_scene_tree(g, leaf_size=32)
+        cam = _cam(size=16)
+        cfg = RenderConfig(
+            raster_path="binned", cull=True, tile_capacity=64
+        )
+
+        def loss(cloud):
+            t = dataclasses.replace(tree, gaussians=cloud)
+            return jnp.mean(render(t, cam, cfg) ** 2)
+
+        grads = jax.grad(loss)(tree.gaussians)
+        for name in ["positions", "sh", "opacity_logit"]:
+            gn = float(jnp.linalg.norm(getattr(grads, name)))
+            assert np.isfinite(gn) and gn > 0.0, name
+
+
+class TestBatchedCulledRender:
+    def test_render_batch_matches_per_camera(self):
+        tree = build_scene_tree(_scene(n=256), leaf_size=64)
+        cb = orbit_cameras(3, radius=5.0, width=32, height=32, stacked=True)
+        cfg = RenderConfig(
+            raster_path="binned",
+            early_exit=False,
+            cull=True,
+            visible_capacity=4,
+        )
+        out = render_batch(tree, cb, cfg)
+        for i in range(3):
+            want = render(tree, cb.camera(i), cfg)
+            np.testing.assert_allclose(
+                np.asarray(out[i]), np.asarray(want), atol=1e-5
+            )
+
+    def test_masked_inactive_slots_render_background(self):
+        tree = build_scene_tree(_scene(n=128), leaf_size=32)
+        cb = orbit_cameras(3, radius=5.0, width=16, height=16, stacked=True)
+        cfg = RenderConfig(
+            raster_path="binned",
+            cull=True,
+            visible_capacity=4,
+            background=(0.2, 0.4, 0.6),
+        )
+        out = render_batch_masked(
+            tree, cb, jnp.asarray([True, False, True]), cfg
+        )
+        bg = np.broadcast_to(np.asarray(cfg.background), (16, 16, 3))
+        np.testing.assert_allclose(np.asarray(out[1]), bg, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out[0]),
+            np.asarray(render(tree, cb.camera(0), cfg)),
+            atol=1e-5,
+        )
+
+
+class TestSentinelNeutrality:
+    """Satellite: gather sentinels contribute exactly zero everywhere."""
+
+    def _tree_with_sentinels(self):
+        g = _scene(n=96)
+        tree = build_scene_tree(g, leaf_size=32)  # 3 chunks
+        # Capacity above the chunk count guarantees sentinel slots in the
+        # gathered compact set.
+        vis = cull_chunks(tree, _cam())
+        idx, _ = select_visible_chunks(
+            dataclasses.replace(vis, visible=vis.visible.at[2].set(False)),
+            capacity=tree.num_chunks,
+        )
+        return tree, idx
+
+    def test_gather_pads_with_invisible_records(self):
+        tree, idx = self._tree_with_sentinels()
+        params, valid = gather_visible(tree, idx)
+        assert params.num_gaussians == tree.num_chunks * 32
+        sentinels = ~np.repeat(np.asarray(valid), 32)
+        assert sentinels.any()
+        opa = jax.nn.sigmoid(np.asarray(params.opacity_logit))
+        assert (opa[sentinels] < 1.0 / 255.0).all()
+
+    def test_sentinel_features_are_mask_culled(self):
+        tree, idx = self._tree_with_sentinels()
+        params, valid = gather_visible(tree, idx)
+        feats = compute_features_fused(params, _cam())
+        sentinels = ~np.repeat(np.asarray(valid), 32)
+        assert (np.asarray(feats.mask)[sentinels] == 0.0).all()
+
+    @pytest.mark.parametrize("path", ALL_PATHS)
+    def test_sentinels_contribute_zero_in_every_blend_path(self, path):
+        """Rendering the sentinel-padded compact set == rendering the same
+        real records without sentinels, on every raster path."""
+        tree, idx = self._tree_with_sentinels()
+        params, valid = gather_visible(tree, idx)
+        mask = np.repeat(np.asarray(valid), 32)
+        real = jax.tree.map(lambda x: x[np.where(mask)[0]], params)
+        cam = _cam()
+        cfg = RenderConfig(
+            raster_path=path,
+            tile_capacity=96,
+            early_exit=False,
+            pixel_chunk=None,
+        )
+        with_sentinels = render(params, cam, cfg)
+        without = render(real, cam, cfg)
+        np.testing.assert_allclose(
+            np.asarray(with_sentinels), np.asarray(without), atol=1e-6
+        )
+
+    def test_pad_to_multiple_padding_never_crowds_tile_lists(self):
+        """The mask now culls sub-alpha-floor opacities, so padded records
+        cannot occupy tile-list capacity (they used to pass the mask)."""
+        from repro.core.binning import bin_gaussians
+        from repro.core.rasterize import sort_by_depth
+
+        g = _scene(n=64)
+        padded, _ = pad_to_multiple(g, 128)
+        feats = sort_by_depth(compute_features_fused(padded, _cam()))
+        bins = bin_gaussians(feats, 32, 32, tile_size=16, capacity=128)
+        # No list may contain more live entries than there are real
+        # Gaussians: padding must never appear.
+        assert int(np.asarray(bins.count).max()) <= 64
+
+
+class TestShDegreeLOD:
+    """Satellite: sh_degree threading + LOD-banding exactness."""
+
+    def test_degree_k_equals_degree3_with_zeroed_tail(self):
+        g = _scene(n=64)
+        cam = _cam()
+        for k in (0, 1, 2):
+            nb = (k + 1) ** 2
+            zeroed = dataclasses.replace(
+                g, sh=g.sh.at[:, nb:, :].set(0.0)
+            )
+            a = compute_features_fused(g, cam, sh_degree=k).color
+            b = compute_features_fused(zeroed, cam, sh_degree=3).color
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-6
+            )
+
+    def test_config_sh_degree_threads_to_render(self):
+        g = _scene(n=64)
+        cam = _cam()
+        nb = 4  # degree 1
+        zeroed = dataclasses.replace(g, sh=g.sh.at[:, nb:, :].set(0.0))
+        a = render(g, cam, RenderConfig(sh_degree=1, early_exit=False))
+        b = render(zeroed, cam, RenderConfig(sh_degree=3, early_exit=False))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_apply_sh_lod_matches_low_degree_eval(self):
+        key = jax.random.PRNGKey(0)
+        sh = jax.random.normal(key, (32, 16, 3))
+        dirs = jax.random.normal(jax.random.PRNGKey(1), (32, 3))
+        dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+        for k in (0, 1, 3):
+            deg = jnp.full((32,), k, dtype=jnp.int32)
+            banded = eval_sh_color(apply_sh_lod(sh, deg), dirs, degree=3)
+            direct = eval_sh_color(sh, dirs, degree=k)
+            np.testing.assert_allclose(
+                np.asarray(banded), np.asarray(direct), atol=1e-6
+            )
+
+    def test_lod_render_drops_view_dependence_only(self):
+        """Degree-0 LOD on every chunk == rendering with sh_degree=0."""
+        g = _scene(n=128)
+        tree = build_scene_tree(g, leaf_size=32)
+        cam = _cam()
+        # Thresholds of 0 put every chunk in the far band (degree 0).
+        lod = render(
+            tree,
+            cam,
+            RenderConfig(
+                cull=True, lod_thresholds=(0.0, 0.0), early_exit=False
+            ),
+        )
+        flat = render(
+            tree,
+            cam,
+            RenderConfig(cull=True, sh_degree=0, early_exit=False),
+        )
+        np.testing.assert_allclose(
+            np.asarray(lod), np.asarray(flat), atol=1e-6
+        )
+
+
+class TestServerWithTree:
+    def test_server_builds_tree_and_matches_uncull(self):
+        from repro.serve import RenderServer
+
+        g = _scene(n=256)
+        cfg = RenderConfig(
+            raster_path="binned", cull=True, leaf_size=64, visible_capacity=8
+        )
+        cam = _cam()
+        server = RenderServer(g, cfg, width=32, height=32, max_batch=2)
+        assert isinstance(server.model, SceneTree)
+        with server:
+            got = server.render(cam).image
+        want = np.asarray(render(g, cam, RenderConfig(raster_path="binned")))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.slow
+class TestBigSceneSmoke:
+    def test_200k_culled_render_cpu(self):
+        """200k-Gaussian clustered scene: culled render matches uncull and
+        visible fraction is partial (the million-Gaussian path in little)."""
+        g = clustered_gaussians(
+            jax.random.PRNGKey(0), 200_000, num_clusters=12, extent=2.0
+        )
+        tree = build_scene_tree(g, leaf_size=256)
+        cam = look_at_camera(
+            (0.7, 0.2, 0.0), (2.1, 0.2, 0.0), width=128, height=128
+        )
+        cfg = RenderConfig(raster_path="binned")
+        stats = visibility_stats(tree, cam, cfg.replace(cull=True))
+        assert stats["visible_fraction"] < 0.5
+        cfgc = cfg.replace(
+            cull=True, visible_capacity=stats["num_visible"]
+        )
+        base = render(g, cam, cfg)
+        culled = render(tree, cam, cfgc)
+        np.testing.assert_allclose(
+            np.asarray(culled), np.asarray(base), atol=1e-5
+        )
+
+
+@pytest.mark.slow
+class TestShardedCulledRender:
+    def test_sharded_batch_with_tree(self, run_multidevice):
+        run_multidevice(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.compat import make_mesh
+            from repro.core import (RenderConfig, build_scene_tree,
+                                    random_gaussians, render)
+            from repro.core.camera import orbit_cameras
+            from repro.core.pipeline import sharded_render_batch
+
+            mesh = make_mesh((2, 2, 2), ("gs", "cam", "px"))
+            g = random_gaussians(jax.random.PRNGKey(0), 512, extent=1.5)
+            tree = build_scene_tree(g, leaf_size=64)
+            cfg = RenderConfig(raster_path="binned", early_exit=False,
+                               cull=True, visible_capacity=4)
+            cams = orbit_cameras(2, radius=5.0, width=32, height=32,
+                                 stacked=True)
+            fn = sharded_render_batch(mesh, ("gs",), ("cam",), ("px",),
+                                      config=cfg)
+            out = fn(tree, cams, jnp.zeros(3))
+            for i in range(2):
+                want = render(g, cams.camera(i), cfg.replace(cull=False))
+                err = float(jnp.abs(out[i] - want).max())
+                assert err < 1e-5, err
+            print("ok")
+            """,
+            devices=8,
+        )
