@@ -224,6 +224,16 @@ def render_throughput(tiny: bool = False) -> dict:
             f"compact={occ['compact_occupancy']:.1%}_"
             f"block={occ['block_occupancy']:.1%}",
         )
+        # Chunk-level occupancy: the streaming/early-exit granularity of
+        # the compacted kernels (full chunks save a whole fetch+blend step
+        # when skipped; only tile tails run partially live).
+        emit(
+            f"table2/{scene}_chunk_occupancy",
+            occ["chunk_full_fraction"],
+            f"full={occ['chunk_full_fraction']:.1%}_"
+            f"tail={occ['chunk_tail_occupancy']:.1%}_"
+            f"per_tile_mean={occ['chunks_per_tile_mean']:.1f}",
+        )
         emit(
             f"table2/{scene}_render_binned_max_err",
             max_err["binned"],

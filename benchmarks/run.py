@@ -1,10 +1,11 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR5.json`` — the machine-readable perf trajectory (render
-speedups, max-error, lane occupancy, batched-serving throughput/occupancy/
-latency, continuous-vs-microbatch scheduler sweep, culled-octree
-throughput + visible-fraction stats) — to the repo root.
+writes ``BENCH_PR6.json`` — the machine-readable perf trajectory (render
+speedups, max-error, lane + chunk occupancy, batched-serving throughput/
+occupancy/latency, continuous-vs-microbatch scheduler sweep, culled-octree
+throughput + visible-fraction stats, fused-vs-unfused raster throughput and
+error decomposition) — to the repo root.
 """
 
 from __future__ import annotations
@@ -14,13 +15,14 @@ import pathlib
 import sys
 import traceback
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR5.json"
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR6.json"
 
 
 def main() -> None:
     from benchmarks import (
         bench_culling,
         bench_fig5_parallelism,
+        bench_fused,
         bench_lm_steps,
         bench_serving,
         bench_table1_kernels,
@@ -36,6 +38,7 @@ def main() -> None:
         bench_lm_steps,
         bench_serving,
         bench_culling,
+        bench_fused,
     ):
         try:
             section = mod.main()

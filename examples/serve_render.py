@@ -60,7 +60,7 @@ def main() -> None:
     ap.add_argument("--image-size", type=int, default=96)
     ap.add_argument(
         "--raster-path",
-        choices=("dense", "binned", "pallas", "pallas_binned"),
+        choices=("dense", "binned", "pallas", "pallas_binned", "pallas_fused"),
         default="binned",
     )
     ap.add_argument("--tile-capacity", type=int, default=512)

@@ -79,7 +79,7 @@ def main() -> None:
     )
     ap.add_argument(
         "--raster-path",
-        choices=("dense", "binned", "pallas_binned"),
+        choices=("dense", "binned", "pallas_binned", "pallas_fused"),
         default="binned",
     )
     ap.add_argument(

@@ -36,6 +36,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import constants
 from repro.core.features import GaussianFeatures
 
 # Default list capacity; RenderConfig.tile_capacity overrides per call site.
@@ -249,8 +250,10 @@ def _tile_pixel_offsets(tile_size: int, dtype=jnp.float32) -> jax.Array:
 
 
 # A chunk scan stops once every pixel's transmittance is below this: any
-# remaining contribution is smaller than one u8 quantization step.
-EARLY_EXIT_EPS = 1.0 / 255.0
+# remaining contribution is smaller than one u8 quantization step. (Alias of
+# core.constants.EARLY_EXIT_EPS — the in-kernel early exit of the fused
+# Pallas path uses the same cutoff, so both early exits share one bound.)
+EARLY_EXIT_EPS = constants.EARLY_EXIT_EPS
 
 # Scan-chunk width of the binned blender's per-tile list traversal (the
 # early-exit granularity). Implementation detail, not a config knob: results
@@ -476,6 +479,17 @@ def lane_occupancy_stats(
     lists are capped at ``capacity`` (front-most win on overflow), the block
     lists are not — so under overflow the block kernel blends *more* live
     lanes than the compact one, and the comparison stays fair.
+
+    Beyond the per-tile-list aggregate, the ``chunk_*`` keys report
+    *per-chunk* occupancy — the block_g-wide chunk is the streaming unit of
+    the compacted kernels (one fetch, one blend step, and the granularity
+    at which the fused kernel's early exit can stop), so chunk-level
+    occupancy is what governs how much a skipped chunk actually saves.
+    Compaction makes every chunk except each tile's tail fully live:
+    ``chunk_full_fraction`` is the fraction of chunks with all ``block_g``
+    lanes live, ``chunk_tail_occupancy`` the mean live fraction of the
+    partial tail chunks, and ``chunks_per_tile_mean``/``_max`` the
+    early-exit headroom (how many steps a saturated tile can skip).
     """
     import numpy as np
 
@@ -488,6 +502,16 @@ def lane_occupancy_stats(
 
     nsteps = -(-count // block_g)  # per-tile compacted chunk count
     compact_lanes = int(nsteps.sum()) * block_g
+
+    # Per-chunk view of the same lists: every chunk is full except each
+    # tile's tail (count % block_g live lanes, when nonzero).
+    chunk_count = int(nsteps.sum())
+    full_chunks = int((count // block_g).sum())
+    tail = count % block_g
+    tail = tail[tail > 0]
+    chunk_tail_occupancy = (
+        float((tail / block_g).mean()) if tail.size else 1.0
+    )
 
     block_ids, num_blocks, _ = tile_block_lists(
         feats_sorted, height, width, tile_size=tile_size, block_g=block_g
@@ -507,6 +531,11 @@ def lane_occupancy_stats(
         "block_lanes": block_lanes,
         "block_occupancy": live_uncapped / max(block_lanes, 1),
         "overflow_rate": float(np.asarray(bins.overflowed).mean()),
+        "chunk_count": chunk_count,
+        "chunk_full_fraction": full_chunks / max(chunk_count, 1),
+        "chunk_tail_occupancy": chunk_tail_occupancy,
+        "chunks_per_tile_mean": float(nsteps.mean()),
+        "chunks_per_tile_max": int(nsteps.max()),
     }
 
 

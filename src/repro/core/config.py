@@ -14,9 +14,13 @@ Paths:
   ``pallas``.
 * ``raster_path``: how features become pixels — ``dense`` (the O(P*G)
   oracle blend), ``binned`` (tile-binned lists, O(P * G_visible_per_tile)),
-  ``pallas`` (block-list Pallas TPU kernel, forward-only), or
+  ``pallas`` (block-list Pallas TPU kernel, forward-only),
   ``pallas_binned`` (gather-to-compact per-tile Gaussian lists + custom
-  VJP — the fast *and* trainable Pallas path).
+  VJP — the fast *and* trainable Pallas path), or ``pallas_fused``
+  (feature computation folded *into* the blend kernel: per-tile raw
+  Gaussian records stream through projection/covariance/SH directly into
+  alpha blending with in-kernel early exit and banded SH — subsumes
+  ``feature_path``, which only the geometry pre-pass ignores).
 """
 
 from __future__ import annotations
@@ -24,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 
 FEATURE_PATHS = ("naive", "staged", "fused", "pallas")
-RASTER_PATHS = ("dense", "binned", "pallas", "pallas_binned")
+RASTER_PATHS = ("dense", "binned", "pallas", "pallas_binned", "pallas_fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +57,9 @@ class RenderConfig:
         its list stops once every pixel's transmittance saturates below
         1/255 or the remaining list entries are all sentinels. The sentinel
         skip is exact; the saturation skip can only drop contributions a
-        u8 pixel cannot represent (error < 1/255).
+        u8 pixel cannot represent (error < 1/255). The pallas_fused path
+        implements the saturation skip *in-kernel*: its chunk loop
+        terminates and the remaining chunks are never executed.
       cull: enable per-camera frustum culling when the render entry points
         are handed a ``repro.core.scene.SceneTree`` instead of raw
         ``GaussianParams`` — only the visible chunks' Gaussians are

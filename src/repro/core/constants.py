@@ -1,0 +1,35 @@
+"""Blending-contract constants — the single import site for the alpha floor.
+
+Every blend path (the dense jnp oracle, the chunked binned scan, the Pallas
+tile kernels, and the fused feature→blend kernel) must agree *exactly* on
+which Gaussians contribute and how much, or the exactness contracts between
+them break. The three numbers that define that agreement live here:
+
+* :data:`ALPHA_EPS` — the alpha floor. A Gaussian whose blended alpha at a
+  pixel is below one u8 quantization step is dropped; the feature pipeline
+  additionally mask-culls any Gaussian whose *opacity* is below it (alpha
+  <= opacity, so it could never pass the floor).
+* :data:`ALPHA_MAX` — the alpha cap (the reference implementation's 0.99
+  clamp, which keeps transmittance strictly positive so the front-to-back
+  product never hard-zeros).
+* :data:`EARLY_EXIT_EPS` — the transmittance-saturation cutoff: once every
+  pixel of a tile has transmittance below one u8 step, whatever remains
+  behind cannot move a u8 pixel, so chunked blenders stop early. Kept equal
+  to ALPHA_EPS by construction but named separately: the floor is part of
+  the *exact* blend definition, the saturation exit is an approximation
+  whose error bound is this constant.
+
+``features.ALPHA_EPS``, ``rasterize.ALPHA_MAX`` and
+``binning.EARLY_EXIT_EPS`` re-export these for backward compatibility.
+"""
+
+from __future__ import annotations
+
+# Blending alpha floor: one u8 quantization step.
+ALPHA_EPS = 1.0 / 255.0
+
+# Blending alpha cap (reference 3DGS clamps alpha at 0.99).
+ALPHA_MAX = 0.99
+
+# Transmittance-saturation early-exit threshold (see module docstring).
+EARLY_EXIT_EPS = 1.0 / 255.0

@@ -27,6 +27,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import constants
 from repro.core import sh as sh_lib
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianParams
@@ -35,12 +36,13 @@ from repro.core.gaussians import GaussianParams
 COV2D_BLUR = 0.3
 # Minimum camera-space depth for a Gaussian to be considered in-frustum.
 NEAR_PLANE = 0.2
-# Blending alpha floor (rasterize.ALPHA_EPS aliases this): a Gaussian whose
-# post-sigmoid opacity is below it can never pass the rasterizer's alpha
-# cutoff (alpha <= opacity), so the validity mask culls it outright. That
-# keeps sentinel/padding records (opacity ~1e-13) out of tile lists, where
-# they would otherwise crowd the fixed capacity without contributing.
-ALPHA_EPS = 1.0 / 255.0
+# Blending alpha floor (re-exported from core.constants, the single home of
+# the alpha-floor contract): a Gaussian whose post-sigmoid opacity is below
+# it can never pass the rasterizer's alpha cutoff (alpha <= opacity), so the
+# validity mask culls it outright. That keeps sentinel/padding records
+# (opacity ~1e-13) out of tile lists, where they would otherwise crowd the
+# fixed capacity without contributing.
+ALPHA_EPS = constants.ALPHA_EPS
 # Guard band on the projection-plane coordinates before the Jacobian (the
 # reference clamps x/z, y/z to 1.3 * tan(fov) to keep J finite off-screen).
 FOV_GUARD = 1.3

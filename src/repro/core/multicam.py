@@ -27,9 +27,11 @@ gather, same chunk width, same scan order within a tile), so
 predicates are exact (``early_exit=False``; with the saturation skip the
 difference is bounded by the usual <1/255 transmittance contract).
 
-The non-binned raster paths (``dense`` oracle, the two Pallas kernels) run
-camera-major through ``lax.map`` inside the same jit: still one compiled
-executable and one model residency, without vmapping ``pallas_call``.
+The non-binned raster paths (``dense`` oracle, the Pallas kernels —
+including the ``pallas_fused`` streaming pipeline, which goes straight from
+raw records to pixels inside ``render``) run camera-major through
+``lax.map`` inside the same jit: still one compiled executable and one
+model residency, without vmapping ``pallas_call``.
 """
 
 from __future__ import annotations
@@ -275,9 +277,10 @@ def render_batch(
 
     ``raster_path="binned"`` (the default) runs the pooled load-balanced
     batch pipeline above; the other raster paths (``dense``, ``pallas``,
-    ``pallas_binned``) reuse the per-camera implementation camera-major via
-    ``lax.map`` inside the same jit — one compiled executable and one model
-    residency either way, which is what the serving layer needs.
+    ``pallas_binned``, ``pallas_fused``) reuse the per-camera
+    implementation camera-major via ``lax.map`` inside the same jit — one
+    compiled executable and one model residency either way, which is what
+    the serving layer needs.
 
     ``g`` may be a :class:`~repro.core.scene.SceneTree`: with
     ``config.cull`` every camera (vmap lane or ``lax.map`` iteration) culls
@@ -323,9 +326,9 @@ def render_batch_masked(
     * ``binned`` path: an inactive camera's tile lists are masked to zero
       count / all-sentinel before the pooled count-sort, so the shared
       blender's sentinel skip ends those chunks at zero scan steps;
-    * ``lax.map`` paths (``dense``, ``pallas``, ``pallas_binned``): each
-      camera's render sits under a ``lax.cond`` on its slot bit, skipped
-      entirely for inactive slots.
+    * ``lax.map`` paths (``dense``, ``pallas``, ``pallas_binned``,
+      ``pallas_fused``): each camera's render sits under a ``lax.cond`` on
+      its slot bit, skipped entirely for inactive slots.
 
     Active slots match :func:`render_batch` exactly (the masking only adds
     empty tiles to the pooled schedule; per-tile math is untouched).

@@ -38,8 +38,9 @@ from repro.core.camera import Camera
 from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.features import GaussianFeatures
 from repro.core.gaussians import GaussianParams
+from repro.core.gaussians import pack_records
 from repro.core.render import FEATURE_PATHS
-from repro.core.scene import resolve_scene
+from repro.core.scene import resolve_scene, resolve_scene_banded
 
 
 def _pipeline_config(config: RenderConfig | None, **legacy) -> RenderConfig:
@@ -193,6 +194,103 @@ def _raster_device_rows(
     return out.reshape(my_rows, width, 3)
 
 
+def _fused_raster_device_rows(
+    local: GaussianParams,
+    band: jax.Array | None,
+    cam: Camera,
+    cfg: RenderConfig,
+    gaussian_axes: Sequence[str],
+    my_rows: int,
+    row0: jax.Array,
+    bg: jax.Array,
+) -> jax.Array:
+    """Fused-path stages for one device's pixel rows.
+
+    The fused raster path computes features *inside* the blend kernel, so
+    its stage 2 ships the raw 59-float records to the rasterizer (plus the
+    small geometry-only pre-pass features for the replicated depth sort)
+    instead of precomputed feature records — the gather is heavier, and in
+    exchange the FLOP-dominant SH + covariance arithmetic shards with the
+    pixel rows. Stage 3 tile-bins this device's rows only, compacts the raw
+    chunks along its own lists, and streams them through the fused Pallas
+    kernel with the *untouched* full-image camera and absolute pixel
+    coordinates — in-kernel feature math and blending are bitwise-identical
+    to the unsharded fused path wherever the tile lists agree.
+    """
+    from repro.kernels.fused_raster import ops as fused_ops
+    from repro.kernels.gaussian_features.ops import pack_camera
+    from repro.kernels.tile_rasterize.ops import (
+        _default_interpret,
+        _tile_order_pixels,
+    )
+
+    tile = cfg.tile_size
+
+    # Stage 1 (sharded): geometry-only pre-pass on this device's shard.
+    geo = jax.tree.map(
+        jax.lax.stop_gradient,
+        feat_lib.compute_features_staged(local, cam, sh_degree=0),
+    )
+    raw = pack_records(local)  # (n_shard, RAW_ROWS)
+
+    # Stage 2: all-gather the raw record stream + pre-pass geometry.
+    geo_g = jax.tree.map(
+        lambda x: _multi_axis_all_gather(x, gaussian_axes), geo
+    )
+    raw_g = _multi_axis_all_gather(raw, gaussian_axes)
+    band_g = (
+        None if band is None else _multi_axis_all_gather(band, gaussian_axes)
+    )
+
+    # Replicated depth sort (discrete; same permutation on every device).
+    key = jnp.where(geo_g.mask > 0.5, geo_g.depth, jnp.inf)
+    order = jnp.argsort(key)
+    geo_sorted = jax.tree.map(lambda x: x[order], geo_g)
+    raw_sorted = raw_g[order].T
+    band_sorted = None if band_g is None else band_g[order]
+
+    # Stage 3: bin this device's rows only (uv shifted so they start at
+    # y=0 — the tile-list build shards with the pixels, like the binned
+    # path), then blend through the fused kernel in absolute coordinates.
+    shift = jnp.stack([jnp.zeros((), bg.dtype), row0.astype(bg.dtype)])
+    local_geo = dataclasses.replace(
+        geo_sorted, uv=geo_sorted.uv - shift[None, :]
+    )
+    bins = bin_lib.bin_gaussians(
+        local_geo,
+        my_rows,
+        cam.width,
+        tile_size=tile,
+        capacity=cfg.tile_capacity,
+        tile_chunk=cfg.tile_chunk,
+    )
+    raw_compact, nsteps, chunk_band, steps = fused_ops.compact_fused_operands(
+        raw_sorted, bins, band_sorted=band_sorted, block_g=cfg.block_g
+    )
+    h_pad, w_pad = bins.tiles_y * tile, bins.tiles_x * tile
+    pix = _tile_order_pixels(h_pad, w_pad, tile) + shift[None, :]
+    bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
+    out = fused_ops._fused_blend(
+        raw_compact,
+        pack_camera(cam),
+        pix,
+        bg4,
+        nsteps,
+        chunk_band,
+        bins.num_tiles,
+        steps,
+        cfg.block_g,
+        cfg.sh_degree,
+        band is not None,
+        cfg.early_exit,
+        fused_ops.pick_tiles_per_step(bins.num_tiles),
+        _default_interpret(),
+    )
+    img = out[:, 0:3].reshape(bins.tiles_y, bins.tiles_x, tile, tile, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
+    return img[:my_rows, : cam.width]
+
+
 def sharded_render(
     mesh: Mesh,
     gaussian_axes: Sequence[str],
@@ -209,7 +307,10 @@ def sharded_render(
     with the pixels. ``"pallas_binned"`` additionally compacts each device's
     tile lists and blends them through the compact Pallas kernel (custom
     VJP, so the sharded path stays trainable); compaction, like binning,
-    runs per device on its own pixel rows. ``"dense"`` keeps the all-pairs
+    runs per device on its own pixel rows. ``"pallas_fused"`` gathers the
+    *raw* record stream instead of feature records and runs feature
+    computation inside each device's blend kernel (see
+    :func:`_fused_raster_device_rows`). ``"dense"`` keeps the all-pairs
     oracle blend.
     """
     cfg = _pipeline_config(config, sh_degree=sh_degree)
@@ -228,7 +329,7 @@ def sharded_render(
     # writes only its own pixel rows), so disabling the check is safe.
     extra = (
         {"check_rep": False}
-        if raster_path == "pallas_binned" or cfg.cull
+        if raster_path in ("pallas_binned", "pallas_fused") or cfg.cull
         else {}
     )
 
@@ -246,6 +347,14 @@ def sharded_render(
             # chunk slice and features only its local compact visible set;
             # ``visible_capacity`` is therefore per device here. Raw
             # clouds pass through untouched.
+            if raster_path == "pallas_fused":
+                local, band = resolve_scene_banded(g_shard, cam_rep, cfg)
+                my_rows = cam_rep.height // _axis_size(mesh, pixel_axes)
+                row0 = _axis_index(mesh, pixel_axes) * my_rows
+                return _fused_raster_device_rows(
+                    local, band, cam_rep, cfg, gaussian_axes,
+                    my_rows, row0, bg,
+                )
             local = resolve_scene(g_shard, cam_rep, cfg)
             feats = feature_fn(local, cam_rep, sh_degree=cfg.sh_degree)
             # Stage 2: gather the small feature records from all shards.
@@ -312,7 +421,7 @@ def sharded_render_batch(
 
     extra = (
         {"check_rep": False}
-        if raster_path == "pallas_binned" or cfg.cull
+        if raster_path in ("pallas_binned", "pallas_fused") or cfg.cull
         else {}
     )
 
@@ -332,6 +441,12 @@ def sharded_render_batch(
                 # Per-camera, per-device culling (see sharded_render): a
                 # SceneTree slice is compacted before features, so the
                 # all-gather below moves the culled width, not the scene.
+                if raster_path == "pallas_fused":
+                    local, band = resolve_scene_banded(g_shard, cam, cfg)
+                    return _fused_raster_device_rows(
+                        local, band, cam, cfg, gaussian_axes,
+                        my_rows, row0, bg,
+                    )
                 local = resolve_scene(g_shard, cam, cfg)
                 feats = feature_fn(local, cam, sh_degree=cfg.sh_degree)
                 gathered = jax.tree.map(

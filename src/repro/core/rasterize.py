@@ -30,9 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import RenderConfig
-from repro.core.features import ALPHA_EPS, GaussianFeatures
-
-ALPHA_MAX = 0.99
+from repro.core.constants import ALPHA_EPS, ALPHA_MAX  # noqa: F401 (re-export)
+from repro.core.features import GaussianFeatures
 
 
 def pixel_grid(height: int, width: int, dtype=jnp.float32) -> jax.Array:
@@ -149,6 +148,8 @@ def rasterize_features(
     and runs the block-list Pallas TPU kernel (forward-only);
     ``pallas_binned`` runs the gather-to-compact Pallas kernel — every lane
     holds a live Gaussian, and a custom VJP makes it trainable.
+    (``pallas_fused`` never reaches this function: it starts from raw
+    params, not features — ``render`` dispatches it earlier.)
     """
     if config.raster_path == "dense":
         return rasterize(
@@ -213,6 +214,14 @@ def rasterize_features(
             tile_size=config.tile_size,
             block_g=config.block_g,
             max_blocks=config.max_blocks_per_tile,
+        )
+
+    if config.raster_path == "pallas_fused":
+        raise ValueError(
+            "raster_path='pallas_fused' consumes raw GaussianParams, not "
+            "precomputed features — call render()/render_jit() (or "
+            "repro.kernels.fused_raster.fused_render) instead of "
+            "rasterize_features"
         )
 
     raise ValueError(f"unknown raster_path {config.raster_path!r}")

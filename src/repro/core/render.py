@@ -17,7 +17,7 @@ from repro.core import rasterize as rast_lib
 from repro.core.camera import Camera
 from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.gaussians import GaussianParams
-from repro.core.scene import SceneTree, resolve_scene
+from repro.core.scene import SceneTree, resolve_scene, resolve_scene_banded
 
 FEATURE_PATHS = {
     "naive": feat_lib.compute_features_naive,
@@ -84,6 +84,26 @@ def render(
             pixel_chunk=pixel_chunk,
         ),
     )
+    if cfg.raster_path == "pallas_fused":
+        # The fused path consumes raw params (+ the per-Gaussian SH LOD
+        # band, which its kernel turns into skipped basis FLOPs) — feature
+        # computation happens inside the blend kernel, so compute_features
+        # and cfg.feature_path are bypassed entirely.
+        from repro.kernels.fused_raster import ops as fused_ops
+
+        g, band = resolve_scene_banded(g, cam, cfg)
+        return fused_ops.fused_render(
+            g,
+            cam,
+            jax.numpy.asarray(cfg.background, jax.numpy.float32),
+            band=band,
+            tile_size=cfg.tile_size,
+            capacity=cfg.tile_capacity,
+            block_g=cfg.block_g,
+            tile_chunk=cfg.tile_chunk,
+            sh_degree=cfg.sh_degree,
+            early_exit=cfg.early_exit,
+        )
     g = resolve_scene(g, cam, cfg)
     feats = compute_features(g, cam, cfg)
     return rast_lib.rasterize_features(feats, cam.height, cam.width, cfg)

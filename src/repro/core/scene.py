@@ -370,11 +370,11 @@ def apply_sh_lod(sh: jax.Array, degree: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def resolve_scene(
+def resolve_scene_banded(
     scene: "SceneTree | GaussianParams",
     cam: Camera | None,
     config: RenderConfig,
-) -> GaussianParams:
+) -> tuple[GaussianParams, jnp.ndarray | None]:
     """The render stack's scene adapter: tree + camera -> compact params.
 
     * plain ``GaussianParams`` pass through untouched;
@@ -387,34 +387,51 @@ def resolve_scene(
       ``config.lod_thresholds`` is set — each chunk's SH coefficients are
       banded down by camera distance.
 
+    Returns ``(params, band)``: ``band`` is the per-Gaussian int32 SH LOD
+    degree when distance LOD applied, else None. The fused raster path
+    feeds ``band`` to its kernel, which then *skips* the above-band basis
+    FLOPs that the zeroed coefficients would have multiplied; every other
+    path can ignore it (``params.sh`` is already banded by
+    ``apply_sh_lod``, so rendering is unchanged either way).
+
     Pure static-shape jnp after tree construction, so it traces inside
     ``jit``/``vmap``/``shard_map``: per-camera culling lives *inside* the
     existing executables (one compile per capacity, any camera).
     """
     if not isinstance(scene, SceneTree):
-        return scene
+        return scene, None
     if not config.cull:
-        return scene.gaussians
+        return scene.gaussians, None
     if cam is None:
         raise ValueError("config.cull needs a camera to cull against")
     vis = cull_chunks(scene, cam, lod_thresholds=config.lod_thresholds)
     capacity = config.visible_capacity or scene.num_chunks
     chunk_idx, _ = select_visible_chunks(vis, capacity)
     g, _ = gather_visible(scene, chunk_idx)
-    if config.lod_thresholds is not None:
-        # Per-Gaussian degree: the owning chunk's band (sentinels -> 0),
-        # clamped by the global static degree knob.
-        deg_pad = jnp.concatenate(
-            [vis.sh_degree, jnp.zeros((1,), jnp.int32)]
-        )
-        deg = jnp.minimum(deg_pad[chunk_idx], jnp.int32(config.sh_degree))
-        deg = jnp.repeat(
-            deg,
-            scene.leaf_size,
-            total_repeat_length=deg.shape[0] * scene.leaf_size,
-        )
-        g = dataclasses.replace(g, sh=apply_sh_lod(g.sh, deg))
-    return g
+    if config.lod_thresholds is None:
+        return g, None
+    # Per-Gaussian degree: the owning chunk's band (sentinels -> 0),
+    # clamped by the global static degree knob.
+    deg_pad = jnp.concatenate(
+        [vis.sh_degree, jnp.zeros((1,), jnp.int32)]
+    )
+    deg = jnp.minimum(deg_pad[chunk_idx], jnp.int32(config.sh_degree))
+    deg = jnp.repeat(
+        deg,
+        scene.leaf_size,
+        total_repeat_length=deg.shape[0] * scene.leaf_size,
+    )
+    g = dataclasses.replace(g, sh=apply_sh_lod(g.sh, deg))
+    return g, deg
+
+
+def resolve_scene(
+    scene: "SceneTree | GaussianParams",
+    cam: Camera | None,
+    config: RenderConfig,
+) -> GaussianParams:
+    """:func:`resolve_scene_banded` for callers that only need the params."""
+    return resolve_scene_banded(scene, cam, config)[0]
 
 
 def visibility_stats(

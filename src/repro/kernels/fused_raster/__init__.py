@@ -1,0 +1,31 @@
+"""Fused streaming raster pipeline: raw params -> features -> blend in one
+Pallas kernel, with chunk streaming, in-kernel early exit, and banded SH."""
+
+from repro.kernels.fused_raster.kernel import (
+    DEFAULT_BLOCK_G,
+    RAW_ROWS,
+    build_fused_bwd_pallas_call,
+    build_fused_pallas_call,
+    lane_features,
+)
+from repro.kernels.fused_raster.ops import (
+    build_fused_operands,
+    compact_fused_operands,
+    fused_render,
+    pick_tiles_per_step,
+)
+from repro.kernels.fused_raster.ref import fused_reference, lane_feature_cloud
+
+__all__ = [
+    "DEFAULT_BLOCK_G",
+    "RAW_ROWS",
+    "build_fused_bwd_pallas_call",
+    "build_fused_pallas_call",
+    "lane_features",
+    "build_fused_operands",
+    "compact_fused_operands",
+    "fused_render",
+    "pick_tiles_per_step",
+    "fused_reference",
+    "lane_feature_cloud",
+]

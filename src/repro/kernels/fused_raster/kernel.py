@@ -1,0 +1,605 @@
+"""Fused feature->blend Pallas TPU kernel (streaming 3DGS rasterization).
+
+The unfused production path (``raster_path="pallas_binned"``) materializes a
+12-row feature record for *every* Gaussian — full-degree SH evaluated for the
+whole cloud — then streams compacted per-tile chunks of those features through
+the blend kernel. This kernel collapses the two stages: each screen tile
+streams its compacted **raw Gaussian parameters** (means, quats, log-scales,
+SH coefficients, opacity logit — the 59-float training record) through the
+full feature pipeline (projection, 2D covariance, SH color) *directly into*
+front-to-back alpha blending, chunk by chunk, inside one kernel:
+
+* **Chunk streaming.** Grid = (num_tiles,); tile ``t``'s whole compacted raw
+  block (RAW_ROWS x steps*block_g) lands in VMEM and an in-kernel loop
+  carries (transmittance, rgb accumulator) across its ``block_g``-wide
+  chunks. Pallas's automatic grid pipelining double-buffers the per-tile
+  block fetch — tile ``t+1``'s gather DMA overlaps tile ``t``'s
+  feature+blend compute — so the raw stream behaves like the paper's
+  AIE window interface: parameters flow through the math without a
+  full-cloud feature tensor ever hitting HBM.
+* **In-kernel early exit.** The chunk loop is a ``lax.while_loop`` whose
+  condition requires both a live chunk (``j < nsteps[t]``) and an
+  unsaturated tile (``max_pixel T >= EARLY_EXIT_EPS``). Once every lane of
+  the tile saturates below 1/255, the remaining chunks are *not executed* —
+  unlike a ``pl.when``-gated inner grid dimension, the trip itself
+  disappears, which is where the fused speedup comes from on scenes with
+  opaque front layers.
+* **Banded SH (LOD).** A scalar-prefetched per-(tile, chunk) SH band — the
+  max LOD degree of the chunk's live Gaussians, from the scene tree's
+  distance LOD — selects via ``lax.switch`` how many SH basis functions are
+  evaluated. Coefficients above a Gaussian's band are already zeroed by
+  ``scene.apply_sh_lod``, so skipping their basis terms is exact: the band
+  turns PR 5's zero-multiplies into a real basis-FLOP cut.
+* **Backward.** ``_fused_bwd_kernel`` replays the compacted lists with the
+  same saturation gate and emits per-lane gradients for the 12 *feature*
+  rows using the D-minus-running-front-sum trick (see
+  ``tile_rasterize._compact_bwd_kernel``, whose math it shares through
+  ``_lane_alpha``). The feature values it consumes are recomputed from the
+  raw records in plain jnp by the SAME ``lane_features`` below — elementwise
+  per lane, hence bitwise-identical to the in-kernel evaluation — and the
+  custom VJP in ``ops.py`` chains the kernel's feature cotangents through
+  ``jax.vjp`` of that recompute back to raw parameters and camera.
+
+``lane_features`` is the single source of truth for the raw->feature math:
+the kernel body, the backward replay, and the jnp reference (``ref.py``) all
+call it, so forward, backward and oracle agree exactly on alpha/gate
+evaluation (the per-stage formulas mirror the ``gaussian_features`` kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import features as feat_lib
+from repro.core import sh as sh_lib
+from repro.core.constants import ALPHA_EPS, ALPHA_MAX, EARLY_EXIT_EPS
+from repro.kernels.gaussian_features.kernel import CAM_VEC_LEN
+from repro.kernels.tile_rasterize.kernel import (
+    FEAT_ROWS,
+    TILE_PIX,
+    _lane_alpha,
+)
+
+# Raw training-record rows (matches core.gaussians.pack_records):
+# [0:3] position, [3:7] quaternion, [7:10] log scales, [10:58] SH (16*3),
+# [58] opacity logit.
+RAW_ROWS = 59
+DEFAULT_BLOCK_G = 128
+
+
+class _LaneGeometry(NamedTuple):
+    """Per-lane geometry intermediates, each shaped (L,)."""
+
+    u: jnp.ndarray
+    v: jnp.ndarray
+    con_a: jnp.ndarray
+    con_b: jnp.ndarray
+    con_c: jnp.ndarray
+    depth: jnp.ndarray
+    radius: jnp.ndarray
+    opacity: jnp.ndarray
+    mask: jnp.ndarray
+    dirx: jnp.ndarray
+    diry: jnp.ndarray
+    dirz: jnp.ndarray
+
+
+class _LaneCamera(NamedTuple):
+    """Duck-typed in-kernel stand-in for ``core.camera.Camera``.
+
+    Carries exactly the attributes the staged stage functions touch,
+    rebuilt from the packed camera operand (``pack_camera`` layout) —
+    width/height ride as f32 scalars (comparisons produce the same bits as
+    the Camera's static ints) and tan_fov/cam_pos reuse the packed values,
+    which ``pack_camera`` computed with the same Camera properties the
+    staged path reads.
+    """
+
+    r_cw: jnp.ndarray
+    t_cw: jnp.ndarray
+    fx: jnp.ndarray
+    fy: jnp.ndarray
+    cx: jnp.ndarray
+    cy: jnp.ndarray
+    tanx: jnp.ndarray
+    tany: jnp.ndarray
+    width: jnp.ndarray
+    height: jnp.ndarray
+    cam_pos: jnp.ndarray
+
+    def tan_fov(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return self.tanx, self.tany
+
+
+def _lane_camera(cam: jax.Array) -> _LaneCamera:
+    row = cam[0, :]
+    return _LaneCamera(
+        r_cw=row[0:9].reshape(3, 3),
+        t_cw=row[9:12],
+        fx=row[12],
+        fy=row[13],
+        cx=row[14],
+        cy=row[15],
+        tanx=row[16],
+        tany=row[17],
+        width=row[18],
+        height=row[19],
+        cam_pos=row[20:23],
+    )
+
+
+def lane_geometry(raw: jax.Array, cam: jax.Array) -> _LaneGeometry:
+    """Screen-space geometry of raw records — (RAW_ROWS, L) -> per-lane rows.
+
+    Calls the *actual* staged stage functions
+    (``core.features.stage_cov3d`` ... ``stage_ray_dir``) on AoS views of
+    the raw rows, with a ``_LaneCamera`` rebuilt from the packed camera
+    operand. Two exactness properties follow by construction:
+
+    * fused == unfused: the unfused ``pallas_binned`` production path (jnp
+      feature paths) computes features with these same primitives, so the
+      fused image differs only by blend-order reassociation (~1e-7), not
+      formula drift.
+    * forward == backward replay: every op is per-lane (the small matmuls
+      and einsums contract over fixed camera axes only), so evaluating a
+      (RAW_ROWS, block_g) kernel chunk or the full compacted tensor gives
+      bitwise-identical values — the backward's recomputed alphas/gates
+      walk the exact forward trajectory.
+
+    The AoS reshapes and tiny dots are fine under interpret mode (this
+    repo's deployment target); a real Mosaic TPU port would scalar-expand
+    them as ``gaussian_features.kernel`` does.
+    """
+    c = _lane_camera(cam)
+    positions = raw[0:3, :].T  # (L, 3)
+    quats = raw[3:7, :].T  # (L, 4)
+    scales = jnp.exp(raw[7:10, :].T)  # (L, 3) — GaussianParams.scales()
+
+    cov3d = feat_lib.stage_cov3d(quats, scales)
+    p_cam, uv, depth = feat_lib.stage_projection(positions, c)
+    jac = feat_lib.stage_jacobian(p_cam, c)
+    cov2d = feat_lib.stage_cov2d(cov3d, jac, c)
+    conic, radius = feat_lib.stage_cov2d_inv(cov2d)
+    rdir = feat_lib.stage_ray_dir(positions, c)
+
+    u, v = uv[:, 0], uv[:, 1]
+    opacity = jax.nn.sigmoid(raw[58, :])  # GaussianParams.opacities()
+    # features._finalize's mask, with f32 width/height (same compare bits).
+    onscreen = (
+        (u > -radius)
+        & (u < c.width + radius)
+        & (v > -radius)
+        & (v < c.height + radius)
+    )
+    mask = (
+        (depth > feat_lib.NEAR_PLANE)
+        & (radius > 0.0)
+        & onscreen
+        & (opacity >= ALPHA_EPS)
+    ).astype(u.dtype)
+
+    return _LaneGeometry(
+        u,
+        v,
+        conic[:, 0],
+        conic[:, 1],
+        conic[:, 2],
+        depth,
+        radius,
+        opacity,
+        mask,
+        rdir[:, 0],
+        rdir[:, 1],
+        rdir[:, 2],
+    )
+
+
+def lane_color(
+    sh: jax.Array,
+    dirx: jax.Array,
+    diry: jax.Array,
+    dirz: jax.Array,
+    degree: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """SH color of (48, L) coefficient rows at a *static* degree.
+
+    Defers to ``sh.eval_sh_color`` (the staged path's color stage) on the
+    AoS view, evaluating only the ``(degree+1)^2`` basis functions of that
+    degree — this is the function the banded kernel switches between, and
+    (at the full static degree) the backward replay evaluates. Exact under
+    banding because ``apply_sh_lod`` zeroes above-band coefficients: the
+    skipped terms would each add ``0 * basis``.
+    """
+    sh_aos = sh.T.reshape(-1, 16, 3)  # inverts pack_records' sh.reshape(n, 48)
+    dirs = jnp.stack([dirx, diry, dirz], axis=-1)
+    rgb = sh_lib.eval_sh_color(sh_aos, dirs, degree=degree)
+    return rgb[:, 0], rgb[:, 1], rgb[:, 2]
+
+
+def lane_features(
+    raw: jax.Array,
+    cam: jax.Array,
+    *,
+    sh_degree: int,
+    band: jax.Array | None = None,
+) -> jax.Array:
+    """(RAW_ROWS, L) raw records -> (FEAT_ROWS, L) packed features.
+
+    ``band`` (a traced int32 scalar) selects the evaluated SH degree via
+    ``lax.switch`` — only that branch's basis functions execute. ``None``
+    evaluates the full static ``sh_degree`` (the backward-replay mode).
+    """
+    geo = lane_geometry(raw, cam)
+    sh = raw[10:58, :]
+    if band is None:
+        col_r, col_g, col_b = lane_color(
+            sh, geo.dirx, geo.diry, geo.dirz, sh_degree
+        )
+    else:
+        branches = [
+            functools.partial(
+                lane_color, sh, geo.dirx, geo.diry, geo.dirz, d
+            )
+            for d in range(sh_degree + 1)
+        ]
+        col_r, col_g, col_b = jax.lax.switch(
+            jnp.clip(band, 0, sh_degree), branches
+        )
+    return jnp.stack(
+        [
+            geo.u,
+            geo.v,
+            geo.con_a,
+            geo.con_b,
+            geo.con_c,
+            col_r,
+            col_g,
+            col_b,
+            geo.depth,
+            geo.radius,
+            geo.opacity,
+            geo.mask,
+        ],
+        axis=0,
+    )
+
+
+def _blend_chunk(
+    pix: jax.Array,
+    feat: jax.Array,
+    t_pix: jax.Array,
+    acc: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Functional blend of one (FEAT_ROWS, BG) chunk (loop-carried state).
+
+    The in-kernel twin of ``tile_rasterize._blend_block``, with the
+    transmittance/accumulator carried as ``while_loop`` state instead of
+    VMEM scratch (the whole tile lives in one grid step here).
+    """
+    la = _lane_alpha(pix, feat)
+    one_minus = 1.0 - la.alpha
+    cum = jnp.cumprod(one_minus, axis=1)  # (TP, BG)
+    excl = jnp.concatenate([jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1)
+    w = la.alpha * excl * t_pix  # (TP, BG)
+    colors = feat[5:8, :]  # (3, BG)
+    rgb = jax.lax.dot_general(
+        w, colors, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TP, 3)
+    return t_pix * cum[:, -1:], acc + rgb
+
+
+def _fused_raster_kernel(
+    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
+    band_ref,  # (num_tiles, steps) int32 scalar-prefetch per-chunk SH band
+    pix_ref,  # (tiles_per_step * TILE_PIX, 2) pixel centers (tile order)
+    raw_ref,  # (RAW_ROWS, tiles_per_step * steps * block_g) raw records
+    cam_ref,  # (1, CAM_VEC_LEN) packed camera constants
+    bg_ref,  # (1, 4) background rgb + pad
+    out_ref,  # (tiles_per_step * TILE_PIX, 4) rgb + final transmittance
+    *,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+    tiles_per_step: int,
+):
+    g0 = pl.program_id(0)
+    raw_all = raw_ref[...]  # (RAW_ROWS, tiles_per_step * steps * block_g)
+    pix_all = pix_ref[...]
+    cam = cam_ref[...]
+    bg = bg_ref[0, 0:3]
+
+    def tile_body(tt, out_acc):
+        t = g0 * tiles_per_step + tt
+        n = nsteps_ref[t]
+        pix = jax.lax.dynamic_slice(
+            pix_all, (tt * TILE_PIX, 0), (TILE_PIX, 2)
+        )
+
+        def cond(carry):
+            j, t_pix, _ = carry
+            live = j < n
+            if early_exit:
+                live = live & (jnp.max(t_pix) >= EARLY_EXIT_EPS)
+            return live
+
+        def body(carry):
+            j, t_pix, acc = carry
+            raw = jax.lax.dynamic_slice(
+                raw_all, (0, (tt * steps + j) * block_g), (RAW_ROWS, block_g)
+            )
+            band = band_ref[t, j] if banded else None
+            feat = lane_features(raw, cam, sh_degree=sh_degree, band=band)
+            t_pix, acc = _blend_chunk(pix, feat, t_pix, acc)
+            return j + jnp.int32(1), t_pix, acc
+
+        t0 = jnp.ones((TILE_PIX, 1), jnp.float32)
+        acc0 = jnp.zeros((TILE_PIX, 3), jnp.float32)
+        _, t_pix, acc = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), t0, acc0)
+        )
+        tile_out = jnp.concatenate([acc + t_pix * bg, t_pix], axis=1)
+        return jax.lax.dynamic_update_slice(
+            out_acc, tile_out, (tt * TILE_PIX, 0)
+        )
+
+    out0 = jnp.zeros((tiles_per_step * TILE_PIX, 4), jnp.float32)
+    out = jax.lax.fori_loop(0, tiles_per_step, tile_body, out0)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def build_fused_pallas_call(
+    num_tiles: int,
+    steps: int,
+    *,
+    block_g: int = DEFAULT_BLOCK_G,
+    sh_degree: int = 3,
+    banded: bool = False,
+    early_exit: bool = True,
+    tiles_per_step: int = 1,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Fused raw->feature->blend call over the compacted raw-record layout.
+
+    Operands: scalar-prefetched per-tile chunk counts and per-chunk SH
+    bands, then (pix, raw_compact, camera, background). Each grid step owns
+    a *supertile* of ``tiles_per_step`` consecutive screen tiles: their
+    (RAW_ROWS, tiles_per_step * steps * block_g) compact raw block is one
+    BlockSpec block — the grid pipeline prefetches the next supertile's
+    block while this one streams its chunks through the in-kernel loops —
+    and an inner ``fori_loop`` walks the supertile's tiles, each with its
+    own early-exiting chunk ``while_loop``. The supertile width amortizes
+    per-grid-step overhead (dominant in interpret mode) without changing
+    per-tile semantics; ``num_tiles`` must divide evenly.
+    """
+    if num_tiles % tiles_per_step != 0:
+        raise ValueError(
+            f"tiles_per_step={tiles_per_step} must divide num_tiles={num_tiles}"
+        )
+    grid = (num_tiles // tiles_per_step,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (tiles_per_step * TILE_PIX, 2), lambda t, ns, bd: (t, 0)
+            ),
+            pl.BlockSpec(
+                (RAW_ROWS, tiles_per_step * steps * block_g),
+                lambda t, ns, bd: (0, t),
+            ),
+            pl.BlockSpec((1, CAM_VEC_LEN), lambda t, ns, bd: (0, 0)),
+            pl.BlockSpec((1, 4), lambda t, ns, bd: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (tiles_per_step * TILE_PIX, 4), lambda t, ns, bd: (t, 0)
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_raster_kernel,
+            steps=steps,
+            block_g=block_g,
+            sh_degree=sh_degree,
+            banded=banded,
+            early_exit=early_exit,
+            tiles_per_step=tiles_per_step,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype),
+        interpret=interpret,
+    )
+
+
+def _fused_bwd_kernel(
+    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
+    pix_ref,  # (tiles_per_step * TILE_PIX, 2)
+    feat_ref,  # (FEAT_ROWS, tiles_per_step * steps * block_g) features
+    out_ref,  # (tiles_per_step * TILE_PIX, 4) forward rgb + transmittance
+    gout_ref,  # (tiles_per_step * TILE_PIX, 4) output cotangent
+    dfeat_ref,  # (FEAT_ROWS, tiles_per_step * steps * block_g) gradients
+    *,
+    steps: int,
+    block_g: int,
+    early_exit: bool,
+    tiles_per_step: int,
+):
+    """Backward blend with forward-identical early-exit replay.
+
+    Same ``d_alpha_i = T_i (c_i . d_rgb) - (D - S_i)/(1 - a_i) - d_tout
+    T_N/(1 - a_i)`` front-sum trick as ``tile_rasterize._compact_bwd_kernel``
+    (the alpha model is shared via ``_lane_alpha``), restructured as the
+    forward's supertile fori_loop over in-kernel chunk loops, each chunk
+    loop's condition replaying the forward saturation gate: the replayed
+    transmittance evolves bitwise-identically to the forward pass (alphas
+    don't depend on color), so chunks the forward skipped contribute
+    exactly zero gradient — the VJP differentiates the function the kernel
+    actually computed, early exit included.
+    """
+    g0 = pl.program_id(0)
+    feat_all = feat_ref[...]
+    pix_all = pix_ref[...]
+    out_all = out_ref[...]
+    gout_all = gout_ref[...]
+
+    def tile_body(tt, dfeat_acc):
+        t = g0 * tiles_per_step + tt
+        n = nsteps_ref[t]
+        pix = jax.lax.dynamic_slice(
+            pix_all, (tt * TILE_PIX, 0), (TILE_PIX, 2)
+        )
+        out = jax.lax.dynamic_slice(
+            out_all, (tt * TILE_PIX, 0), (TILE_PIX, 4)
+        )
+        gout = jax.lax.dynamic_slice(
+            gout_all, (tt * TILE_PIX, 0), (TILE_PIX, 4)
+        )
+        drgb = gout[:, 0:3]  # (TP, 3)
+        dtout = gout[:, 3:4]  # (TP, 1)
+        d_total = jnp.sum(out[:, 0:3] * drgb, axis=1, keepdims=True)
+        t_n = out[:, 3:4]
+
+        def cond(carry):
+            j, t_pix, _, _ = carry
+            live = j < n
+            if early_exit:
+                live = live & (jnp.max(t_pix) >= EARLY_EXIT_EPS)
+            return live
+
+        def body(carry):
+            j, t_pix, cum_s, dfeat = carry
+            feat = jax.lax.dynamic_slice(
+                feat_all,
+                (0, (tt * steps + j) * block_g),
+                (FEAT_ROWS, block_g),
+            )
+            colors = feat[5:8, :]
+
+            la = _lane_alpha(pix, feat)
+            dx, dy = la.dx, la.dy
+            alpha = la.alpha
+
+            one_minus = 1.0 - alpha
+            cum = jnp.cumprod(one_minus, axis=1)
+            excl = jnp.concatenate(
+                [jnp.ones_like(cum[:, :1]), cum[:, :-1]], axis=1
+            )
+            t_i = t_pix * excl
+            w = alpha * t_i
+
+            s = jax.lax.dot_general(
+                drgb, colors, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (TP, BG)
+            cums = cum_s + jnp.cumsum(w * s, axis=1)
+            dalpha = (
+                t_i * s
+                - (d_total - cums) / one_minus
+                - dtout * t_n / one_minus
+            )
+
+            d_araw = jnp.where(
+                la.gate & (la.alpha_raw < ALPHA_MAX), dalpha, 0.0
+            )
+            dopac = d_araw * la.expw * la.mask
+            dmask = d_araw * la.opac * la.expw
+            dpower = d_araw * la.alpha_raw
+            dpraw = jnp.where(la.power_raw < 0.0, dpower, 0.0)
+            ddx = dpraw * -(la.con_a * dx + la.con_b * dy)
+            ddy = dpraw * -(la.con_c * dy + la.con_b * dx)
+
+            def rsum(x):
+                return jnp.sum(x, axis=0, keepdims=True)
+
+            zero = jnp.zeros_like(la.opac)
+            dblock = jnp.concatenate(
+                [
+                    rsum(-ddx),  # du (dx = px - u)
+                    rsum(-ddy),
+                    rsum(dpraw * (-0.5 * dx * dx)),  # dconic a
+                    rsum(dpraw * (-dx * dy)),
+                    rsum(dpraw * (-0.5 * dy * dy)),
+                    rsum(w * drgb[:, 0:1]),  # dcolor
+                    rsum(w * drgb[:, 1:2]),
+                    rsum(w * drgb[:, 2:3]),
+                    zero,  # depth: sort key only
+                    zero,  # radius: discrete gate
+                    rsum(dopac),
+                    rsum(dmask),
+                ],
+                axis=0,
+            )  # (FEAT_ROWS, BG)
+            dfeat = jax.lax.dynamic_update_slice(
+                dfeat, dblock, (0, (tt * steps + j) * block_g)
+            )
+            return j + jnp.int32(1), t_pix * cum[:, -1:], cums[:, -1:], dfeat
+
+        t0 = jnp.ones((TILE_PIX, 1), jnp.float32)
+        c0 = jnp.zeros((TILE_PIX, 1), jnp.float32)
+        _, _, _, dfeat_acc = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), t0, c0, dfeat_acc)
+        )
+        return dfeat_acc
+
+    df0 = jnp.zeros(
+        (FEAT_ROWS, tiles_per_step * steps * block_g), jnp.float32
+    )
+    dfeat = jax.lax.fori_loop(0, tiles_per_step, tile_body, df0)
+    dfeat_ref[...] = dfeat.astype(dfeat_ref.dtype)
+
+
+def build_fused_bwd_pallas_call(
+    num_tiles: int,
+    steps: int,
+    *,
+    block_g: int = DEFAULT_BLOCK_G,
+    early_exit: bool = True,
+    tiles_per_step: int = 1,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Backward over the compacted layout: per-tile feature-gradient blocks."""
+    if num_tiles % tiles_per_step != 0:
+        raise ValueError(
+            f"tiles_per_step={tiles_per_step} must divide num_tiles={num_tiles}"
+        )
+    grid = (num_tiles // tiles_per_step,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tiles_per_step * TILE_PIX, 2), lambda t, ns: (t, 0)),
+            pl.BlockSpec(
+                (FEAT_ROWS, tiles_per_step * steps * block_g),
+                lambda t, ns: (0, t),
+            ),
+            pl.BlockSpec((tiles_per_step * TILE_PIX, 4), lambda t, ns: (t, 0)),
+            pl.BlockSpec((tiles_per_step * TILE_PIX, 4), lambda t, ns: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (FEAT_ROWS, tiles_per_step * steps * block_g),
+            lambda t, ns: (0, t),
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_bwd_kernel,
+            steps=steps,
+            block_g=block_g,
+            early_exit=early_exit,
+            tiles_per_step=tiles_per_step,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (FEAT_ROWS, num_tiles * steps * block_g), dtype
+        ),
+        interpret=interpret,
+    )

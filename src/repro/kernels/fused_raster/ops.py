@@ -1,0 +1,342 @@
+"""Jitted public wrapper for the fused streaming raster pipeline.
+
+``fused_render`` goes straight from raw ``GaussianParams`` + camera to an
+image: a cheap geometry-only pre-pass (no SH — the FLOP-dominant stage stays
+in the kernel) supplies the depth sort and tile binning, the sorted *raw
+records* are gathered to compacted per-tile chunk lists, and the fused
+Pallas kernel streams them through feature computation into blending with
+in-kernel early exit.
+
+The pre-pass geometry intentionally reuses ``compute_features_staged``
+(degree 0 — SH degree only affects color, geometry is bitwise-identical to
+any degree): the resulting sort permutation and tile lists are exactly the
+ones the unfused ``pallas_binned`` path builds, so the two paths blend the
+same Gaussians in the same order and differ only by the in-kernel feature
+arithmetic (~1e-7) and, when enabled, the bounded early-exit drop.
+
+Differentiability: the raw-record gather is plain jnp (its VJP scatter-adds
+per-tile gradients back per Gaussian), the camera operand flows through the
+differentiable ``pack_camera``, and ``_fused_blend`` carries a
+``jax.custom_vjp`` — backward recomputes the compacted features from the
+residual raw records via ``kernel.lane_features`` under ``jax.vjp``
+(bitwise-identical to the forward's in-kernel evaluation), runs the
+backward Pallas kernel for per-lane feature cotangents (early-exit replay
+included), and chains them back to raw records + camera.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binning as bin_lib
+from repro.core import features as feat_lib
+from repro.core.camera import Camera
+from repro.core.gaussians import (
+    GAUSSIAN_RECORD_FLOATS,
+    GaussianParams,
+    pack_records,
+)
+from repro.kernels.fused_raster import kernel as k
+from repro.kernels.gaussian_features.ops import pack_camera
+from repro.kernels.tile_rasterize.ops import _default_interpret, _tile_order_pixels
+
+assert k.RAW_ROWS == GAUSSIAN_RECORD_FLOATS
+
+
+DEFAULT_TILES_PER_STEP = 16
+
+
+def pick_tiles_per_step(num_tiles: int, target: int = DEFAULT_TILES_PER_STEP) -> int:
+    """Largest divisor of ``num_tiles`` <= ``target`` (supertile width).
+
+    Wider supertiles amortize per-grid-step overhead (the dominant cost in
+    interpret mode) across more tiles; the divisor constraint keeps the
+    BlockSpec partition exact.
+    """
+    for d in range(min(target, num_tiles), 0, -1):
+        if num_tiles % d == 0:
+            return d
+    return 1
+
+
+def _sentinel_column(dtype) -> jax.Array:
+    """One raw record no blend path can see (the sentinel gather target).
+
+    Mirrors ``scene._append_invisible`` / ``pad_to_multiple``: identity-ish
+    quaternion, tiny scales, and opacity logit -30 (sigmoid ~1e-13, far
+    below the 1/255 alpha floor — the in-kernel mask zeroes the lane).
+    """
+    col = jnp.zeros((k.RAW_ROWS, 1), dtype)
+    col = col.at[3, 0].set(1.0)  # quat w
+    col = col.at[7:10, 0].set(-10.0)  # log scales
+    col = col.at[58, 0].set(-30.0)  # opacity logit
+    return col
+
+
+def compact_fused_operands(
+    raw_sorted: jax.Array,
+    bins,
+    *,
+    band_sorted: jax.Array | None = None,
+    block_g: int = k.DEFAULT_BLOCK_G,
+):
+    """Gather depth-sorted raw records into per-tile chunk lists.
+
+    Args:
+      raw_sorted: (RAW_ROWS, N) depth-sorted raw records (lane-major — a
+        ``pack_records(g)[order].T``). The gather is differentiable: its VJP
+        scatter-adds per-tile lane cotangents back onto the records.
+      bins: :class:`repro.core.binning.TileBins` built from the same depth
+        order (ascending sorted indices, sentinel ``N``).
+      band_sorted: optional (N,) int32 per-Gaussian SH LOD degree in the
+        same order.
+
+    Returns ``(raw_compact (RAW_ROWS, T * steps * block_g), nsteps (T,)
+    float32, chunk_band (T, steps) float32, steps)``. ``chunk_band`` is the
+    band-bucketed compaction: each chunk's SH band is the max LOD degree of
+    its live lanes (depth order is preserved — distance LOD is
+    depth-coherent, so chunks stay band-homogeneous without reordering).
+    """
+    num_g = raw_sorted.shape[1]
+    kk = bins.capacity
+    k_pad = max(block_g, -(-kk // block_g) * block_g)
+    idx = jnp.pad(
+        bins.indices, ((0, 0), (0, k_pad - kk)), constant_values=jnp.int32(num_g)
+    ).reshape(-1)
+
+    raw_pad = jnp.concatenate(
+        [raw_sorted, _sentinel_column(raw_sorted.dtype)], axis=1
+    )
+    raw_compact = raw_pad[:, idx]  # (RAW_ROWS, T * k_pad)
+
+    nsteps = (
+        (bins.count + jnp.int32(block_g - 1)) // jnp.int32(block_g)
+    ).astype(jnp.float32)
+    steps = k_pad // block_g
+
+    if band_sorted is None:
+        chunk_band = jnp.zeros((bins.num_tiles, steps), jnp.float32)
+    else:
+        band_pad = jnp.concatenate(
+            [band_sorted.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
+        )
+        lane_band = band_pad[idx].reshape(bins.num_tiles, steps, block_g)
+        chunk_band = jnp.max(lane_band, axis=-1).astype(jnp.float32)
+    return raw_compact, nsteps, chunk_band, steps
+
+
+def build_fused_operands(
+    g: GaussianParams,
+    cam: Camera,
+    *,
+    band: jax.Array | None = None,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+):
+    """Sort + bin on pre-pass geometry, compact the *raw records* per tile.
+
+    Returns ``(raw_compact (RAW_ROWS, T * steps * block_g), nsteps (T,)
+    float32, chunk_band (T, steps) float32, bins, steps)``; see
+    :func:`compact_fused_operands` for the compaction contract.
+    """
+    height, width = cam.height, cam.width
+
+    # Geometry-only pre-pass (discrete outputs: sort order + tile lists).
+    geo = jax.tree.map(
+        jax.lax.stop_gradient,
+        feat_lib.compute_features_staged(g, cam, sh_degree=0),
+    )
+    key = jnp.where(geo.mask > 0.5, geo.depth, jnp.inf)
+    order = jnp.argsort(key)
+    geo_sorted = jax.tree.map(lambda x: x[order], geo)
+    bins = bin_lib.bin_gaussians(
+        geo_sorted,
+        height,
+        width,
+        tile_size=tile_size,
+        capacity=capacity,
+        tile_chunk=tile_chunk,
+    )
+
+    # Depth-sorted raw records (differentiable gather), sentinel appended.
+    raw_sorted = pack_records(g)[order].T  # (RAW_ROWS, N)
+    band_sorted = None if band is None else band[order]
+    raw_compact, nsteps, chunk_band, steps = compact_fused_operands(
+        raw_sorted, bins, band_sorted=band_sorted, block_g=block_g
+    )
+    return raw_compact, nsteps, chunk_band, bins, steps
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12, 13))
+def _fused_blend(
+    raw_compact: jax.Array,  # (RAW_ROWS, T * steps * block_g)
+    cam_vec: jax.Array,  # (1, CAM_VEC_LEN)
+    pix: jax.Array,  # (T * TILE_PIX, 2) screen-tile-major pixel centers
+    bg4: jax.Array,  # (1, 4)
+    nsteps: jax.Array,  # (T,) float32 per-tile live-chunk counts
+    chunk_band: jax.Array,  # (T, steps) float32 per-chunk SH bands
+    num_tiles: int,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+    tiles_per_step: int,
+    interpret: bool,
+) -> jax.Array:
+    """Fused Pallas blend -> (T * TILE_PIX, 4) rgb + final transmittance.
+
+    ``nsteps``/``chunk_band`` travel as float32 so the custom VJP can hand
+    back ordinary zero cotangents (cast to int32 for the scalar prefetch).
+    """
+    call = k.build_fused_pallas_call(
+        num_tiles,
+        steps,
+        block_g=block_g,
+        sh_degree=sh_degree,
+        banded=banded,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+        interpret=interpret,
+        dtype=raw_compact.dtype,
+    )
+    return call(
+        nsteps.astype(jnp.int32),
+        chunk_band.astype(jnp.int32),
+        pix,
+        raw_compact,
+        cam_vec,
+        bg4,
+    )
+
+
+def _fused_blend_fwd(
+    raw_compact, cam_vec, pix, bg4, nsteps, chunk_band,
+    num_tiles, steps, block_g, sh_degree, banded, early_exit,
+    tiles_per_step, interpret,
+):
+    out = _fused_blend(
+        raw_compact, cam_vec, pix, bg4, nsteps, chunk_band,
+        num_tiles, steps, block_g, sh_degree, banded, early_exit,
+        tiles_per_step, interpret,
+    )
+    return out, (raw_compact, cam_vec, pix, nsteps, out)
+
+
+def _fused_blend_bwd(
+    num_tiles, steps, block_g, sh_degree, banded, early_exit,
+    tiles_per_step, interpret,
+    res, gout,
+):
+    raw_compact, cam_vec, pix, nsteps, out = res
+
+    # Replay the per-chunk feature computation at the full static degree
+    # (exact under banding: above-band coefficients are zero, and
+    # apply_sh_lod's own VJP masks their gradients upstream). Elementwise
+    # per lane, so alphas/gates match the forward kernel bitwise — the
+    # backward kernel's transmittance replay (and early-exit gate) walks
+    # the exact forward trajectory.
+    def feat_fn(raw, cam):
+        return k.lane_features(raw, cam, sh_degree=sh_degree)
+
+    feats, vjp_fn = jax.vjp(feat_fn, raw_compact, cam_vec)
+    call = k.build_fused_bwd_pallas_call(
+        num_tiles,
+        steps,
+        block_g=block_g,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+        interpret=interpret,
+        dtype=feats.dtype,
+    )
+    dfeat = call(nsteps.astype(jnp.int32), pix, feats, out, gout)
+    draw, dcam = vjp_fn(dfeat)
+    # Background cotangent: rgb += T_final * bg, so d_bg = sum_p T_N * d_rgb.
+    dbg = jnp.sum(out[:, 3:4] * gout[:, 0:3], axis=0)
+    dbg4 = jnp.concatenate([dbg, jnp.zeros((1,), dbg.dtype)])[None, :]
+    dband = jnp.zeros((num_tiles, steps), nsteps.dtype)
+    return draw, dcam, jnp.zeros_like(pix), dbg4, jnp.zeros_like(nsteps), dband
+
+
+_fused_blend.defvjp(_fused_blend_fwd, _fused_blend_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tile_size", "capacity", "block_g", "tile_chunk", "sh_degree",
+        "early_exit", "tiles_per_step", "interpret",
+    ),
+)
+def fused_render(
+    g: GaussianParams,
+    cam: Camera,
+    background: jax.Array,
+    *,
+    band: jax.Array | None = None,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+    sh_degree: int = 3,
+    early_exit: bool = True,
+    tiles_per_step: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused raw-params -> image render. Returns (H, W, 3). Differentiable.
+
+    Args:
+      g: Gaussian cloud (already scene-resolved; see ``render`` for the
+        SceneTree entry point).
+      cam: camera (height/width are static ints on the camera).
+      background: (3,) background color.
+      band: optional (N,) int32 per-Gaussian SH LOD degree (from
+        ``scene.resolve_scene_banded``). ``g.sh`` must already be banded by
+        ``apply_sh_lod`` — the kernel then skips the above-band basis
+        evaluation outright. None = full ``sh_degree`` everywhere.
+      capacity: per-tile list capacity (mirrors ``tile_capacity``).
+      early_exit: in-kernel transmittance-saturation exit (error bounded by
+        the 1/255 blending floor; exact on fully-opaque front layers).
+      tiles_per_step: supertile width (tiles per grid step); None picks the
+        largest divisor of the tile count <= DEFAULT_TILES_PER_STEP.
+    """
+    if tile_size * tile_size != k.TILE_PIX:
+        raise ValueError(
+            f"fused raster path requires tile_size^2 == {k.TILE_PIX}, "
+            f"got tile_size={tile_size}"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    bg = jnp.asarray(background, jnp.float32)
+    bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
+
+    raw_compact, nsteps, chunk_band, bins, steps = build_fused_operands(
+        g,
+        cam,
+        band=band,
+        tile_size=tile_size,
+        capacity=capacity,
+        block_g=block_g,
+        tile_chunk=tile_chunk,
+    )
+    cam_vec = pack_camera(cam)
+
+    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
+    h_pad, w_pad = tiles_y * tile_size, tiles_x * tile_size
+    pix = _tile_order_pixels(h_pad, w_pad, tile_size)
+    if tiles_per_step is None:
+        tiles_per_step = pick_tiles_per_step(bins.num_tiles)
+
+    out = _fused_blend(
+        raw_compact, cam_vec, pix, bg4, nsteps, chunk_band,
+        bins.num_tiles, steps, block_g, sh_degree,
+        band is not None, early_exit, tiles_per_step, interpret,
+    )
+    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
+    return img[: cam.height, : cam.width]

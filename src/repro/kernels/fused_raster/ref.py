@@ -1,0 +1,49 @@
+"""jnp references for the fused raster path.
+
+``lane_feature_cloud`` runs the kernel's shared raw->feature math
+(``kernel.lane_features``) over a whole cloud in plain jnp — by
+construction bitwise-identical to the in-kernel per-chunk evaluation, so
+``fused_reference`` (dense-oracle blending of those features) anchors the
+fused kernel tightly (~1e-6), while comparisons against the staged feature
+paths absorb only ordinary float reassociation noise.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.camera import Camera
+from repro.core.features import GaussianFeatures
+from repro.core.gaussians import GaussianParams, pack_records
+from repro.core.rasterize import rasterize
+from repro.kernels.fused_raster.kernel import lane_features
+from repro.kernels.gaussian_features.ops import pack_camera
+from repro.kernels.gaussian_features.ref import unpack_features
+
+
+def lane_feature_cloud(
+    g: GaussianParams, cam: Camera, *, sh_degree: int = 3
+) -> GaussianFeatures:
+    """Whole-cloud features via the fused kernel's lane math."""
+    raw = pack_records(g).T  # (RAW_ROWS, N)
+    packed = lane_features(raw, pack_camera(cam), sh_degree=sh_degree)
+    return unpack_features(packed)
+
+
+def fused_reference(
+    g: GaussianParams,
+    cam: Camera,
+    background,
+    *,
+    sh_degree: int = 3,
+    pixel_chunk: int | None = 4096,
+) -> jax.Array:
+    """Dense-oracle blend of the lane-math features — the fused path's anchor."""
+    feats = lane_feature_cloud(g, cam, sh_degree=sh_degree)
+    return rasterize(
+        feats,
+        cam.height,
+        cam.width,
+        background=background,
+        pixel_chunk=pixel_chunk,
+    )

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.features import ALPHA_EPS, COV2D_BLUR, FOV_GUARD, NEAR_PLANE
+from repro.core.constants import ALPHA_EPS
+from repro.core.features import COV2D_BLUR, FOV_GUARD, NEAR_PLANE
 from repro.core.sh import SH_C0, SH_C1, SH_C2, SH_C3
 
 # Camera constant-vector layout (packed into a (1, 32) f32 operand).

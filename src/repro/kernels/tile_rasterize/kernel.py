@@ -44,7 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.rasterize import ALPHA_EPS, ALPHA_MAX
+from repro.core.constants import ALPHA_EPS, ALPHA_MAX
 
 TILE_PIX = 256  # pixels per tile (flattened 16x16)
 DEFAULT_BLOCK_G = 128  # gaussians per block (lane dim)

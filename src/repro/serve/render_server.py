@@ -38,6 +38,11 @@ Orca-style iteration-level batching and vLLM's slot reuse do (PAPERS.md):
 measured baseline (``benchmarks/bench_serving.py`` sweeps the two against
 identical arrival schedules).
 
+The server is raster-path agnostic: its :class:`RenderConfig` travels into
+``render_batch_masked`` unchanged, so ``raster_path="pallas_fused"`` serves
+through the fused streaming kernel (requests render camera-major under the
+slot mask, and a free slot skips the fused chunk loops entirely).
+
 Cancellation: a request's future is *claimed* with
 ``set_running_or_notify_cancel()`` at admission — a future cancelled while
 queued silently gives its slot to the next request, and a claimed future can

@@ -1,0 +1,270 @@
+"""Fused streaming raster pipeline vs the unfused ladder (interpret mode).
+
+The fused kernel's contract: identical sort + tile lists to ``pallas_binned``
+(same pre-pass geometry), in-kernel feature math bitwise-equal to the staged
+jnp path, blending equal to ~1e-7 — so forward images must match the unfused
+paths to float rounding, the custom VJP must match jnp autodiff through the
+binned path, and early exit must be bitwise-exact once transmittance
+underflows to zero behind an opaque front layer.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RenderConfig,
+    build_scene_tree,
+    clustered_gaussians,
+    look_at_camera,
+    random_gaussians,
+)
+from repro.core.features import compute_features_staged
+from repro.core.multicam import (
+    render_batch_jit,
+    render_batch_masked_jit,
+    stack_cameras,
+)
+from repro.core.rasterize import rasterize_features
+from repro.core.render import render_jit
+from repro.core.scene import apply_sh_lod
+from repro.kernels.fused_raster import (
+    fused_render,
+    lane_feature_cloud,
+    pick_tiles_per_step,
+)
+
+BG = (0.1, 0.2, 0.3)
+
+
+def _cfg(path: str, **kw) -> RenderConfig:
+    kw.setdefault("early_exit", False)
+    return RenderConfig(raster_path=path, background=BG, **kw)
+
+
+def _cam(eye=(0, 1.0, -6.0), target=(0, 0, 0), width=64, height=64):
+    return look_at_camera(eye, target, width=width, height=height)
+
+
+class TestLaneFeatures:
+    def test_bitwise_equal_to_staged(self):
+        """In-kernel lane math calls the staged stage functions on AoS views
+        of the raw records — every feature field must match bitwise."""
+        g = random_gaussians(jax.random.PRNGKey(3), 512)
+        cam = _cam((1.0, 0.5, -4.0), (0.2, 0, 0), width=80, height=48)
+        got = lane_feature_cloud(g, cam)
+        want = compute_features_staged(g, cam, sh_degree=3)
+        for f in dataclasses.fields(want):
+            a = np.asarray(getattr(got, f.name))
+            b = np.asarray(getattr(want, f.name))
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+
+
+class TestFusedForward:
+    @pytest.mark.parametrize("kind", ["uniform", "clustered"])
+    def test_matches_unfused(self, kind):
+        if kind == "uniform":
+            g = random_gaussians(jax.random.PRNGKey(1), 3000, extent=1.5)
+        else:
+            g = clustered_gaussians(jax.random.PRNGKey(2), 3000)
+        cam = _cam()
+        # Capacity above N: no tile-list overflow, so the capped paths stay
+        # comparable to the uncapped dense oracle.
+        kw = dict(tile_capacity=3072)
+        binned = render_jit(g, cam, _cfg("pallas_binned", **kw))
+        dense = render_jit(g, cam, _cfg("dense", **kw))
+        fused = render_jit(g, cam, _cfg("pallas_fused", **kw))
+        assert float(jnp.max(jnp.abs(fused - binned))) <= 1e-6
+        assert float(jnp.max(jnp.abs(fused - dense))) <= 2e-6
+
+    def test_off_center_camera_non_square(self):
+        g = clustered_gaussians(jax.random.PRNGKey(5), 2000)
+        cam = _cam((2.0, -0.8, -4.5), (0.6, 0.3, 0.2), width=80, height=48)
+        binned = render_jit(g, cam, _cfg("pallas_binned"))
+        fused = render_jit(g, cam, _cfg("pallas_fused"))
+        assert float(jnp.max(jnp.abs(fused - binned))) <= 1e-6
+
+    def test_scene_tree_culled(self):
+        g = clustered_gaussians(
+            jax.random.PRNGKey(4), 8000, num_clusters=12, extent=2.0
+        )
+        tree = build_scene_tree(g, leaf_size=128)
+        cam = look_at_camera(
+            (0.8, 0.2, 0.0), (2.4, 0.2, 0.0), width=64, height=64
+        )
+        kw = dict(cull=True, visible_capacity=48)
+        binned = render_jit(tree, cam, _cfg("pallas_binned", **kw))
+        fused = render_jit(tree, cam, _cfg("pallas_fused", **kw))
+        assert float(jnp.max(jnp.abs(fused - binned))) <= 1e-6
+
+    def test_lod_banded(self):
+        """Banding is a FLOP cut, not an approximation: the banded fused
+        render must equal (a) the unfused path on the same LOD'd scene and
+        (b) the *unbanded* fused render of explicitly-zeroed coefficients."""
+        g = clustered_gaussians(
+            jax.random.PRNGKey(6), 8000, num_clusters=12, extent=2.0
+        )
+        tree = build_scene_tree(g, leaf_size=128)
+        cam = look_at_camera(
+            (0.8, 0.2, 0.0), (2.4, 0.2, 0.0), width=64, height=64
+        )
+        kw = dict(cull=True, visible_capacity=48, lod_thresholds=(0.2, 0.5))
+        binned = render_jit(tree, cam, _cfg("pallas_binned", **kw))
+        fused = render_jit(tree, cam, _cfg("pallas_fused", **kw))
+        assert float(jnp.max(jnp.abs(fused - binned))) <= 1e-6
+
+        # Direct check of the in-kernel band switch: zeroing coefficients
+        # above each Gaussian's band must reproduce the banded kernel
+        # exactly (the switch skips exactly the zeroed basis terms).
+        g2 = random_gaussians(jax.random.PRNGKey(7), 1024)
+        band = jax.random.randint(jax.random.PRNGKey(8), (1024,), 0, 4)
+        zeroed = dataclasses.replace(g2, sh=apply_sh_lod(g2.sh, band))
+        bg = jnp.asarray(BG, jnp.float32)
+        cam2 = _cam()
+        banded = fused_render(
+            zeroed, cam2, bg, band=band, early_exit=False
+        )
+        unbanded = fused_render(zeroed, cam2, bg, early_exit=False)
+        np.testing.assert_array_equal(
+            np.asarray(banded), np.asarray(unbanded)
+        )
+
+    def test_batched_and_masked(self):
+        g = clustered_gaussians(jax.random.PRNGKey(9), 2000)
+        cams = stack_cameras(
+            [
+                _cam(),
+                _cam((2.0, -0.8, -4.5), (0.6, 0.3, 0.2)),
+            ]
+        )
+        cfg_f = _cfg("pallas_fused")
+        cfg_b = _cfg("pallas_binned")
+        batch_f = render_batch_jit(g, cams, cfg_f)
+        batch_b = render_batch_jit(g, cams, cfg_b)
+        assert float(jnp.max(jnp.abs(batch_f - batch_b))) <= 1e-6
+
+        active = jnp.asarray([True, False])
+        masked = render_batch_masked_jit(g, cams, active, cfg_f)
+        np.testing.assert_array_equal(
+            np.asarray(masked[0]), np.asarray(batch_f[0])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(masked[1]),
+            np.broadcast_to(np.asarray(BG, np.float32), masked[1].shape),
+        )
+
+
+class TestFusedVJP:
+    def _loss_pair(self):
+        g = clustered_gaussians(jax.random.PRNGKey(11), 600)
+        cam = _cam(width=32, height=32)
+        w = jax.random.normal(jax.random.PRNGKey(12), (32, 32, 3))
+        cfg_ref = _cfg("binned", feature_path="staged")
+        cfg_fused = _cfg("pallas_fused")
+
+        def loss(cfg):
+            return lambda gg: jnp.sum(render_jit(gg, cam, cfg) * w)
+
+        return g, loss(cfg_ref), loss(cfg_fused)
+
+    def test_grads_match_jnp_binned(self):
+        g, loss_ref, loss_fused = self._loss_pair()
+        g_ref = jax.grad(loss_ref)(g)
+        g_fused = jax.grad(loss_fused)(g)
+        for f in dataclasses.fields(g):
+            a = np.asarray(getattr(g_fused, f.name))
+            b = np.asarray(getattr(g_ref, f.name))
+            # Scale-relative: elementwise rtol is meaningless on the many
+            # near-zero entries of a scatter-added gradient field.
+            np.testing.assert_allclose(
+                a,
+                b,
+                rtol=1e-4,
+                atol=1e-5 * max(float(np.abs(b).max()), 1e-6),
+                err_msg=f.name,
+            )
+
+    def test_early_exit_grads_bitwise(self):
+        """The backward kernel replays the forward's early-exit gate, so it
+        differentiates the actually-computed function: grads with and
+        without the exit are identical when the images are."""
+        g = clustered_gaussians(jax.random.PRNGKey(13), 600)
+        cam = _cam(width=32, height=32)
+        w = jax.random.normal(jax.random.PRNGKey(14), (32, 32, 3))
+        bg = jnp.asarray(BG, jnp.float32)
+
+        def loss(ee):
+            return lambda gg: jnp.sum(
+                fused_render(gg, cam, bg, early_exit=ee) * w
+            )
+
+        g_ee = jax.grad(loss(True))(g)
+        g_no = jax.grad(loss(False))(g)
+        for f in dataclasses.fields(g):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(g_ee, f.name)),
+                np.asarray(getattr(g_no, f.name)),
+                err_msg=f.name,
+            )
+
+
+class TestEarlyExit:
+    def _opaque_front_scene(self):
+        """A wall of near-opaque Gaussians in front of a random cloud: once
+        a pixel's first chunks blend the wall, float32 transmittance
+        underflows to exactly 0 and every later chunk contributes exactly
+        nothing — the saturation skip becomes bitwise-exact."""
+        back = clustered_gaussians(jax.random.PRNGKey(21), 1500)
+        # 32 screen-filling near-opaque Gaussians (sigma = 2 world units at
+        # depth ~3.5 -> the 3-sigma box covers the whole 64x64 image and
+        # alpha is the 0.99 cap at every pixel): after the first chunk,
+        # T = 0.01^32 underflows to exactly 0.0 in float32.
+        n_front = 32
+        key = jax.random.PRNGKey(22)
+        front = random_gaussians(key, n_front, extent=0.05, base_scale=2.0)
+        front = dataclasses.replace(
+            front,
+            positions=front.positions.at[:, 2].add(-2.5),
+            log_scales=jnp.full((n_front, 3), jnp.log(2.0)),
+            opacity_logit=jnp.full((n_front,), 30.0),
+        )
+        return jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), front, back
+        )
+
+    def test_opaque_front_bitwise(self):
+        g = self._opaque_front_scene()
+        cam = _cam()
+        bg = jnp.asarray(BG, jnp.float32)
+        ee = fused_render(g, cam, bg, early_exit=True)
+        no = fused_render(g, cam, bg, early_exit=False)
+        np.testing.assert_array_equal(np.asarray(ee), np.asarray(no))
+
+    def test_general_scene_bounded(self):
+        g = clustered_gaussians(jax.random.PRNGKey(23), 3000)
+        cam = _cam()
+        bg = jnp.asarray(BG, jnp.float32)
+        ee = fused_render(g, cam, bg, early_exit=True)
+        no = fused_render(g, cam, bg, early_exit=False)
+        assert float(jnp.max(jnp.abs(ee - no))) <= 1.0 / 255.0
+
+
+class TestPlumbing:
+    def test_rasterize_features_rejects_fused(self):
+        g = random_gaussians(jax.random.PRNGKey(0), 64)
+        cam = _cam(width=32, height=32)
+        feats = compute_features_staged(g, cam)
+        with pytest.raises(ValueError, match="pallas_fused"):
+            rasterize_features(feats, 32, 32, _cfg("pallas_fused"))
+
+    @pytest.mark.parametrize(
+        "num_tiles,target,want",
+        [(16, 16, 16), (20, 16, 10), (7, 16, 7), (30, 16, 15), (1, 16, 1)],
+    )
+    def test_pick_tiles_per_step(self, num_tiles, target, want):
+        got = pick_tiles_per_step(num_tiles, target)
+        assert got == want
+        assert num_tiles % got == 0 and got <= max(target, 1)
