@@ -1,0 +1,224 @@
+"""Quantized resident scenes: bytes, throughput, and fidelity vs f32.
+
+The fused raster path can stream *compressed* chunks (``core.quant``: f32
+positions/quats, fp16 SH DC, int8 per-chunk/per-band SH bands 1-3, int8
+opacity/log-scales) and decode to f32 lanes in registers
+(``kernels.fused_raster``). This benchmark measures the whole trade on the
+serving shape (cameras inside the cloud, frustum-culled SceneTree):
+
+* resident bytes of the f32 vs quantized tree (``SceneTree.memory_stats``)
+  — the multi-scene-serving constraint and the sharded all-gather payload;
+* sequential req/s of the fused path over the f32 tree vs the quantized
+  tree (decode-in-kernel must not give back the fused win);
+* PSNR of the quantized render vs the f32 fused render, decomposed by
+  field group (hybrid clouds: only-SH-quantized, only-geometry-quantized,
+  DC-at-fp16) so a fidelity regression names its culprit.
+
+``--tiny`` is the CI smoke: asserts >= 3x SH-bytes reduction and PSNR >=
+40 dB vs the f32 fused render on a small clustered scene.
+
+    PYTHONPATH=src python -m benchmarks.bench_compress [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_fused import (
+    CAMERAS,
+    IMAGE_SIZE,
+    ITERS,
+    LEAF_SIZE,
+    TINY_IMAGE_SIZE,
+    TINY_LEAF,
+    TINY_N,
+    _seq_req_s,
+    inside_cameras,
+    make_scene,
+)
+from benchmarks.common import emit
+from repro.core import (
+    RenderConfig,
+    build_scene_tree,
+    dequantize_gaussians,
+    quantize_gaussians,
+    visibility_stats,
+)
+from repro.core.quant import F32_RECORD_BYTES, QUANT_RECORD_BYTES
+from repro.core.render import render_jit
+
+SWEEP = (
+    ("uniform", (100_000,)),
+    ("clustered", (100_000, 1_000_000)),
+)
+# Hybrid-cloud PSNR decomposition is O(extra clouds in memory); cap it.
+DECOMPOSE_MAX_N = 200_000
+
+
+def _psnr(a, b) -> float:
+    mse = float(jnp.mean((jnp.asarray(a) - jnp.asarray(b)) ** 2))
+    return float("inf") if mse == 0.0 else -10.0 * math.log10(mse)
+
+
+def _min_psnr(a_imgs, b_imgs) -> float:
+    return min(_psnr(a, b) for a, b in zip(a_imgs, b_imgs))
+
+
+def psnr_decomposition(g, cams, cfg, leaf_size: int) -> dict:
+    """PSNR vs the f32 render with one field group quantized at a time.
+
+    The hybrids splice dequantized fields into the original cloud, so each
+    number isolates one storage decision: SH bands at int8, geometry
+    (log-scales + opacity) at int8, DC at fp16.
+    """
+    deq = dequantize_gaussians(quantize_gaussians(g, leaf_size))
+    hybrids = {
+        "sh_bands_int8": dataclasses.replace(
+            g, sh=g.sh.at[:, 1:, :].set(deq.sh[:, 1:, :])
+        ),
+        "geometry_int8": dataclasses.replace(
+            g, log_scales=deq.log_scales, opacity_logit=deq.opacity_logit
+        ),
+        "dc_fp16": dataclasses.replace(
+            g, sh=g.sh.at[:, 0, :].set(deq.sh[:, 0, :])
+        ),
+        "all_quantized": deq,
+    }
+    f32_imgs = [render_jit(g, c, cfg) for c in cams]
+    out = {}
+    for name, hg in hybrids.items():
+        out[name] = _min_psnr(
+            [render_jit(hg, c, cfg) for c in cams], f32_imgs
+        )
+    return out
+
+
+def bench_scene(
+    kind: str,
+    n: int,
+    *,
+    image_size: int,
+    leaf_size: int,
+    iters: int,
+    decompose: bool | None = None,
+) -> dict:
+    g = make_scene(kind, n)
+    tree_f = build_scene_tree(g, leaf_size=leaf_size)
+    tree_q = build_scene_tree(g, leaf_size=leaf_size, compress="int8")
+    cams = inside_cameras(CAMERAS, image_size)
+
+    base = RenderConfig(raster_path="pallas_fused", cull=True)
+    stats = [visibility_stats(tree_f, c, base) for c in cams]
+    capacity = max(s["num_visible"] for s in stats)
+    cfg = base.replace(visible_capacity=capacity)
+
+    mem_f = tree_f.memory_stats()
+    mem_q = tree_q.memory_stats()
+    byte_ratio = mem_q["total_bytes"] / mem_f["total_bytes"]
+    sh_reduction = mem_f["sh_bytes"] / mem_q["sh_bytes"]
+
+    f32_req_s, f32_imgs = _seq_req_s(tree_f, cams, cfg, iters)
+    q_req_s, q_imgs = _seq_req_s(tree_q, cams, cfg, iters)
+    rel = q_req_s / f32_req_s
+    psnr = _min_psnr(q_imgs, f32_imgs)
+
+    tag = f"compress/{kind}_{n}"
+    emit(
+        f"{tag}_resident_bytes",
+        mem_q["total_bytes"] / 1e6,
+        f"{byte_ratio:.3f}x_f32_sh{sh_reduction:.2f}x",
+    )
+    emit(f"{tag}_f32_req_s", 1e6 / f32_req_s, f"{f32_req_s:.2f}req_s")
+    emit(
+        f"{tag}_quant_req_s",
+        1e6 / q_req_s,
+        f"{rel:.2f}x_f32_psnr{psnr:.1f}dB",
+    )
+
+    entry = {
+        "gaussians": n,
+        "image_size": image_size,
+        "leaf_size": leaf_size,
+        "visible_capacity_chunks": capacity,
+        "visible_fraction_mean": float(
+            np.mean([s["visible_fraction"] for s in stats])
+        ),
+        "f32_bytes": mem_f["total_bytes"],
+        "quant_bytes": mem_q["total_bytes"],
+        "byte_ratio": byte_ratio,
+        "sh_bytes_reduction": sh_reduction,
+        # Sharded wire cost shrinks with the same record ratio (the
+        # all-gather ships the quantized pytree, decoded per device).
+        "record_bytes": {
+            "f32": F32_RECORD_BYTES,
+            "quant": QUANT_RECORD_BYTES,
+        },
+        "f32_req_s": f32_req_s,
+        "quant_req_s": q_req_s,
+        "quant_rel_req_s": rel,
+        "psnr_db": psnr,
+    }
+    if decompose is None:
+        decompose = n <= DECOMPOSE_MAX_N
+    if decompose:
+        entry["psnr_decomposition_db"] = psnr_decomposition(
+            g, cams, cfg.replace(cull=False), leaf_size
+        )
+        for name, v in entry["psnr_decomposition_db"].items():
+            emit(f"{tag}_psnr_{name}", v, f"{v:.1f}dB")
+    return entry
+
+
+def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="CI smoke: small clustered scene, asserts >= 3x SH-bytes "
+        "reduction and PSNR >= 40 dB vs the f32 fused render",
+    )
+    args = ap.parse_args(list(argv))
+
+    if args.tiny:
+        entry = bench_scene(
+            "clustered",
+            TINY_N,
+            image_size=TINY_IMAGE_SIZE,
+            leaf_size=TINY_LEAF,
+            iters=1,
+            decompose=True,
+        )
+        assert entry["sh_bytes_reduction"] >= 3.0, entry
+        assert entry["byte_ratio"] <= 0.45, entry
+        assert entry["psnr_db"] >= 40.0, entry
+        print(
+            f"# tiny smoke OK: {entry['byte_ratio']:.3f}x resident bytes, "
+            f"SH {entry['sh_bytes_reduction']:.2f}x smaller, "
+            f"PSNR {entry['psnr_db']:.1f} dB, "
+            f"quant {entry['quant_rel_req_s']:.2f}x f32 req/s"
+        )
+        return {"clustered": {str(TINY_N): entry}}
+
+    metrics: dict = {}
+    for kind, sizes in SWEEP:
+        metrics[kind] = {}
+        for n in sizes:
+            metrics[kind][str(n)] = bench_scene(
+                kind,
+                n,
+                image_size=IMAGE_SIZE,
+                leaf_size=LEAF_SIZE,
+                iters=ITERS,
+            )
+    return metrics
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

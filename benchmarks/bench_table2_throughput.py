@@ -248,6 +248,23 @@ def render_throughput(tiny: bool = False) -> dict:
             "lane_occupancy": occ,
         }
 
+    # Resident-bytes accounting (quantized resident scenes, core.quant):
+    # the clustered cloud as a SceneTree at f32 vs int8 storage.
+    from repro.core import build_scene_tree
+
+    g_clu = dict(scenes)["clustered"]
+    memory = {
+        mode: build_scene_tree(g_clu, leaf_size=256, compress=mode).memory_stats()
+        for mode in ("none", "int8")
+    }
+    byte_ratio = memory["int8"]["total_bytes"] / memory["none"]["total_bytes"]
+    emit(
+        "table2/resident_bytes_int8_vs_f32",
+        byte_ratio,
+        f"{memory['int8']['total_bytes'] / 1e6:.1f}MB_{byte_ratio:.3f}x",
+    )
+    metrics["memory"] = memory
+
     if tiny:
         uni = metrics["scenes"]["uniform"]
         assert uni["speedup_vs_dense"]["binned"] >= 1.0, (

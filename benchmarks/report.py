@@ -1,6 +1,15 @@
-"""Generate EXPERIMENTS.md dry-run / roofline tables from results/dryrun/*.json.
+"""Markdown report generators.
 
-Usage: PYTHONPATH=src:. python -m benchmarks.report [--results results/dryrun]
+* ``trajectory_table``: collate the checked-in ``BENCH_PR*.json`` files
+  (one per PR, written by ``benchmarks/run.py``) into a single
+  perf-trajectory table — each row is one PR's headline metrics, so the
+  growth of the raster stack (binned -> compact -> culled -> fused ->
+  quantized) reads as one table. ``run.py`` writes it to
+  ``BENCH_TRAJECTORY.md`` after every full benchmark run.
+* dry-run / roofline tables from ``results/dryrun/*.json`` (the LM-substrate
+  experiments in EXPERIMENTS.md).
+
+Usage: PYTHONPATH=src:. python -m benchmarks.report [--section trajectory]
 Prints markdown to stdout.
 """
 
@@ -10,6 +19,7 @@ import argparse
 import glob
 import json
 import os
+import re
 
 ARCH_ORDER = [
     "qwen2-7b",
@@ -24,6 +34,81 @@ ARCH_ORDER = [
     "internvl2-2b",
 ]
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _dig(d: dict, *keys, default=None):
+    for k in keys:
+        if not isinstance(d, dict) or k not in d:
+            return default
+        d = d[k]
+    return d
+
+
+def _largest_scene(section: dict | None) -> dict | None:
+    """Deepest entry of a ``{kind: {str(n): entry}}`` sweep: the clustered
+    (or only) kind at its largest scene size."""
+    if not isinstance(section, dict) or not section:
+        return None
+    kind = "clustered" if "clustered" in section else sorted(section)[0]
+    sizes = section.get(kind)
+    if not isinstance(sizes, dict) or not sizes:
+        return None
+    return sizes[max(sizes, key=int)]
+
+
+def _fmt(x, spec: str = ".2f", suffix: str = "") -> str:
+    if x is None:
+        return "—"
+    return f"{x:{spec}}{suffix}"
+
+
+def trajectory_table(repo_root: str | os.PathLike) -> str:
+    """One perf-trajectory markdown table over every ``BENCH_PR*.json``.
+
+    Columns are the headline metric each PR introduced; earlier PRs show
+    "—" for sections that did not exist yet. Robust to missing files and
+    missing keys — a reshuffled schema degrades to a dash, never a crash.
+    """
+    rows = []
+    paths = sorted(
+        glob.glob(os.path.join(os.fspath(repo_root), "BENCH_PR*.json")),
+        key=lambda p: int(re.search(r"BENCH_PR(\d+)", p).group(1)),
+    )
+    for path in paths:
+        pr = int(re.search(r"BENCH_PR(\d+)", path).group(1))
+        with open(path) as f:
+            d = json.load(f)
+        clu = _dig(d, "bench_table2_throughput", "render", "scenes", "clustered")
+        fused = _largest_scene(d.get("bench_fused"))
+        culled = _largest_scene(d.get("bench_culling"))
+        comp = _largest_scene(d.get("bench_compress"))
+        rows.append(
+            "| PR {pr} | {binned} | {compact} | {serve} | {cull} | {fused} "
+            "| {bytes} | {psnr} |".format(
+                pr=pr,
+                binned=_fmt(_dig(clu, "speedup_vs_dense", "binned"), suffix="x"),
+                compact=_fmt(
+                    _dig(clu, "compact_vs_block_speedup"), suffix="x"
+                ),
+                serve=_fmt(_dig(d, "bench_serving", "server", "req_s")),
+                cull=_fmt(
+                    _dig(culled, "culled_speedup"),
+                    suffix=f"x@{_dig(culled, 'gaussians', default=0) // 1000}k",
+                ) if culled else "—",
+                fused=_fmt(_dig(fused, "fused_speedup"), suffix="x"),
+                bytes=_fmt(_dig(comp, "byte_ratio"), ".3f", "x f32")
+                if comp else "—",
+                psnr=_fmt(_dig(comp, "psnr_db"), ".1f", " dB")
+                if comp else "—",
+            )
+        )
+    header = (
+        "### Perf trajectory (one row per PR's BENCH_PR*.json)\n\n"
+        "| PR | binned vs dense | compact vs block | serve req/s "
+        "| culled speedup | fused speedup | quant bytes | quant PSNR |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    return header + "\n".join(rows) + "\n"
 
 
 def load(results_dir: str) -> dict:
@@ -122,8 +207,20 @@ def dryrun_table(cells: dict) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="results/dryrun")
-    ap.add_argument("--section", default="all", choices=["all", "roofline", "dryrun"])
+    ap.add_argument(
+        "--section",
+        default="all",
+        choices=["all", "roofline", "dryrun", "trajectory"],
+    )
+    ap.add_argument(
+        "--repo",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        help="repo root holding the BENCH_PR*.json files (trajectory)",
+    )
     args = ap.parse_args()
+    if args.section == "trajectory":
+        print(trajectory_table(args.repo))
+        return
     cells = load(args.results)
     if args.section in ("all", "dryrun"):
         print("### Dry-run status (both meshes)\n")

@@ -1,11 +1,13 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR6.json`` — the machine-readable perf trajectory (render
+writes ``BENCH_PR7.json`` — the machine-readable perf trajectory (render
 speedups, max-error, lane + chunk occupancy, batched-serving throughput/
 occupancy/latency, continuous-vs-microbatch scheduler sweep, culled-octree
 throughput + visible-fraction stats, fused-vs-unfused raster throughput and
-error decomposition) — to the repo root.
+error decomposition, quantized-resident bytes/req-s/PSNR) — to the repo
+root, then collates every checked-in ``BENCH_PR*.json`` into the
+``BENCH_TRAJECTORY.md`` perf-trajectory table (``benchmarks.report``).
 """
 
 from __future__ import annotations
@@ -15,11 +17,13 @@ import pathlib
 import sys
 import traceback
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_PR6.json"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_PR7.json"
 
 
 def main() -> None:
     from benchmarks import (
+        bench_compress,
         bench_culling,
         bench_fig5_parallelism,
         bench_fused,
@@ -27,6 +31,7 @@ def main() -> None:
         bench_serving,
         bench_table1_kernels,
         bench_table2_throughput,
+        report,
     )
 
     print("name,us_per_call,derived")
@@ -39,6 +44,7 @@ def main() -> None:
         bench_serving,
         bench_culling,
         bench_fused,
+        bench_compress,
     ):
         try:
             section = mod.main()
@@ -51,6 +57,10 @@ def main() -> None:
 
     BENCH_JSON.write_text(json.dumps(metrics, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {BENCH_JSON}", file=sys.stderr)
+
+    trajectory = REPO_ROOT / "BENCH_TRAJECTORY.md"
+    trajectory.write_text(report.trajectory_table(REPO_ROOT))
+    print(f"# wrote {trajectory}", file=sys.stderr)
 
 
 if __name__ == "__main__":

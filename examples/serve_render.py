@@ -92,13 +92,23 @@ def main() -> None:
         "the hierarchy once at startup; every request then renders only "
         "its visible chunks)",
     )
+    ap.add_argument(
+        "--compress",
+        choices=("none", "int8"),
+        default="none",
+        help="resident-scene storage: int8 promotes the model to a "
+        "quantized SceneTree (decode-in-kernel on pallas_fused; ~0.35x "
+        "f32 resident bytes — the server reports the exact footprint)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     args.burst = max(1, args.burst)
 
     model = random_gaussians(jax.random.PRNGKey(0), args.gaussians, extent=1.5)
     config = RenderConfig(
-        raster_path=args.raster_path, tile_capacity=args.tile_capacity
+        raster_path=args.raster_path,
+        tile_capacity=args.tile_capacity,
+        compress=args.compress,
     )
     if args.cull:
         # Conservative capacity: the orbit cameras see most of the compact
@@ -113,6 +123,7 @@ def main() -> None:
         f"({args.raster_path} raster, {size}x{size}, "
         f"bursts of {args.burst} at {args.arrival_rate:g} req/s"
         + (", frustum-culled SceneTree" if args.cull else "")
+        + (", int8-quantized resident scene" if args.compress != "none" else "")
         + ")"
     )
 
@@ -158,6 +169,14 @@ def main() -> None:
             mode=mode,
         )
         compile_ms = server.warmup(cams[0])
+        mem = server.memory_stats()
+        if mode == "microbatch" and mem is not None:
+            print(
+                f"resident model: {mem['total_bytes'] / 1e6:.1f} MB "
+                f"({mem['ratio_vs_f32']:.3f}x f32"
+                + (", int8-quantized" if mem["compressed"] else "")
+                + ")"
+            )
         print(f"{mode} compile: {compile_ms:.0f} ms")
         with server:
             results, wall = replay_schedule(server.submit, cams, gaps)

@@ -89,9 +89,21 @@ def main() -> None:
         help="views per step; >1 optimizes a multi-view loss over a camera "
         "batch through the batched render pipeline",
     )
+    ap.add_argument(
+        "--compress",
+        choices=("none", "int8"),
+        default="none",
+        help="int8 = quantization-aware training: forward renders the "
+        "int8/fp16-quantized cloud (straight-through estimator), "
+        "gradients keep training the f32 master weights",
+    )
     args = ap.parse_args()
 
-    config = RenderConfig(raster_path=args.raster_path, pixel_chunk=None)
+    config = RenderConfig(
+        raster_path=args.raster_path,
+        pixel_chunk=None,
+        compress=args.compress,
+    )
     if args.dataset.startswith("colmap:"):
         cameras, gt, init = _load_colmap(
             args.dataset.split(":", 1)[1], args.image_size

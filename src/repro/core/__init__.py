@@ -8,7 +8,7 @@ from repro.core.binning import (
     rasterize_binned,
 )
 from repro.core.camera import Camera, look_at_camera, orbit_cameras
-from repro.core.config import DEFAULT_CONFIG, RenderConfig
+from repro.core.config import COMPRESS_MODES, DEFAULT_CONFIG, RenderConfig
 from repro.core.features import (
     GaussianFeatures,
     compute_features_fused,
@@ -29,6 +29,12 @@ from repro.core.multicam import (
     stack_cameras,
     unstack_cameras,
 )
+from repro.core.quant import (
+    QuantizedGaussianParams,
+    dequantize_gaussians,
+    quantize_dequantize,
+    quantize_gaussians,
+)
 from repro.core.render import render, render_jit
 from repro.core.scene import (
     ChunkVisibility,
@@ -38,25 +44,32 @@ from repro.core.scene import (
     cull_chunks,
     gather_visible,
     resolve_scene,
+    resolve_scene_f32,
     select_visible_chunks,
     visibility_stats,
 )
 
 __all__ = [
+    "COMPRESS_MODES",
     "Camera",
     "CameraBatch",
     "ChunkVisibility",
     "DEFAULT_CONFIG",
     "GaussianFeatures",
     "GaussianParams",
+    "QuantizedGaussianParams",
     "RenderConfig",
     "SceneTree",
     "TileBins",
     "apply_sh_lod",
     "build_scene_tree",
     "cull_chunks",
+    "dequantize_gaussians",
     "gather_visible",
+    "quantize_dequantize",
+    "quantize_gaussians",
     "resolve_scene",
+    "resolve_scene_f32",
     "select_visible_chunks",
     "visibility_stats",
     "bin_gaussians",

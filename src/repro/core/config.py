@@ -29,6 +29,7 @@ import dataclasses
 
 FEATURE_PATHS = ("naive", "staged", "fused", "pallas")
 RASTER_PATHS = ("dense", "binned", "pallas", "pallas_binned", "pallas_fused")
+COMPRESS_MODES = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,12 @@ class RenderConfig:
         LOD (every chunk uses ``sh_degree``).
       leaf_size: Gaussians per scene-tree chunk when a component (e.g.
         the render server) builds the tree itself from this config.
+      compress: resident-scene compression mode — ``"none"`` (f32) or
+        ``"int8"`` (per-chunk int8/fp16 storage, ``core.quant``). Scene
+        trees built under this config store the cloud quantized and the
+        fused raster path decodes it in-kernel; raw f32 clouds render
+        through the straight-through estimator (the quantized image,
+        gradients to the f32 masters).
     """
 
     feature_path: str = "fused"
@@ -95,6 +102,7 @@ class RenderConfig:
     visible_capacity: int | None = None
     lod_thresholds: tuple[float, float] | None = None
     leaf_size: int = 256
+    compress: str = "none"
 
     def __post_init__(self) -> None:
         if self.feature_path not in FEATURE_PATHS:
@@ -119,6 +127,10 @@ class RenderConfig:
         if self.leaf_size <= 0:
             raise ValueError(
                 f"leaf_size must be positive, got {self.leaf_size}"
+            )
+        if self.compress not in COMPRESS_MODES:
+            raise ValueError(
+                f"compress={self.compress!r} not in {COMPRESS_MODES}"
             )
         if self.lod_thresholds is not None:
             near, far = self.lod_thresholds

@@ -49,7 +49,7 @@ from repro.core.camera import Camera
 from repro.core.config import RenderConfig, as_config
 from repro.core.features import GaussianFeatures
 from repro.core.gaussians import GaussianParams
-from repro.core.scene import SceneTree, resolve_scene
+from repro.core.scene import SceneTree, resolve_scene_f32
 
 
 @jax.tree_util.register_dataclass
@@ -200,7 +200,7 @@ def _render_batch_binned(
 
     feats = jax.vmap(
         lambda cam: rast_lib.sort_by_depth(
-            compute_features(resolve_scene(g, cam, cfg), cam, cfg)
+            compute_features(resolve_scene_f32(g, cam, cfg), cam, cfg)
         )
     )(cams)  # (C, G, ...)
     gn = feats.uv.shape[-2]

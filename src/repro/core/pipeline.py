@@ -39,8 +39,9 @@ from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.features import GaussianFeatures
 from repro.core.gaussians import GaussianParams
 from repro.core.gaussians import pack_records
+from repro.core.quant import QuantizedGaussianParams, dequantize_geometry
 from repro.core.render import FEATURE_PATHS
-from repro.core.scene import resolve_scene, resolve_scene_banded
+from repro.core.scene import resolve_scene_banded, resolve_scene_f32
 
 
 def _pipeline_config(config: RenderConfig | None, **legacy) -> RenderConfig:
@@ -195,7 +196,7 @@ def _raster_device_rows(
 
 
 def _fused_raster_device_rows(
-    local: GaussianParams,
+    local: GaussianParams | QuantizedGaussianParams,
     band: jax.Array | None,
     cam: Camera,
     cfg: RenderConfig,
@@ -216,6 +217,14 @@ def _fused_raster_device_rows(
     kernel with the *untouched* full-image camera and absolute pixel
     coordinates — in-kernel feature math and blending are bitwise-identical
     to the unsharded fused path wherever the tile lists agree.
+
+    A quantized shard (compressed resident SceneTree under
+    ``cfg.compress="int8"``) keeps stage 2 on the *compressed* planes: the
+    all-gather moves ~83 bytes/Gaussian (int8/fp16 fields + per-chunk
+    scales, chunk-aligned so every lane lands next to its own decode
+    scales) instead of the 236-byte raw records — the sharded wire cost
+    shrinks by the same ~2.8x as the resident bytes — and each device
+    decodes in-kernel after its own compact gather.
     """
     from repro.kernels.fused_raster import ops as fused_ops
     from repro.kernels.gaussian_features.ops import pack_camera
@@ -225,19 +234,35 @@ def _fused_raster_device_rows(
     )
 
     tile = cfg.tile_size
+    quantized = isinstance(local, QuantizedGaussianParams)
 
     # Stage 1 (sharded): geometry-only pre-pass on this device's shard.
+    # Quantized shards decode just the two compressed geometry fields
+    # (strip-free, so shapes stay shard-local) — SH never enters degree-0
+    # geometry, so the pre-pass is bitwise the f32-on-dequantized one.
+    if quantized:
+        log_scales, opacity = dequantize_geometry(local)
+        g_geo = GaussianParams(
+            positions=local.positions,
+            quats=local.quats,
+            log_scales=log_scales,
+            sh=jnp.zeros((local.num_gaussians, 16, 3), jnp.float32),
+            opacity_logit=opacity,
+        )
+    else:
+        g_geo = local
     geo = jax.tree.map(
         jax.lax.stop_gradient,
-        feat_lib.compute_features_staged(local, cam, sh_degree=0),
+        feat_lib.compute_features_staged(g_geo, cam, sh_degree=0),
     )
-    raw = pack_records(local)  # (n_shard, RAW_ROWS)
 
-    # Stage 2: all-gather the raw record stream + pre-pass geometry.
+    # Stage 2: all-gather the record stream + pre-pass geometry. The
+    # quantized gather is chunk-aligned: every leaf (including the (M, 5)
+    # scale table) concatenates along axis 0 in the same shard order, so
+    # chunk k's lanes still broadcast from scale row k after the gather.
     geo_g = jax.tree.map(
         lambda x: _multi_axis_all_gather(x, gaussian_axes), geo
     )
-    raw_g = _multi_axis_all_gather(raw, gaussian_axes)
     band_g = (
         None if band is None else _multi_axis_all_gather(band, gaussian_axes)
     )
@@ -246,7 +271,6 @@ def _fused_raster_device_rows(
     key = jnp.where(geo_g.mask > 0.5, geo_g.depth, jnp.inf)
     order = jnp.argsort(key)
     geo_sorted = jax.tree.map(lambda x: x[order], geo_g)
-    raw_sorted = raw_g[order].T
     band_sorted = None if band_g is None else band_g[order]
 
     # Stage 3: bin this device's rows only (uv shifted so they start at
@@ -264,21 +288,12 @@ def _fused_raster_device_rows(
         capacity=cfg.tile_capacity,
         tile_chunk=cfg.tile_chunk,
     )
-    raw_compact, nsteps, chunk_band, steps = fused_ops.compact_fused_operands(
-        raw_sorted, bins, band_sorted=band_sorted, block_g=cfg.block_g
-    )
     h_pad, w_pad = bins.tiles_y * tile, bins.tiles_x * tile
     pix = _tile_order_pixels(h_pad, w_pad, tile) + shift[None, :]
     bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
-    out = fused_ops._fused_blend(
-        raw_compact,
-        pack_camera(cam),
-        pix,
-        bg4,
-        nsteps,
-        chunk_band,
+    blend_static = (
         bins.num_tiles,
-        steps,
+        None,  # steps, filled per path below
         cfg.block_g,
         cfg.sh_degree,
         band is not None,
@@ -286,6 +301,36 @@ def _fused_raster_device_rows(
         fused_ops.pick_tiles_per_step(bins.num_tiles),
         _default_interpret(),
     )
+    if quantized:
+        qg_g = jax.tree.map(
+            lambda x: _multi_axis_all_gather(x, gaussian_axes), local
+        )
+        qf, qi, qdc = fused_ops.pack_quant_rows(qg_g)
+        planes, nsteps, chunk_band, steps = fused_ops.compact_fused_operands_q(
+            qf[:, order],
+            qi[:, order],
+            qdc[:, order],
+            bins,
+            band_sorted=band_sorted,
+            block_g=cfg.block_g,
+        )
+        out = fused_ops._fused_blend_q(
+            *planes, pack_camera(cam), pix, bg4, nsteps, chunk_band,
+            *(blend_static[:1] + (steps,) + blend_static[2:]),
+        )
+    else:
+        raw = pack_records(local)  # (n_shard, RAW_ROWS)
+        raw_g = _multi_axis_all_gather(raw, gaussian_axes)
+        raw_sorted = raw_g[order].T
+        raw_compact, nsteps, chunk_band, steps = (
+            fused_ops.compact_fused_operands(
+                raw_sorted, bins, band_sorted=band_sorted, block_g=cfg.block_g
+            )
+        )
+        out = fused_ops._fused_blend(
+            raw_compact, pack_camera(cam), pix, bg4, nsteps, chunk_band,
+            *(blend_static[:1] + (steps,) + blend_static[2:]),
+        )
     img = out[:, 0:3].reshape(bins.tiles_y, bins.tiles_x, tile, tile, 3)
     img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
     return img[:my_rows, : cam.width]
@@ -355,7 +400,7 @@ def sharded_render(
                     local, band, cam_rep, cfg, gaussian_axes,
                     my_rows, row0, bg,
                 )
-            local = resolve_scene(g_shard, cam_rep, cfg)
+            local = resolve_scene_f32(g_shard, cam_rep, cfg)
             feats = feature_fn(local, cam_rep, sh_degree=cfg.sh_degree)
             # Stage 2: gather the small feature records from all shards.
             gathered = jax.tree.map(
@@ -447,7 +492,7 @@ def sharded_render_batch(
                         local, band, cam, cfg, gaussian_axes,
                         my_rows, row0, bg,
                     )
-                local = resolve_scene(g_shard, cam, cfg)
+                local = resolve_scene_f32(g_shard, cam, cfg)
                 feats = feature_fn(local, cam, sh_degree=cfg.sh_degree)
                 gathered = jax.tree.map(
                     lambda x: _multi_axis_all_gather(x, gaussian_axes), feats

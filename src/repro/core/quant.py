@@ -1,0 +1,293 @@
+"""Quantized resident Gaussian scenes — per-chunk, per-band int8/fp16 storage.
+
+A million Gaussians at f32 with degree-3 SH is ~236 MB resident per scene
+(59 floats/record) — the binding constraint for multi-scene serving and the
+dominant payload of the sharded pipeline's raw-record all-gather. This module
+stores the *cold* fields compressed and leaves the numerically hot ones
+alone:
+
+  field            storage              bytes/G   notes
+  positions        f32 (N, 3)           12        sub-pixel projection error
+  quats            f32 (N, 4)           16        is not worth 7 bytes
+  log_scales       int8 (N, 3)          3         per-chunk scale
+  opacity_logit    int8 (N,)            1         per-chunk scale
+  SH band 0 (DC)   fp16 (N, 3)          6         dominates color: kept fp16
+  SH bands 1-3     int8 (N, 15, 3)      45        per-chunk, per-*band* scale
+  chunk scales     f32 (M, 5)           20 / chunk_size
+
+~83 bytes/Gaussian vs 236 (0.35x), and the 192-byte SH block shrinks to
+~51 bytes (3.8x) — the per-band layout the 129FPS accelerator paper
+motivates (PAPERS.md): each band's coefficient magnitudes decay with degree,
+so one shared scale per (chunk, band) keeps the int8 grid matched to each
+band instead of letting band-1 span waste band-3 resolution.
+
+Quantization is *chunked* on the same ``leaf_size`` runs as the scene tree
+(``core.scene``): Morton-sorted chunks are spatially coherent, so per-chunk
+max-abs scales adapt to local statistics, the scales travel with the chunk
+through the culled gather, and the fused kernel can decode a chunk from one
+broadcast scale row. The scale math reuses
+``distributed.compression.symmetric_scale`` (max-abs / 127 with the
+zero-range / non-finite guard), extending the gradient compressor's blockwise
+scheme to per-field, per-band blocks.
+
+Decode is ``q.astype(f32) * scale`` — *bitwise identical* whether it runs in
+plain jnp (:func:`dequantize_gaussians`), inside the fused Pallas kernel
+(``kernels.fused_raster.kernel.decode_lanes``), or per device after the
+sharded all-gather. That identity is the testing lever: the fused quantized
+render must equal the fused f32 render of the dequantized cloud exactly.
+
+Training runs against **f32 master weights**: :func:`quantize_dequantize` is
+a straight-through estimator (identity VJP), so ``render(quantize_dequantize
+(g))`` produces the quantized image while gradients land on the f32 masters
+unchanged — the render stack applies it when ``RenderConfig.compress`` is
+set and the scene is still a raw f32 cloud.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import COMPRESS_MODES  # noqa: F401  (re-export)
+from repro.core.gaussians import GaussianParams, pad_to_multiple
+from repro.distributed.compression import symmetric_scale
+
+# SH basis-index ranges of bands 1..3 ((deg+1)^2 boundaries).
+SH_BAND_SLICES = ((1, 4), (4, 9), (9, 16))
+
+# Columns of the per-chunk scale table (M, 5).
+SCALE_COLS = ("log_scales", "opacity", "sh_band1", "sh_band2", "sh_band3")
+
+# Bytes per Gaussian at f32 (59 floats) and quantized (see module docstring).
+F32_RECORD_BYTES = 59 * 4
+QUANT_RECORD_BYTES = 12 + 16 + 3 + 1 + 6 + 45
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedGaussianParams:
+    """Compressed SoA Gaussian cloud (see module docstring for the layout).
+
+    ``N`` is padded to a whole number of ``chunk_size`` runs (padding rows
+    carry the standard invisible record and decode below the alpha floor);
+    ``scales`` holds one f32 decode scale per (chunk, field-or-band) in
+    :data:`SCALE_COLS` order. ``num_real`` is the pre-padding count —
+    :func:`dequantize_gaussians` strips back to it.
+    """
+
+    positions: jax.Array  # (N, 3) f32
+    quats: jax.Array  # (N, 4) f32
+    log_scales_q: jax.Array  # (N, 3) int8
+    opacity_q: jax.Array  # (N,) int8
+    sh_dc: jax.Array  # (N, 3) fp16
+    sh_rest_q: jax.Array  # (N, 15, 3) int8
+    scales: jax.Array  # (M, 5) f32
+    chunk_size: int = dataclasses.field(metadata=dict(static=True))
+    num_real: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_gaussians(self) -> int:
+        """Padded resident count (= num_chunks * chunk_size)."""
+        return self.positions.shape[0]
+
+    @property
+    def num_chunks(self) -> int:
+        return self.scales.shape[0]
+
+
+def _chunk_maxabs(x: jax.Array, m: int) -> jax.Array:
+    """(N, ...) -> (M, 1) max |x| over each chunk's flattened members."""
+    return jnp.max(jnp.abs(x.reshape(m, -1)), axis=-1, keepdims=True)
+
+
+def _encode(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 encode with a per-chunk broadcastable decode scale."""
+    x = jnp.where(jnp.isfinite(x), x, 0.0)
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def _lane_scales(scales: jax.Array, chunk_size: int, n: int) -> jax.Array:
+    """(M, 5) chunk scales -> (N, 5) per-Gaussian broadcast."""
+    return jnp.repeat(scales, chunk_size, axis=0, total_repeat_length=n)
+
+
+def quantize_gaussians(
+    g: GaussianParams, chunk_size: int
+) -> QuantizedGaussianParams:
+    """Compress an f32 cloud to per-chunk int8/fp16 storage.
+
+    The cloud is padded to a whole number of chunks first (standard
+    invisible records — ``pad_to_multiple``), and the padding participates
+    in the chunk max-abs: the pad's -10 log-scale / -30 opacity logit then
+    pin those codes to exactly representable grid points (q = -127), so
+    padding decodes invisible. Only the final chunk pays the coarser grid.
+
+    Zero-range blocks (e.g. COLMAP point-seeded clouds whose SH bands 1-3
+    are all zero) get the guarded fallback scale and decode to exact zeros.
+    """
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    padded, n_real = pad_to_multiple(g, chunk_size)
+    n = padded.num_gaussians
+    m = n // chunk_size
+
+    b1, b2, b3 = (padded.sh[:, lo:hi, :] for lo, hi in SH_BAND_SLICES)
+    scales = symmetric_scale(
+        jnp.concatenate(
+            [
+                _chunk_maxabs(padded.log_scales, m),
+                _chunk_maxabs(padded.opacity_logit, m),
+                _chunk_maxabs(b1, m),
+                _chunk_maxabs(b2, m),
+                _chunk_maxabs(b3, m),
+            ],
+            axis=-1,
+        )
+    )  # (M, 5)
+    lane = _lane_scales(scales, chunk_size, n)  # (N, 5)
+
+    return QuantizedGaussianParams(
+        positions=padded.positions,
+        quats=padded.quats,
+        log_scales_q=_encode(padded.log_scales, lane[:, 0:1]),
+        opacity_q=_encode(padded.opacity_logit, lane[:, 1]),
+        sh_dc=padded.sh[:, 0, :].astype(jnp.float16),
+        sh_rest_q=_encode(padded.sh[:, 1:, :], _band_lane_scales(lane)),
+        scales=scales,
+        chunk_size=chunk_size,
+        num_real=n_real,
+    )
+
+
+def _band_lane_scales(lane: jax.Array) -> jax.Array:
+    """(N, 5) lane scales -> (N, 15, 1) per-rest-basis SH decode scales."""
+    reps = jnp.asarray([3, 5, 7])  # basis counts of bands 1..3
+    band_of_basis = jnp.repeat(jnp.arange(3), reps, total_repeat_length=15)
+    return lane[:, 2 + band_of_basis][:, :, None]  # (N, 15, 1)
+
+
+def dequantize_geometry(
+    qg: QuantizedGaussianParams,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode (log_scales (N, 3), opacity_logit (N,)) — no stripping.
+
+    The fused path's geometry pre-pass needs only these two compressed
+    fields (positions/quats are already f32); keeping the decode strip-free
+    makes it shard_map-safe (shapes stay shard-local).
+    """
+    n = qg.num_gaussians
+    lane = _lane_scales(qg.scales, qg.chunk_size, n)
+    log_scales = qg.log_scales_q.astype(jnp.float32) * lane[:, 0:1]
+    opacity = qg.opacity_q.astype(jnp.float32) * lane[:, 1]
+    return log_scales, opacity
+
+
+def dequantize_gaussians(qg: QuantizedGaussianParams) -> GaussianParams:
+    """Full f32 reconstruction, stripped back to the pre-padding count.
+
+    Bitwise-identical to the fused kernel's in-kernel decode
+    (``q.astype(f32) * scale`` per field/band), which is what makes
+    ``fused_render(dequantize_gaussians(qg)) == fused_render_q(qg)`` an
+    exact (bitwise) contract rather than a tolerance.
+    """
+    n = qg.num_gaussians
+    lane = _lane_scales(qg.scales, qg.chunk_size, n)
+    log_scales, opacity = dequantize_geometry(qg)
+    sh_rest = qg.sh_rest_q.astype(jnp.float32) * _band_lane_scales(lane)
+    sh = jnp.concatenate(
+        [qg.sh_dc.astype(jnp.float32)[:, None, :], sh_rest], axis=1
+    )
+    g = GaussianParams(
+        positions=qg.positions,
+        quats=qg.quats,
+        log_scales=log_scales,
+        sh=sh,
+        opacity_logit=opacity,
+    )
+    if qg.num_real == n:
+        return g
+    return jax.tree.map(lambda x: x[: qg.num_real], g)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize_dequantize(g: GaussianParams, chunk_size: int) -> GaussianParams:
+    """Straight-through estimator: quantization in the forward pass only.
+
+    Forward returns ``dequantize(quantize(g))`` — exactly the cloud a
+    quantized resident scene renders — while the VJP passes cotangents
+    through unchanged, so optimizers keep training the f32 master weights
+    (the standard quantization-aware-training trick). ``grad(f(ste(g)))``
+    therefore equals ``grad(f)`` evaluated at the dequantized point.
+    """
+    return dequantize_gaussians(quantize_gaussians(g, chunk_size))
+
+
+def _qd_fwd(g, chunk_size):
+    return quantize_dequantize(g, chunk_size), None
+
+
+def _qd_bwd(chunk_size, _, ct):
+    return (ct,)
+
+
+quantize_dequantize.defvjp(_qd_fwd, _qd_bwd)
+
+
+def quantized_memory_stats(qg: QuantizedGaussianParams) -> dict:
+    """Resident-byte accounting per field and SH band (see memory_stats)."""
+    n = qg.num_gaussians
+    fields = {
+        "positions": int(qg.positions.nbytes),
+        "quats": int(qg.quats.nbytes),
+        "log_scales": int(qg.log_scales_q.nbytes),
+        "opacity": int(qg.opacity_q.nbytes),
+        "sh_dc": int(qg.sh_dc.nbytes),
+        "sh_rest": int(qg.sh_rest_q.nbytes),
+        "chunk_scales": int(qg.scales.nbytes),
+    }
+    sh_bands = {
+        "dc": int(qg.sh_dc.nbytes),
+        "band1": 3 * 3 * n,  # int8: 3 bases x 3 channels
+        "band2": 5 * 3 * n,
+        "band3": 7 * 3 * n,
+        "band_scales": 3 * 4 * qg.num_chunks,
+    }
+    return _memory_summary(n, fields, sh_bands, compressed=True)
+
+
+def f32_memory_stats(g: GaussianParams) -> dict:
+    """f32 resident-byte accounting with the same schema."""
+    n = g.num_gaussians
+    fields = {
+        "positions": int(g.positions.nbytes),
+        "quats": int(g.quats.nbytes),
+        "log_scales": int(g.log_scales.nbytes),
+        "opacity": int(g.opacity_logit.nbytes),
+        "sh": int(g.sh.nbytes),
+    }
+    sh_bands = {
+        "dc": 3 * 4 * n,
+        "band1": 3 * 3 * 4 * n,
+        "band2": 5 * 3 * 4 * n,
+        "band3": 7 * 3 * 4 * n,
+        "band_scales": 0,
+    }
+    return _memory_summary(n, fields, sh_bands, compressed=False)
+
+
+def _memory_summary(n: int, fields: dict, sh_bands: dict, compressed: bool) -> dict:
+    total = sum(fields.values())
+    f32_equiv = n * F32_RECORD_BYTES
+    return {
+        "compressed": compressed,
+        "num_gaussians": n,
+        "fields": fields,
+        "sh_bands": sh_bands,
+        "sh_bytes": sum(sh_bands.values()),
+        "total_bytes": total,
+        "f32_bytes": f32_equiv,
+        "ratio_vs_f32": total / max(1, f32_equiv),
+    }

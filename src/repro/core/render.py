@@ -17,7 +17,8 @@ from repro.core import rasterize as rast_lib
 from repro.core.camera import Camera
 from repro.core.config import UNSET, RenderConfig, as_config
 from repro.core.gaussians import GaussianParams
-from repro.core.scene import SceneTree, resolve_scene, resolve_scene_banded
+from repro.core.quant import QuantizedGaussianParams
+from repro.core.scene import SceneTree, resolve_scene_banded, resolve_scene_f32
 
 FEATURE_PATHS = {
     "naive": feat_lib.compute_features_naive,
@@ -92,7 +93,17 @@ def render(
         from repro.kernels.fused_raster import ops as fused_ops
 
         g, band = resolve_scene_banded(g, cam, cfg)
-        return fused_ops.fused_render(
+        # A quantized resolve (compressed resident SceneTree) streams the
+        # compact int8/fp16 records straight into the decode-in-kernel
+        # raster; f32 resolves (incl. the compress="int8" straight-through
+        # estimator) take the raw-record kernel. Both produce the same
+        # image bitwise for the same scene.
+        entry = (
+            fused_ops.fused_render_q
+            if isinstance(g, QuantizedGaussianParams)
+            else fused_ops.fused_render
+        )
+        return entry(
             g,
             cam,
             jax.numpy.asarray(cfg.background, jax.numpy.float32),
@@ -104,7 +115,7 @@ def render(
             sh_degree=cfg.sh_degree,
             early_exit=cfg.early_exit,
         )
-    g = resolve_scene(g, cam, cfg)
+    g = resolve_scene_f32(g, cam, cfg)
     feats = compute_features(g, cam, cfg)
     return rast_lib.rasterize_features(feats, cam.height, cam.width, cfg)
 

@@ -53,6 +53,16 @@ from repro.core.camera import Camera
 from repro.core.config import RenderConfig
 from repro.core.features import NEAR_PLANE
 from repro.core.gaussians import GaussianParams, pad_to_multiple
+from repro.core.quant import (
+    COMPRESS_MODES,
+    QuantizedGaussianParams,
+    dequantize_geometry,
+    dequantize_gaussians,
+    f32_memory_stats,
+    quantize_dequantize,
+    quantize_gaussians,
+    quantized_memory_stats,
+)
 
 # World-space support radius of a Gaussian = AABB_SIGMA * max axis scale.
 # 3 sigma matches the rasterizer's screen-space support box; the frustum
@@ -77,13 +87,16 @@ class SceneTree:
     Attributes:
       gaussians: (N_pad, ...) Morton-permuted cloud, padded to a whole
         number of chunks with invisible records (``pad_to_multiple``).
+        Either plain f32 ``GaussianParams`` or a compressed
+        ``QuantizedGaussianParams`` (``build_scene_tree(compress="int8")``)
+        whose quantization chunks coincide with the tree's leaves.
       chunk_lo, chunk_hi: (M, 3) conservative world AABB of each chunk
         (member positions padded by their 3-sigma support radius).
       leaf_size: Gaussians per chunk (static; N_pad == M * leaf_size).
       num_real: original Gaussian count before padding (static).
     """
 
-    gaussians: GaussianParams
+    gaussians: GaussianParams | QuantizedGaussianParams
     chunk_lo: jax.Array
     chunk_hi: jax.Array
     leaf_size: int = dataclasses.field(metadata=dict(static=True))
@@ -97,6 +110,20 @@ class SceneTree:
     def num_gaussians(self) -> int:
         """Padded resident count (= num_chunks * leaf_size)."""
         return self.gaussians.positions.shape[0]
+
+    @property
+    def compressed(self) -> bool:
+        return isinstance(self.gaussians, QuantizedGaussianParams)
+
+    def memory_stats(self) -> dict:
+        """Resident-byte accounting (fields, SH bands, ratio vs f32)."""
+        if self.compressed:
+            stats = quantized_memory_stats(self.gaussians)
+        else:
+            stats = f32_memory_stats(self.gaussians)
+        stats["aabb_bytes"] = int(self.chunk_lo.nbytes + self.chunk_hi.nbytes)
+        stats["num_chunks"] = self.num_chunks
+        return stats
 
 
 @jax.tree_util.register_dataclass
@@ -150,7 +177,9 @@ def morton_codes(positions: np.ndarray) -> np.ndarray:
     )
 
 
-def build_scene_tree(g: GaussianParams, leaf_size: int = 256) -> SceneTree:
+def build_scene_tree(
+    g: GaussianParams, leaf_size: int = 256, *, compress: str = "none"
+) -> SceneTree:
     """Build the static chunk hierarchy for a Gaussian cloud.
 
     Host-side (called once per scene, e.g. at server startup): Morton codes
@@ -161,9 +190,20 @@ def build_scene_tree(g: GaussianParams, leaf_size: int = 256) -> SceneTree:
     The cloud is padded to a whole number of chunks with invisible records
     (below the alpha floor — see ``gaussians.pad_to_multiple``); only the
     final chunk can contain padding, and its AABB ignores the padded rows.
+
+    ``compress="int8"`` stores the resident cloud quantized
+    (``core.quant``), one quantization chunk per tree leaf — Morton
+    chunks are spatially coherent, so the per-chunk scales track local
+    statistics, and the culled gather moves whole chunks so the scales
+    travel with them. Chunk AABBs then use the *dequantized* support radii:
+    conservative w.r.t. what the decode-in-kernel raster actually renders.
     """
     if leaf_size <= 0:
         raise ValueError(f"leaf_size must be positive, got {leaf_size}")
+    if compress not in COMPRESS_MODES:
+        raise ValueError(
+            f"compress must be one of {COMPRESS_MODES}, got {compress!r}"
+        )
     n = g.num_gaussians
     if n == 0:
         raise ValueError("cannot build a scene tree over an empty cloud")
@@ -176,11 +216,17 @@ def build_scene_tree(g: GaussianParams, leaf_size: int = 256) -> SceneTree:
     n_pad = padded.num_gaussians
     m = n_pad // leaf_size
 
+    gaussians: GaussianParams | QuantizedGaussianParams = padded
+    log_scales = padded.log_scales
+    if compress == "int8":
+        gaussians = quantize_gaussians(padded, leaf_size)
+        log_scales, _ = dequantize_geometry(gaussians)
+
     # Conservative per-Gaussian support radius; padded rows are excluded
     # from the chunk AABBs (their -10 log-scale would not hurt, but their
     # zero position would).
     pos = padded.positions.reshape(m, leaf_size, 3)
-    radius = (AABB_SIGMA * jnp.exp(padded.log_scales).max(axis=-1)).reshape(
+    radius = (AABB_SIGMA * jnp.exp(log_scales).max(axis=-1)).reshape(
         m, leaf_size, 1
     )
     valid = (jnp.arange(n_pad) < n).reshape(m, leaf_size, 1)
@@ -189,7 +235,7 @@ def build_scene_tree(g: GaussianParams, leaf_size: int = 256) -> SceneTree:
     hi = jnp.max(jnp.where(valid, pos + radius, -big), axis=1)
 
     return SceneTree(
-        gaussians=padded,
+        gaussians=gaussians,
         chunk_lo=lo,
         chunk_hi=hi,
         leaf_size=leaf_size,
@@ -325,16 +371,49 @@ def _append_invisible(g: GaussianParams) -> GaussianParams:
     )
 
 
+# Decode-scale row a sentinel chunk gathers: codes -127 for log scales and
+# opacity then decode to ~(-10, -30) — the invisible record — and the SH
+# band scales are the guarded fallback (codes are 0 -> exact zero color).
+_SENTINEL_SCALE_ROW = (10.0 / 127.0, 30.0 / 127.0, 1.0, 1.0, 1.0)
+
+
+def _append_invisible_q(qg: QuantizedGaussianParams) -> QuantizedGaussianParams:
+    """Quantized twin of :func:`_append_invisible` (per-Gaussian fields only;
+    the sentinel *scale row* is gathered chunk-granularly in
+    :func:`gather_visible`)."""
+
+    def pad1(x, fill):
+        widths = [(0, 1)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    return dataclasses.replace(
+        qg,
+        positions=pad1(qg.positions, 0.0),
+        quats=pad1(qg.quats, 1.0),
+        log_scales_q=pad1(qg.log_scales_q, -127),
+        opacity_q=pad1(qg.opacity_q, -127),
+        sh_dc=pad1(qg.sh_dc, 0.0),
+        sh_rest_q=pad1(qg.sh_rest_q, 0),
+    )
+
+
 def gather_visible(
     tree: SceneTree, chunk_idx: jax.Array
-) -> tuple[GaussianParams, jax.Array]:
-    """Gather the selected chunks into one compact ``GaussianParams``.
+) -> tuple[GaussianParams | QuantizedGaussianParams, jax.Array]:
+    """Gather the selected chunks into one compact cloud.
 
     ``chunk_idx`` is the static-capacity sentinel-padded list from
     :func:`select_visible_chunks`; every sentinel slot's ``leaf_size``
     rows gather the appended invisible record. Differentiable w.r.t. the
     resident cloud (the gather's VJP scatter-adds per-chunk gradients
     back), the indices are discrete.
+
+    A quantized tree gathers quantized chunks: per-Gaussian planes row-wise
+    like the f32 fields, the (M, 5) scale table chunk-granularly (one row
+    per selected slot; sentinels get :data:`_SENTINEL_SCALE_ROW`). The
+    gather moves whole chunks, so every lane stays next to its own decode
+    scales — ``dequantize(gather(qg)) == gather(dequantize(qg))`` on all
+    visible lanes.
 
     Returns ``(params (capacity * leaf_size, ...), valid (capacity,)
     bool)`` — ``valid`` marks real (non-sentinel) chunk slots.
@@ -347,6 +426,27 @@ def gather_visible(
     # Sentinel chunks (index M) land exactly at n_pad .. n_pad + leaf - 1;
     # clamp them onto the single appended invisible record.
     rows = jnp.minimum(rows, jnp.int32(n_pad)).reshape(-1)
+    if tree.compressed:
+        qg_pad = _append_invisible_q(tree.gaussians)
+        scales_pad = jnp.concatenate(
+            [
+                tree.gaussians.scales,
+                jnp.asarray(_SENTINEL_SCALE_ROW, jnp.float32)[None, :],
+            ],
+            axis=0,
+        )
+        gathered = QuantizedGaussianParams(
+            positions=qg_pad.positions[rows],
+            quats=qg_pad.quats[rows],
+            log_scales_q=qg_pad.log_scales_q[rows],
+            opacity_q=qg_pad.opacity_q[rows],
+            sh_dc=qg_pad.sh_dc[rows],
+            sh_rest_q=qg_pad.sh_rest_q[rows],
+            scales=scales_pad[jnp.minimum(chunk_idx, jnp.int32(m))],
+            chunk_size=leaf,
+            num_real=chunk_idx.shape[0] * leaf,
+        )
+        return gathered, valid
     g_pad = _append_invisible(tree.gaussians)
     return jax.tree.map(lambda x: x[rows], g_pad), valid
 
@@ -374,7 +474,7 @@ def resolve_scene_banded(
     scene: "SceneTree | GaussianParams",
     cam: Camera | None,
     config: RenderConfig,
-) -> tuple[GaussianParams, jnp.ndarray | None]:
+) -> tuple[GaussianParams | QuantizedGaussianParams, jnp.ndarray | None]:
     """The render stack's scene adapter: tree + camera -> compact params.
 
     * plain ``GaussianParams`` pass through untouched;
@@ -387,6 +487,18 @@ def resolve_scene_banded(
       ``config.lod_thresholds`` is set — each chunk's SH coefficients are
       banded down by camera distance.
 
+    ``config.compress="int8"`` interacts two ways:
+
+    * a tree whose resident cloud is already quantized passes the
+      :class:`QuantizedGaussianParams` through (full or culled-gathered) —
+      no ``apply_sh_lod``: the fused path gates the *decode* per band, and
+      f32 consumers go through :func:`resolve_scene_f32`;
+    * an f32 scene gets the straight-through estimator
+      (``quant.quantize_dequantize``) — the rendered cloud is exactly the
+      dequantized quantization, gradients land on the f32 masters. Applied
+      *before* LOD banding and on whole gathered chunks, so the STE render
+      is bitwise the image a quantized-resident tree would produce.
+
     Returns ``(params, band)``: ``band`` is the per-Gaussian int32 SH LOD
     degree when distance LOD applied, else None. The fused raster path
     feeds ``band`` to its kernel, which then *skips* the above-band basis
@@ -398,16 +510,28 @@ def resolve_scene_banded(
     ``jit``/``vmap``/``shard_map``: per-camera culling lives *inside* the
     existing executables (one compile per capacity, any camera).
     """
+    ste = config.compress != "none"
     if not isinstance(scene, SceneTree):
+        if ste:
+            return quantize_dequantize(scene, config.leaf_size), None
         return scene, None
+    ste = ste and not scene.compressed
     if not config.cull:
-        return scene.gaussians, None
+        g = scene.gaussians
+        if ste:
+            g = quantize_dequantize(g, scene.leaf_size)
+        return g, None
     if cam is None:
         raise ValueError("config.cull needs a camera to cull against")
     vis = cull_chunks(scene, cam, lod_thresholds=config.lod_thresholds)
     capacity = config.visible_capacity or scene.num_chunks
     chunk_idx, _ = select_visible_chunks(vis, capacity)
     g, _ = gather_visible(scene, chunk_idx)
+    if ste:
+        # Gathered slots are whole leaves, so re-quantizing here sees each
+        # chunk's exact resident statistics (sentinel chunks quantize to
+        # the sentinel scale row) — same codes, same scales, same decode.
+        g = quantize_dequantize(g, scene.leaf_size)
     if config.lod_thresholds is None:
         return g, None
     # Per-Gaussian degree: the owning chunk's band (sentinels -> 0),
@@ -421,7 +545,8 @@ def resolve_scene_banded(
         scene.leaf_size,
         total_repeat_length=deg.shape[0] * scene.leaf_size,
     )
-    g = dataclasses.replace(g, sh=apply_sh_lod(g.sh, deg))
+    if not isinstance(g, QuantizedGaussianParams):
+        g = dataclasses.replace(g, sh=apply_sh_lod(g.sh, deg))
     return g, deg
 
 
@@ -429,9 +554,31 @@ def resolve_scene(
     scene: "SceneTree | GaussianParams",
     cam: Camera | None,
     config: RenderConfig,
-) -> GaussianParams:
+) -> GaussianParams | QuantizedGaussianParams:
     """:func:`resolve_scene_banded` for callers that only need the params."""
     return resolve_scene_banded(scene, cam, config)[0]
+
+
+def resolve_scene_f32(
+    scene: "SceneTree | GaussianParams",
+    cam: Camera | None,
+    config: RenderConfig,
+) -> GaussianParams:
+    """:func:`resolve_scene` guaranteed to yield f32 ``GaussianParams``.
+
+    The adapter for the non-fused feature paths (staged/Pallas feature
+    kernels, binned batch renderer), which consume f32 records: a quantized
+    resolve is dequantized in jnp — the same ``q * scale`` decode the fused
+    kernel performs — and distance LOD is applied via ``apply_sh_lod``
+    (the quantized resolve defers it, since quantized storage is not
+    pre-zeroed above band).
+    """
+    g, band = resolve_scene_banded(scene, cam, config)
+    if isinstance(g, QuantizedGaussianParams):
+        g = dequantize_gaussians(g)
+        if band is not None:
+            g = dataclasses.replace(g, sh=apply_sh_lod(g.sh, band))
+    return g
 
 
 def visibility_stats(

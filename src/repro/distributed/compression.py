@@ -29,14 +29,38 @@ def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
     return jnp.pad(flat, (0, pad)), flat.shape[0]
 
 
+def symmetric_scale(maxabs: jax.Array) -> jax.Array:
+    """Per-block decode scale for symmetric int8: ``maxabs / 127``, guarded.
+
+    Degenerate blocks must never poison the round trip:
+
+    * all-zero / constant-zero blocks (``maxabs == 0``) fall back to a
+      positive scale — their codes are 0, so they still decode to exact
+      zeros, but downstream ``q * scale`` never multiplies by 0.0 and the
+      quantize-side division never produces 0/0 NaNs;
+    * non-finite ``maxabs`` (an inf/NaN slipped into the block) would make
+      ``q * scale`` NaN for *every* member; it also falls back to 1.0.
+
+    Shared by the gradient compressor below and the quantized resident
+    scenes in ``core.quant`` (per-chunk, per-band SH scales).
+    """
+    ok = jnp.isfinite(maxabs) & (maxabs > 0.0)
+    return jnp.where(ok, maxabs, 1.0).astype(jnp.float32) / 127.0
+
+
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array, int]:
-    """Blockwise symmetric int8 quantization. Returns (q, scales, orig_len)."""
+    """Blockwise symmetric int8 quantization. Returns (q, scales, orig_len).
+
+    Non-finite inputs are zeroed before the block max so one bad value
+    cannot blow up its whole block's scale; all-zero blocks get a positive
+    fallback scale (see :func:`symmetric_scale`) and decode to exact zeros.
+    """
     flat, n = _pad_to_block(x)
     blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
-    safe = jnp.where(scale == 0.0, 1.0, scale)
-    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32), n
+    blocks = jnp.where(jnp.isfinite(blocks), blocks, 0.0)
+    scale = symmetric_scale(jnp.max(jnp.abs(blocks), axis=-1, keepdims=True))
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
 
 
 def dequantize_int8(

@@ -3,28 +3,46 @@ Pallas kernel, with chunk streaming, in-kernel early exit, and banded SH."""
 
 from repro.kernels.fused_raster.kernel import (
     DEFAULT_BLOCK_G,
+    QDC_ROWS,
+    QF_ROWS,
+    QI_ROWS,
     RAW_ROWS,
     build_fused_bwd_pallas_call,
     build_fused_pallas_call,
+    build_fused_q_pallas_call,
+    decode_lanes,
     lane_features,
+    lane_features_q,
 )
 from repro.kernels.fused_raster.ops import (
     build_fused_operands,
     compact_fused_operands,
+    compact_fused_operands_q,
     fused_render,
+    fused_render_q,
+    pack_quant_rows,
     pick_tiles_per_step,
 )
 from repro.kernels.fused_raster.ref import fused_reference, lane_feature_cloud
 
 __all__ = [
     "DEFAULT_BLOCK_G",
+    "QDC_ROWS",
+    "QF_ROWS",
+    "QI_ROWS",
     "RAW_ROWS",
     "build_fused_bwd_pallas_call",
     "build_fused_pallas_call",
+    "build_fused_q_pallas_call",
+    "decode_lanes",
     "lane_features",
+    "lane_features_q",
     "build_fused_operands",
     "compact_fused_operands",
+    "compact_fused_operands_q",
     "fused_render",
+    "fused_render_q",
+    "pack_quant_rows",
     "pick_tiles_per_step",
     "fused_reference",
     "lane_feature_cloud",

@@ -72,6 +72,24 @@ from repro.kernels.tile_rasterize.kernel import (
 RAW_ROWS = 59
 DEFAULT_BLOCK_G = 128
 
+# Quantized-record operand rows (matches ops.pack_quant_rows; decode scales
+# are the per-chunk table broadcast per lane at compaction time):
+#   qf  (f32): [0:3] position, [3:7] quaternion, [7] log-scales scale,
+#              [8] opacity scale, [9:12] SH band-1..3 scales.
+#   qi (int8): [0:3] log scales, [3] opacity logit, [4:49] SH bands 1-3
+#              (basis-major x 3 channels, mirroring raw rows 13:58).
+#   qdc (fp16): [0:3] SH band-0 (DC) channels.
+QF_ROWS = 12
+QI_ROWS = 49
+QDC_ROWS = 3
+
+# (start, end) raw SH rows and qi rows of bands 1..3, with their qf scale row.
+_QBANDS = (
+    ((13, 22), (4, 13), 9),
+    ((22, 37), (13, 28), 10),
+    ((37, 58), (28, 49), 11),
+)
+
 
 class _LaneGeometry(NamedTuple):
     """Per-lane geometry intermediates, each shaped (L,)."""
@@ -270,6 +288,75 @@ def lane_features(
     )
 
 
+def decode_lanes(
+    qf: jax.Array,
+    qi: jax.Array,
+    qdc: jax.Array,
+    *,
+    max_band: int,
+) -> jax.Array:
+    """Decode quantized lanes to (RAW_ROWS, L) f32 raw records.
+
+    ``q.astype(f32) * scale`` per field/band — the same elementwise ops as
+    ``core.quant.dequantize_gaussians``, so the in-kernel decode is bitwise
+    identical to the jnp dequantize of the resident scene (the lever behind
+    the fused-quantized == fused-f32-on-dequantized exactness contract).
+
+    ``max_band`` (static) is the highest SH band decoded; rows above it are
+    exact zeros, so the degree-``max_band`` color evaluator never touches
+    the above-band codes. Per-*lane* banding needs no mask here: the
+    compaction (``ops.compact_fused_operands_q``) zeroes each lane's int8
+    codes above its own band, and zero codes decode to exact zeros.
+    """
+    f32 = lambda a: a.astype(jnp.float32)  # noqa: E731
+    rows = [
+        qf[0:3, :],  # positions
+        qf[3:7, :],  # quats
+        f32(qi[0:3, :]) * qf[7:8, :],  # log scales
+        f32(qdc),  # SH DC
+    ]
+    for b, ((lo, hi), (qlo, qhi), srow) in enumerate(_QBANDS, start=1):
+        if b > max_band:
+            rows.append(jnp.zeros((hi - lo, qf.shape[1]), jnp.float32))
+            continue
+        rows.append(f32(qi[qlo:qhi, :]) * qf[srow : srow + 1, :])
+    rows.append(f32(qi[3:4, :]) * qf[8:9, :])  # opacity logit
+    return jnp.concatenate(rows, axis=0)
+
+
+def lane_features_q(
+    qf: jax.Array,
+    qi: jax.Array,
+    qdc: jax.Array,
+    cam: jax.Array,
+    *,
+    sh_degree: int,
+    band: jax.Array | None = None,
+) -> jax.Array:
+    """Quantized lanes -> (FEAT_ROWS, L) features: decode *then* the exact
+    ``lane_features`` math.
+
+    With ``band`` (traced per-chunk SH LOD degree) the ``lax.switch`` picks
+    decode *and* evaluation jointly: branch ``d`` decodes only bands <= d
+    and evaluates the degree-``d`` basis — above-band coefficients are
+    neither decoded nor multiplied, composing the compression with PR 6's
+    banded-SH FLOP cut. Geometry decode is band-independent, so every
+    branch walks bitwise-identical alphas/gates.
+    """
+    if band is None:
+        raw = decode_lanes(qf, qi, qdc, max_band=sh_degree)
+        return lane_features(raw, cam, sh_degree=sh_degree)
+
+    def at_degree(d: int) -> jax.Array:
+        raw = decode_lanes(qf, qi, qdc, max_band=d)
+        return lane_features(raw, cam, sh_degree=d)
+
+    return jax.lax.switch(
+        jnp.clip(band, 0, sh_degree),
+        [functools.partial(at_degree, d) for d in range(sh_degree + 1)],
+    )
+
+
 def _blend_chunk(
     pix: jax.Array,
     feat: jax.Array,
@@ -294,27 +381,25 @@ def _blend_chunk(
     return t_pix * cum[:, -1:], acc + rgb
 
 
-def _fused_raster_kernel(
-    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
-    band_ref,  # (num_tiles, steps) int32 scalar-prefetch per-chunk SH band
-    pix_ref,  # (tiles_per_step * TILE_PIX, 2) pixel centers (tile order)
-    raw_ref,  # (RAW_ROWS, tiles_per_step * steps * block_g) raw records
-    cam_ref,  # (1, CAM_VEC_LEN) packed camera constants
-    bg_ref,  # (1, 4) background rgb + pad
-    out_ref,  # (tiles_per_step * TILE_PIX, 4) rgb + final transmittance
+def _stream_supertile(
+    nsteps_ref,
+    pix_all,
+    bg,
+    out_ref,
+    chunk_features,
     *,
-    steps: int,
-    block_g: int,
-    sh_degree: int,
-    banded: bool,
     early_exit: bool,
     tiles_per_step: int,
 ):
+    """Shared forward supertile loop (f32 and quantized kernels).
+
+    ``chunk_features(t, tt, j)`` produces chunk ``j``'s (FEAT_ROWS, block_g)
+    features for supertile-local tile ``tt`` (global tile ``t``); everything
+    else — the per-tile early-exiting chunk ``while_loop`` carrying
+    (transmittance, rgb) and the supertile ``fori_loop`` — is identical, so
+    the two record formats cannot drift in blend semantics.
+    """
     g0 = pl.program_id(0)
-    raw_all = raw_ref[...]  # (RAW_ROWS, tiles_per_step * steps * block_g)
-    pix_all = pix_ref[...]
-    cam = cam_ref[...]
-    bg = bg_ref[0, 0:3]
 
     def tile_body(tt, out_acc):
         t = g0 * tiles_per_step + tt
@@ -332,11 +417,7 @@ def _fused_raster_kernel(
 
         def body(carry):
             j, t_pix, acc = carry
-            raw = jax.lax.dynamic_slice(
-                raw_all, (0, (tt * steps + j) * block_g), (RAW_ROWS, block_g)
-            )
-            band = band_ref[t, j] if banded else None
-            feat = lane_features(raw, cam, sh_degree=sh_degree, band=band)
+            feat = chunk_features(t, tt, j)
             t_pix, acc = _blend_chunk(pix, feat, t_pix, acc)
             return j + jnp.int32(1), t_pix, acc
 
@@ -353,6 +434,100 @@ def _fused_raster_kernel(
     out0 = jnp.zeros((tiles_per_step * TILE_PIX, 4), jnp.float32)
     out = jax.lax.fori_loop(0, tiles_per_step, tile_body, out0)
     out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _fused_raster_kernel(
+    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
+    band_ref,  # (num_tiles, steps) int32 scalar-prefetch per-chunk SH band
+    pix_ref,  # (tiles_per_step * TILE_PIX, 2) pixel centers (tile order)
+    raw_ref,  # (RAW_ROWS, tiles_per_step * steps * block_g) raw records
+    cam_ref,  # (1, CAM_VEC_LEN) packed camera constants
+    bg_ref,  # (1, 4) background rgb + pad
+    out_ref,  # (tiles_per_step * TILE_PIX, 4) rgb + final transmittance
+    *,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+    tiles_per_step: int,
+):
+    raw_all = raw_ref[...]  # (RAW_ROWS, tiles_per_step * steps * block_g)
+    cam = cam_ref[...]
+
+    def chunk_features(t, tt, j):
+        raw = jax.lax.dynamic_slice(
+            raw_all, (0, (tt * steps + j) * block_g), (RAW_ROWS, block_g)
+        )
+        band = band_ref[t, j] if banded else None
+        return lane_features(raw, cam, sh_degree=sh_degree, band=band)
+
+    _stream_supertile(
+        nsteps_ref,
+        pix_ref[...],
+        bg_ref[0, 0:3],
+        out_ref,
+        chunk_features,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+    )
+
+
+def _fused_raster_kernel_q(
+    nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
+    band_ref,  # (num_tiles, steps) int32 scalar-prefetch per-chunk SH band
+    pix_ref,  # (tiles_per_step * TILE_PIX, 2) pixel centers (tile order)
+    qf_ref,  # (QF_ROWS, tiles_per_step * steps * block_g) f32 lanes
+    qi_ref,  # (QI_ROWS, tiles_per_step * steps * block_g) int8 lanes
+    qdc_ref,  # (QDC_ROWS, tiles_per_step * steps * block_g) fp16 DC lanes
+    cam_ref,  # (1, CAM_VEC_LEN) packed camera constants
+    bg_ref,  # (1, 4) background rgb + pad
+    out_ref,  # (tiles_per_step * TILE_PIX, 4) rgb + final transmittance
+    *,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+    tiles_per_step: int,
+):
+    """Decode-in-kernel fused raster: quantized chunks dequantize to f32
+    lanes in registers right before the (unchanged) staged feature math.
+
+    The streamed operands are the compressed lanes (~83 bytes/Gaussian vs
+    236 raw) — the VMEM block fetch, which grid pipelining overlaps with
+    the previous supertile's compute, moves ~2.8x fewer bytes per chunk.
+    """
+    qf_all = qf_ref[...]
+    qi_all = qi_ref[...]
+    qdc_all = qdc_ref[...]
+    cam = cam_ref[...]
+
+    def chunk_features(t, tt, j):
+        col0 = (tt * steps + j) * block_g
+
+        def sl(x, rows):
+            return jax.lax.dynamic_slice(x, (0, col0), (rows, block_g))
+
+        band = band_ref[t, j] if banded else None
+        return lane_features_q(
+            sl(qf_all, QF_ROWS),
+            sl(qi_all, QI_ROWS),
+            sl(qdc_all, QDC_ROWS),
+            cam,
+            sh_degree=sh_degree,
+            band=band,
+        )
+
+    _stream_supertile(
+        nsteps_ref,
+        pix_ref[...],
+        bg_ref[0, 0:3],
+        out_ref,
+        chunk_features,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+    )
 
 
 def build_fused_pallas_call(
@@ -406,6 +581,65 @@ def build_fused_pallas_call(
     return pl.pallas_call(
         functools.partial(
             _fused_raster_kernel,
+            steps=steps,
+            block_g=block_g,
+            sh_degree=sh_degree,
+            banded=banded,
+            early_exit=early_exit,
+            tiles_per_step=tiles_per_step,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype),
+        interpret=interpret,
+    )
+
+
+def build_fused_q_pallas_call(
+    num_tiles: int,
+    steps: int,
+    *,
+    block_g: int = DEFAULT_BLOCK_G,
+    sh_degree: int = 3,
+    banded: bool = False,
+    early_exit: bool = True,
+    tiles_per_step: int = 1,
+    interpret: bool = False,
+    dtype=jnp.float32,
+):
+    """Quantized twin of :func:`build_fused_pallas_call`.
+
+    Identical grid/prefetch structure; the single raw-record operand is
+    replaced by the three quantized planes (qf f32 / qi int8 / qdc fp16 —
+    see ``pack_quant_rows``), each blocked per supertile exactly like the
+    raw block, so grid pipelining prefetches the compressed stream instead
+    of the 59-row f32 one.
+    """
+    if num_tiles % tiles_per_step != 0:
+        raise ValueError(
+            f"tiles_per_step={tiles_per_step} must divide num_tiles={num_tiles}"
+        )
+    grid = (num_tiles // tiles_per_step,)
+    lanes = tiles_per_step * steps * block_g
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (tiles_per_step * TILE_PIX, 2), lambda t, ns, bd: (t, 0)
+            ),
+            pl.BlockSpec((QF_ROWS, lanes), lambda t, ns, bd: (0, t)),
+            pl.BlockSpec((QI_ROWS, lanes), lambda t, ns, bd: (0, t)),
+            pl.BlockSpec((QDC_ROWS, lanes), lambda t, ns, bd: (0, t)),
+            pl.BlockSpec((1, CAM_VEC_LEN), lambda t, ns, bd: (0, 0)),
+            pl.BlockSpec((1, 4), lambda t, ns, bd: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (tiles_per_step * TILE_PIX, 4), lambda t, ns, bd: (t, 0)
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_raster_kernel_q,
             steps=steps,
             block_g=block_g,
             sh_degree=sh_degree,

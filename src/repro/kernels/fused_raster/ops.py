@@ -30,9 +30,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import binning as bin_lib
 from repro.core import features as feat_lib
+from repro.core import quant
 from repro.core.camera import Camera
 from repro.core.gaussians import (
     GAUSSIAN_RECORD_FLOATS,
@@ -76,6 +78,38 @@ def _sentinel_column(dtype) -> jax.Array:
     return col
 
 
+def _compact_indices(bins, num_g: int, block_g: int):
+    """Flattened per-tile gather indices (sentinel ``num_g``), chunk counts.
+
+    Returns ``(idx (T * steps * block_g,), nsteps (T,) float32, steps)`` —
+    the tile lists padded to a whole number of ``block_g`` chunks. Shared by
+    the raw-record and quantized compactions so both ship identical lane
+    orderings to their kernels.
+    """
+    kk = bins.capacity
+    k_pad = max(block_g, -(-kk // block_g) * block_g)
+    idx = jnp.pad(
+        bins.indices, ((0, 0), (0, k_pad - kk)), constant_values=jnp.int32(num_g)
+    ).reshape(-1)
+    nsteps = (
+        (bins.count + jnp.int32(block_g - 1)) // jnp.int32(block_g)
+    ).astype(jnp.float32)
+    return idx, nsteps, k_pad // block_g
+
+
+def _chunk_bands(
+    band_sorted: jax.Array | None, idx: jax.Array, bins, steps: int, block_g: int
+) -> jax.Array:
+    """Per-(tile, chunk) SH band = max LOD degree of the chunk's live lanes."""
+    if band_sorted is None:
+        return jnp.zeros((bins.num_tiles, steps), jnp.float32)
+    band_pad = jnp.concatenate(
+        [band_sorted.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
+    )
+    lane_band = band_pad[idx].reshape(bins.num_tiles, steps, block_g)
+    return jnp.max(lane_band, axis=-1).astype(jnp.float32)
+
+
 def compact_fused_operands(
     raw_sorted: jax.Array,
     bins,
@@ -101,31 +135,110 @@ def compact_fused_operands(
     depth-coherent, so chunks stay band-homogeneous without reordering).
     """
     num_g = raw_sorted.shape[1]
-    kk = bins.capacity
-    k_pad = max(block_g, -(-kk // block_g) * block_g)
-    idx = jnp.pad(
-        bins.indices, ((0, 0), (0, k_pad - kk)), constant_values=jnp.int32(num_g)
-    ).reshape(-1)
+    idx, nsteps, steps = _compact_indices(bins, num_g, block_g)
 
     raw_pad = jnp.concatenate(
         [raw_sorted, _sentinel_column(raw_sorted.dtype)], axis=1
     )
     raw_compact = raw_pad[:, idx]  # (RAW_ROWS, T * k_pad)
+    chunk_band = _chunk_bands(band_sorted, idx, bins, steps, block_g)
+    return raw_compact, nsteps, chunk_band, steps
 
-    nsteps = (
-        (bins.count + jnp.int32(block_g - 1)) // jnp.int32(block_g)
-    ).astype(jnp.float32)
-    steps = k_pad // block_g
 
-    if band_sorted is None:
-        chunk_band = jnp.zeros((bins.num_tiles, steps), jnp.float32)
-    else:
+def pack_quant_rows(
+    qg: quant.QuantizedGaussianParams,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantized cloud -> kernel operand planes (qf, qi, qdc), lane-major.
+
+    ``qf`` (QF_ROWS, N) f32 carries positions, quats, and the per-chunk
+    decode scales broadcast per lane (so a compacted chunk decodes from its
+    own scale rows even after the culled/tile gather reshuffles chunks);
+    ``qi`` (QI_ROWS, N) int8 is log-scales + opacity + SH bands 1-3 in raw
+    row order; ``qdc`` (QDC_ROWS, N) fp16 is the DC band. Row layout
+    documented at ``kernel.QF_ROWS``.
+    """
+    n = qg.num_gaussians
+    lane = jnp.repeat(
+        qg.scales, qg.chunk_size, axis=0, total_repeat_length=n
+    )  # (N, 5)
+    qf = jnp.concatenate(
+        [qg.positions, qg.quats, lane], axis=1
+    ).T.astype(jnp.float32)
+    qi = jnp.concatenate(
+        [
+            qg.log_scales_q,
+            qg.opacity_q[:, None],
+            qg.sh_rest_q.reshape(n, 45),  # basis-major x 3ch = raw 13:58
+        ],
+        axis=1,
+    ).T
+    qdc = qg.sh_dc.T
+    return qf, qi, qdc
+
+
+def _sentinel_columns_q() -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantized sentinel lane decoding to the invisible raw sentinel.
+
+    Codes are -127 with scale rows 10/127 and 30/127, so the decode lands
+    on (~-10 log scales, ~-30 opacity logit) — sigmoid ~1e-13, below the
+    alpha floor, lane masked out exactly like :func:`_sentinel_column`.
+    """
+    qf = jnp.zeros((k.QF_ROWS, 1), jnp.float32)
+    qf = qf.at[3, 0].set(1.0)  # quat w
+    qf = qf.at[7, 0].set(10.0 / 127.0)  # log-scales decode scale
+    qf = qf.at[8, 0].set(30.0 / 127.0)  # opacity decode scale
+    qf = qf.at[9:12, 0].set(1.0)  # SH band scales (codes are 0)
+    qi = jnp.zeros((k.QI_ROWS, 1), jnp.int8)
+    qi = qi.at[0:4, 0].set(-127)  # log scales + opacity logit
+    qdc = jnp.zeros((k.QDC_ROWS, 1), jnp.float16)
+    return qf, qi, qdc
+
+
+def compact_fused_operands_q(
+    qf_sorted: jax.Array,
+    qi_sorted: jax.Array,
+    qdc_sorted: jax.Array,
+    bins,
+    *,
+    band_sorted: jax.Array | None = None,
+    block_g: int = k.DEFAULT_BLOCK_G,
+):
+    """Quantized twin of :func:`compact_fused_operands` (same lane order).
+
+    Gathers the three quantized planes through the identical flattened tile
+    index list; only the f32/fp16 planes' gathers are differentiable (the
+    int8 plane is data, not a tangent carrier).
+
+    Under banding the compacted int8 SH codes are zeroed above each *lane's*
+    band: quantized storage keeps full-degree coefficients (band is a
+    per-camera distance LOD, not a property of the resident scene), but a
+    mixed-band chunk decodes at its max band — without the zeroing, a
+    low-band lane's above-band coefficients would leak into the color where
+    the f32 path's ``apply_sh_lod`` pre-zeroed them. Zero codes decode to
+    exact zeros, so the kernel's chunk-band decode reproduces the pre-zeroed
+    f32 path bitwise, and the backward's full-degree decode of the same
+    (zeroed) codes replays the forward features without any band mask.
+
+    Returns ``((qf_c, qi_c, qdc_c), nsteps, chunk_band, steps)``.
+    """
+    num_g = qf_sorted.shape[1]
+    idx, nsteps, steps = _compact_indices(bins, num_g, block_g)
+    sf, si, sdc = _sentinel_columns_q()
+    qf_c = jnp.concatenate([qf_sorted, sf], axis=1)[:, idx]
+    qi_c = jnp.concatenate([qi_sorted, si], axis=1)[:, idx]
+    qdc_c = jnp.concatenate([qdc_sorted, sdc], axis=1)[:, idx]
+    chunk_band = _chunk_bands(band_sorted, idx, bins, steps, block_g)
+    if band_sorted is not None:
         band_pad = jnp.concatenate(
             [band_sorted.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
         )
-        lane_band = band_pad[idx].reshape(bins.num_tiles, steps, block_g)
-        chunk_band = jnp.max(lane_band, axis=-1).astype(jnp.float32)
-    return raw_compact, nsteps, chunk_band, steps
+        lane_band = band_pad[idx]  # (T * steps * block_g,)
+        row_band = np.zeros((k.QI_ROWS,), np.int32)  # min band per qi row
+        for b, (_, (qlo, qhi), _) in enumerate(k._QBANDS, start=1):
+            row_band[qlo:qhi] = b
+        keep = jnp.asarray(row_band)[:, None] <= lane_band[None, :]
+        qi_c = jnp.where(keep, qi_c, jnp.int8(0))
+    return (qf_c, qi_c, qdc_c), nsteps, chunk_band, steps
 
 
 def build_fused_operands(
@@ -267,6 +380,111 @@ _fused_blend.defvjp(_fused_blend_fwd, _fused_blend_bwd)
 
 
 @functools.partial(
+    jax.custom_vjp, nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15)
+)
+def _fused_blend_q(
+    qf: jax.Array,  # (QF_ROWS, T * steps * block_g) f32
+    qi: jax.Array,  # (QI_ROWS, T * steps * block_g) int8
+    qdc: jax.Array,  # (QDC_ROWS, T * steps * block_g) fp16
+    cam_vec: jax.Array,  # (1, CAM_VEC_LEN)
+    pix: jax.Array,  # (T * TILE_PIX, 2)
+    bg4: jax.Array,  # (1, 4)
+    nsteps: jax.Array,  # (T,) float32
+    chunk_band: jax.Array,  # (T, steps) float32
+    num_tiles: int,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+    tiles_per_step: int,
+    interpret: bool,
+) -> jax.Array:
+    """Quantized fused blend -> (T * TILE_PIX, 4) rgb + transmittance.
+
+    Decode-then-VJP backward: gradients flow to the f32/fp16 planes (and
+    through them to the resident positions/quats/DC/scales) while the int8
+    plane gets a symbolic-zero (float0) cotangent — training against f32
+    master weights goes through ``quant.quantize_dequantize`` instead.
+    """
+    call = k.build_fused_q_pallas_call(
+        num_tiles,
+        steps,
+        block_g=block_g,
+        sh_degree=sh_degree,
+        banded=banded,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+        interpret=interpret,
+        dtype=qf.dtype,
+    )
+    return call(
+        nsteps.astype(jnp.int32),
+        chunk_band.astype(jnp.int32),
+        pix,
+        qf,
+        qi,
+        qdc,
+        cam_vec,
+        bg4,
+    )
+
+
+def _fused_blend_q_fwd(
+    qf, qi, qdc, cam_vec, pix, bg4, nsteps, chunk_band,
+    num_tiles, steps, block_g, sh_degree, banded, early_exit,
+    tiles_per_step, interpret,
+):
+    out = _fused_blend_q(
+        qf, qi, qdc, cam_vec, pix, bg4, nsteps, chunk_band,
+        num_tiles, steps, block_g, sh_degree, banded, early_exit,
+        tiles_per_step, interpret,
+    )
+    return out, (qf, qi, qdc, cam_vec, pix, nsteps, chunk_band, out)
+
+
+def _fused_blend_q_bwd(
+    num_tiles, steps, block_g, sh_degree, banded, early_exit,
+    tiles_per_step, interpret,
+    res, gout,
+):
+    qf, qi, qdc, cam_vec, pix, nsteps, chunk_band, out = res
+
+    # Replay decode+features at the full static degree. Exact under
+    # banding: the compacted int8 codes above each lane's band were zeroed
+    # at compaction, so the full-degree decode reproduces the forward
+    # kernel's chunk-band decode bitwise (the extra basis terms multiply
+    # exact zeros) — alphas/transmittance and the feature cotangent chain
+    # walk the forward trajectory.
+    def feat_fn(qf_, qdc_, cam_):
+        raw = k.decode_lanes(qf_, qi, qdc_, max_band=sh_degree)
+        return k.lane_features(raw, cam_, sh_degree=sh_degree)
+
+    feats, vjp_fn = jax.vjp(feat_fn, qf, qdc, cam_vec)
+    call = k.build_fused_bwd_pallas_call(
+        num_tiles,
+        steps,
+        block_g=block_g,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+        interpret=interpret,
+        dtype=feats.dtype,
+    )
+    dfeat = call(nsteps.astype(jnp.int32), pix, feats, out, gout)
+    dqf, dqdc, dcam = vjp_fn(dfeat)
+    dbg = jnp.sum(out[:, 3:4] * gout[:, 0:3], axis=0)
+    dbg4 = jnp.concatenate([dbg, jnp.zeros((1,), dbg.dtype)])[None, :]
+    dqi = np.zeros(qi.shape, jax.dtypes.float0)  # int8: symbolic zero
+    return (
+        dqf, dqi, dqdc, dcam, jnp.zeros_like(pix), dbg4,
+        jnp.zeros_like(nsteps), jnp.zeros_like(chunk_band),
+    )
+
+
+_fused_blend_q.defvjp(_fused_blend_q_fwd, _fused_blend_q_bwd)
+
+
+@functools.partial(
     jax.jit,
     static_argnames=(
         "tile_size", "capacity", "block_g", "tile_chunk", "sh_degree",
@@ -334,6 +552,110 @@ def fused_render(
 
     out = _fused_blend(
         raw_compact, cam_vec, pix, bg4, nsteps, chunk_band,
+        bins.num_tiles, steps, block_g, sh_degree,
+        band is not None, early_exit, tiles_per_step, interpret,
+    )
+    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
+    return img[: cam.height, : cam.width]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tile_size", "capacity", "block_g", "tile_chunk", "sh_degree",
+        "early_exit", "tiles_per_step", "interpret",
+    ),
+)
+def fused_render_q(
+    qg: quant.QuantizedGaussianParams,
+    cam: Camera,
+    background: jax.Array,
+    *,
+    band: jax.Array | None = None,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+    sh_degree: int = 3,
+    early_exit: bool = True,
+    tiles_per_step: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused render of a *quantized resident* cloud. Returns (H, W, 3).
+
+    Bitwise-equal to ``fused_render(quant.dequantize_gaussians(qg), ...)``:
+    the geometry pre-pass runs on the decoded geometry (decode is the same
+    elementwise ``q * scale`` the kernel performs, and SH never enters
+    degree-0 geometry), so sort order and tile lists match the f32 path on
+    the dequantized cloud exactly; the kernel then decodes the compacted
+    quantized chunks in-register before the identical feature/blend math.
+    Padding lanes (``qg.num_gaussians > num_real``) decode invisible and
+    sort behind every live Gaussian, leaving the tile lists unchanged.
+
+    ``band`` is a (num_gaussians,) per-lane SH LOD degree. Unlike the f32
+    path, quantized SH storage is *not* pre-zeroed above band — banding here
+    gates the decode itself (above-band coefficients are neither fetched
+    into f32 nor multiplied), which is the compose point with PR 5/6 LOD.
+    """
+    if tile_size * tile_size != k.TILE_PIX:
+        raise ValueError(
+            f"fused raster path requires tile_size^2 == {k.TILE_PIX}, "
+            f"got tile_size={tile_size}"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    bg = jnp.asarray(background, jnp.float32)
+    bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
+
+    # Geometry-only pre-pass on the decoded fields (zero SH — degree-0
+    # geometry never reads it). Discrete outputs (sort order, tile lists)
+    # only, so stop_gradient matches build_fused_operands.
+    log_scales, opacity = quant.dequantize_geometry(qg)
+    n = qg.num_gaussians
+    g_geo = GaussianParams(
+        positions=qg.positions,
+        quats=qg.quats,
+        log_scales=log_scales,
+        sh=jnp.zeros((n, 16, 3), jnp.float32),
+        opacity_logit=opacity,
+    )
+    geo = jax.tree.map(
+        jax.lax.stop_gradient,
+        feat_lib.compute_features_staged(g_geo, cam, sh_degree=0),
+    )
+    key = jnp.where(geo.mask > 0.5, geo.depth, jnp.inf)
+    order = jnp.argsort(key)
+    geo_sorted = jax.tree.map(lambda x: x[order], geo)
+    bins = bin_lib.bin_gaussians(
+        geo_sorted,
+        cam.height,
+        cam.width,
+        tile_size=tile_size,
+        capacity=capacity,
+        tile_chunk=tile_chunk,
+    )
+
+    qf, qi, qdc = pack_quant_rows(qg)
+    band_sorted = None if band is None else band[order]
+    (qf_c, qi_c, qdc_c), nsteps, chunk_band, steps = compact_fused_operands_q(
+        qf[:, order],
+        qi[:, order],
+        qdc[:, order],
+        bins,
+        band_sorted=band_sorted,
+        block_g=block_g,
+    )
+    cam_vec = pack_camera(cam)
+
+    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
+    h_pad, w_pad = tiles_y * tile_size, tiles_x * tile_size
+    pix = _tile_order_pixels(h_pad, w_pad, tile_size)
+    if tiles_per_step is None:
+        tiles_per_step = pick_tiles_per_step(bins.num_tiles)
+
+    out = _fused_blend_q(
+        qf_c, qi_c, qdc_c, cam_vec, pix, bg4, nsteps, chunk_band,
         bins.num_tiles, steps, block_g, sh_degree,
         band is not None, early_exit, tiles_per_step, interpret,
     )

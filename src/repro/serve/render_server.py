@@ -179,8 +179,13 @@ class RenderServer:
         if mode not in MODES:
             raise ValueError(f"mode={mode!r} not in {MODES}")
         self.config = as_config(config)
-        if self.config.cull and not isinstance(model, SceneTree):
-            model = build_scene_tree(model, leaf_size=self.config.leaf_size)
+        promote = self.config.cull or self.config.compress != "none"
+        if promote and not isinstance(model, SceneTree):
+            model = build_scene_tree(
+                model,
+                leaf_size=self.config.leaf_size,
+                compress=self.config.compress,
+            )
         self.model: GaussianParams | SceneTree = model
         if sizes is None:
             sizes = [(int(width), int(height))]
@@ -305,8 +310,20 @@ class RenderServer:
         """Blocking convenience wrapper around :meth:`submit`."""
         return self.submit(camera).result()
 
+    def memory_stats(self) -> dict | None:
+        """Resident-model footprint (``SceneTree.memory_stats``); None for
+        raw clouds served without promotion."""
+        if isinstance(self.model, SceneTree):
+            return self.model.memory_stats()
+        return None
+
     def stats(self) -> dict:
-        """Latency percentiles + slot/batch occupancy over the lifetime."""
+        """Latency percentiles + slot/batch occupancy over the lifetime.
+
+        ``memory`` reports the resident model's footprint (bytes by field,
+        compression ratio) when the server holds a :class:`SceneTree`;
+        ``None`` when serving a raw cloud.
+        """
         with self._lock:
             lat = np.asarray(self._latencies_ms, dtype=np.float64)
             sizes = np.asarray(self._batch_sizes, dtype=np.float64)
@@ -323,6 +340,7 @@ class RenderServer:
                 "latency_ms_mean": 0.0,
                 "mean_batch_size": 0.0,
                 "occupancy": 0.0,
+                "memory": self.memory_stats(),
             }
         return {
             "mode": self.mode,
@@ -334,6 +352,7 @@ class RenderServer:
             "latency_ms_mean": float(lat.mean()),
             "mean_batch_size": float(sizes.mean()),
             "occupancy": float(sizes.mean() / self.max_batch),
+            "memory": self.memory_stats(),
         }
 
     # -- continuous scheduler ---------------------------------------------

@@ -1,0 +1,461 @@
+"""Quantized resident scenes (``core.quant``) + decode-in-kernel raster.
+
+The contract under test is *exactness where exactness is claimed*: decode is
+``q.astype(f32) * scale`` everywhere, so the fused quantized render must be
+bitwise-equal to the fused f32 render of the dequantized cloud (unbanded,
+banded, early-exit on/off, culled tree), the straight-through estimator must
+be bitwise the image a quantized-resident tree produces, and gradients must
+flow to f32 masters unchanged. Accuracy (vs the *original* f32 scene) is a
+tolerance claim and tested as PSNR.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RenderConfig,
+    build_scene_tree,
+    clustered_gaussians,
+    dequantize_gaussians,
+    look_at_camera,
+    quantize_dequantize,
+    quantize_gaussians,
+    random_gaussians,
+    render,
+    visibility_stats,
+)
+from repro.core.quant import (
+    SCALE_COLS,
+    SH_BAND_SLICES,
+    f32_memory_stats,
+    quantized_memory_stats,
+)
+from repro.core.scene import SceneTree, apply_sh_lod
+from repro.distributed.compression import (
+    BLOCK,
+    dequantize_int8,
+    quantize_int8,
+    symmetric_scale,
+)
+from repro.kernels.fused_raster import fused_render, fused_render_q
+from repro.serve import RenderServer
+
+BG = (0.1, 0.2, 0.3)
+CHUNK = 128
+
+
+def _cam(eye=(0, 1.0, -6.0), target=(0, 0, 0), width=48, height=48):
+    return look_at_camera(eye, target, width=width, height=height)
+
+
+def _psnr(a, b) -> float:
+    mse = float(jnp.mean((jnp.asarray(a) - jnp.asarray(b)) ** 2))
+    return float("inf") if mse == 0.0 else -10.0 * math.log10(mse)
+
+
+def _bg():
+    return jnp.asarray(BG, jnp.float32)
+
+
+# -- satellite: zero-range / non-finite guards in the int8 compressor --------
+
+
+class TestQuantizeInt8Guards:
+    def test_all_zero_block_roundtrips_to_exact_zeros(self):
+        x = jnp.zeros((BLOCK + 44,), jnp.float32)
+        q, scale, n = quantize_int8(x)
+        assert bool(jnp.all(jnp.isfinite(scale))) and bool(jnp.all(scale > 0))
+        out = dequantize_int8(q, scale, n, x.shape)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_constant_block_roundtrip(self):
+        x = jnp.full((BLOCK,), 5.0, jnp.float32)
+        q, scale, n = quantize_int8(x)
+        out = dequantize_int8(q, scale, n, x.shape)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(np.asarray(out), 5.0, rtol=1 / 127)
+
+    def test_nonfinite_inputs_do_not_poison_the_block(self):
+        x = jnp.arange(BLOCK, dtype=jnp.float32) / BLOCK
+        x = x.at[3].set(jnp.nan).at[7].set(jnp.inf).at[11].set(-jnp.inf)
+        q, scale, n = quantize_int8(x)
+        out = np.asarray(dequantize_int8(q, scale, n, x.shape))
+        assert np.all(np.isfinite(out))
+        # Bad entries decode to 0; the rest round-trip within half a step.
+        np.testing.assert_array_equal(out[[3, 7, 11]], 0.0)
+        good = np.delete(np.arange(BLOCK), [3, 7, 11])
+        err = np.abs(out[good] - np.asarray(x)[good])
+        assert err.max() <= float(scale[0, 0]) / 2 + 1e-7
+
+    def test_non_multiple_of_block_shape(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, BLOCK + 17))
+        q, scale, n = quantize_int8(x)
+        assert n == x.size
+        out = dequantize_int8(q, scale, n, x.shape)
+        assert out.shape == x.shape
+        step = float(jnp.max(scale))
+        assert float(jnp.abs(out - x).max()) <= step / 2 + 1e-7
+
+    def test_symmetric_scale_fallbacks(self):
+        s = symmetric_scale(jnp.asarray([0.0, jnp.inf, jnp.nan, 127.0]))
+        np.testing.assert_allclose(
+            np.asarray(s), [1 / 127, 1 / 127, 1 / 127, 1.0], rtol=1e-6
+        )
+
+
+# -- quantize/dequantize round trips -----------------------------------------
+
+
+class TestQuantizeRoundTrip:
+    def _cloud(self, n=1000, seed=0):
+        return random_gaussians(jax.random.PRNGKey(seed), n, extent=1.5)
+
+    def test_non_multiple_of_chunk_shapes(self):
+        g = self._cloud(1000)
+        qg = quantize_gaussians(g, CHUNK)
+        assert qg.num_gaussians == 1024 and qg.num_real == 1000
+        assert qg.num_chunks == 8 and qg.scales.shape == (8, len(SCALE_COLS))
+        deq = dequantize_gaussians(qg)
+        assert deq.num_gaussians == 1000
+        for f in dataclasses.fields(deq):
+            got = getattr(deq, f.name)
+            want = getattr(g, f.name)
+            assert got.shape == want.shape, f.name
+            assert got.dtype == jnp.float32, f.name
+
+    def test_hot_fields_exact_and_dc_is_fp16(self):
+        g = self._cloud(512)
+        qg = quantize_gaussians(g, CHUNK)
+        deq = dequantize_gaussians(qg)
+        # Positions/quats stay f32: bitwise.
+        np.testing.assert_array_equal(
+            np.asarray(deq.positions), np.asarray(g.positions)
+        )
+        np.testing.assert_array_equal(np.asarray(deq.quats), np.asarray(g.quats))
+        # DC is exactly the fp16 cast (round-trip through fp16, nothing else).
+        assert qg.sh_dc.dtype == jnp.float16
+        np.testing.assert_array_equal(
+            np.asarray(deq.sh[:, 0, :]),
+            np.asarray(g.sh[:, 0, :].astype(jnp.float16).astype(jnp.float32)),
+        )
+
+    def test_per_band_scales_match_chunk_maxabs(self):
+        g = self._cloud(512)
+        qg = quantize_gaussians(g, CHUNK)
+        sh = np.asarray(g.sh).reshape(512 // CHUNK, CHUNK, 16, 3)
+        for b, (lo, hi) in enumerate(SH_BAND_SLICES):
+            want = np.abs(sh[:, :, lo:hi, :]).max(axis=(1, 2, 3)) / 127.0
+            np.testing.assert_allclose(
+                np.asarray(qg.scales[:, 2 + b]), want, rtol=1e-6,
+                err_msg=f"band {b + 1}",
+            )
+
+    def test_roundtrip_error_bounded_by_half_a_step(self):
+        g = self._cloud(1024)
+        qg = quantize_gaussians(g, CHUNK)
+        deq = dequantize_gaussians(qg)
+        m = qg.num_chunks
+
+        def _chunk_max_err(got, want):
+            return np.abs(
+                np.asarray(got - want).reshape(m, -1)
+            ).max(axis=1)
+
+        step = np.asarray(qg.scales)
+        assert (
+            _chunk_max_err(deq.log_scales, g.log_scales)
+            <= step[:, 0] / 2 + 1e-6
+        ).all()
+        assert (
+            _chunk_max_err(deq.opacity_logit, g.opacity_logit)
+            <= step[:, 1] / 2 + 1e-6
+        ).all()
+        for b, (lo, hi) in enumerate(SH_BAND_SLICES):
+            assert (
+                _chunk_max_err(deq.sh[:, lo:hi, :], g.sh[:, lo:hi, :])
+                <= step[:, 2 + b] / 2 + 1e-6
+            ).all(), f"band {b + 1}"
+
+    def test_zero_sh_bands_decode_to_exact_zeros(self):
+        """COLMAP-seeded clouds have all-zero SH bands 1-3 — the zero-range
+        guard must give them a positive scale and exact-zero decode."""
+        g = self._cloud(256)
+        g = dataclasses.replace(g, sh=g.sh.at[:, 1:, :].set(0.0))
+        qg = quantize_gaussians(g, CHUNK)
+        assert bool(jnp.all(qg.scales > 0))
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_gaussians(qg).sh[:, 1:, :]), 0.0
+        )
+
+
+# -- straight-through estimator ----------------------------------------------
+
+
+class TestStraightThroughEstimator:
+    def test_forward_is_the_quantized_cloud(self):
+        g = random_gaussians(jax.random.PRNGKey(1), 777, extent=1.5)
+        ste = quantize_dequantize(g, CHUNK)
+        want = dequantize_gaussians(quantize_gaussians(g, CHUNK))
+        for f in dataclasses.fields(g):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ste, f.name)),
+                np.asarray(getattr(want, f.name)),
+                err_msg=f.name,
+            )
+
+    def test_gradients_pass_through_to_f32_masters(self):
+        g = random_gaussians(jax.random.PRNGKey(2), 256, extent=1.5)
+        w_pos = jnp.arange(256 * 3, dtype=jnp.float32).reshape(256, 3)
+        w_sh = jnp.sin(jnp.arange(256 * 16 * 3, dtype=jnp.float32)).reshape(
+            256, 16, 3
+        )
+
+        def loss(gg):
+            q = quantize_dequantize(gg, CHUNK)
+            return jnp.sum(q.positions * w_pos) + jnp.sum(q.sh * w_sh)
+
+        grads = jax.grad(loss)(g)
+        # Identity VJP: cotangents land on the masters unchanged, even
+        # through the int8 rounding of the forward.
+        np.testing.assert_array_equal(np.asarray(grads.positions), w_pos)
+        np.testing.assert_array_equal(np.asarray(grads.sh), w_sh)
+        np.testing.assert_array_equal(np.asarray(grads.opacity_logit), 0.0)
+
+
+# -- memory accounting -------------------------------------------------------
+
+
+class TestMemoryStats:
+    def test_quantized_ratio_and_sh_reduction(self):
+        g = random_gaussians(jax.random.PRNGKey(0), 4096, extent=1.5)
+        qs = quantized_memory_stats(quantize_gaussians(g, 256))
+        fs = f32_memory_stats(g)
+        assert qs["compressed"] and not fs["compressed"]
+        assert qs["ratio_vs_f32"] <= 0.45  # issue acceptance floor
+        assert qs["ratio_vs_f32"] <= 0.36  # 83/236 + chunk scales
+        assert fs["sh_bytes"] / qs["sh_bytes"] >= 3.0
+        assert fs["ratio_vs_f32"] == pytest.approx(1.0)
+        # Per-field accounting sums to the total.
+        assert sum(qs["fields"].values()) == qs["total_bytes"]
+
+    def test_scene_tree_memory_stats_schema(self):
+        g = random_gaussians(jax.random.PRNGKey(3), 1000, extent=1.5)
+        for compress, flag in (("none", False), ("int8", True)):
+            tree = build_scene_tree(g, leaf_size=CHUNK, compress=compress)
+            assert tree.compressed is flag
+            st = tree.memory_stats()
+            for key in (
+                "compressed", "fields", "sh_bands", "sh_bytes",
+                "total_bytes", "ratio_vs_f32", "aabb_bytes", "num_chunks",
+            ):
+                assert key in st, key
+            assert st["compressed"] is flag
+            assert st["num_chunks"] == 8
+
+
+# -- fused raster: decode-in-kernel exactness --------------------------------
+
+
+class TestFusedQuantizedRender:
+    def _scene(self, kind, n=2048, seed=0):
+        key = jax.random.PRNGKey(seed)
+        if kind == "uniform":
+            return random_gaussians(key, n, extent=1.5)
+        return clustered_gaussians(key, n)
+
+    @pytest.mark.parametrize("kind", ["uniform", "clustered"])
+    @pytest.mark.parametrize("early_exit", [False, True])
+    def test_bitwise_equals_fused_f32_of_dequantized(self, kind, early_exit):
+        g = self._scene(kind)
+        qg = quantize_gaussians(g, CHUNK)
+        cam = _cam()
+        got = fused_render_q(qg, cam, _bg(), early_exit=early_exit)
+        want = fused_render(
+            dequantize_gaussians(qg), cam, _bg(), early_exit=early_exit
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_banded_bitwise_with_mixed_band_chunks(self):
+        """Per-Gaussian SH bands that differ *within* a chunk: low-band
+        lanes must not leak their (stored) above-band codes when the chunk
+        decodes at its max band."""
+        g = self._scene("clustered", n=2048, seed=4)
+        qg = quantize_gaussians(g, CHUNK)
+        band = jax.random.randint(jax.random.PRNGKey(5), (2048,), 0, 4)
+        cam = _cam()
+        got = fused_render_q(qg, cam, _bg(), band=band)
+        deq = dequantize_gaussians(qg)
+        deq = dataclasses.replace(deq, sh=apply_sh_lod(deq.sh, band))
+        want = fused_render(deq, cam, _bg(), band=band)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_padding_chunks_render_invisible(self):
+        """Non-multiple-of-chunk cloud: the quantized pad rows must not
+        contribute — same image as the stripped dequantized cloud."""
+        g = self._scene("uniform", n=1000, seed=6)
+        qg = quantize_gaussians(g, CHUNK)  # pads 1000 -> 1024
+        cam = _cam()
+        got = fused_render_q(qg, cam, _bg())
+        want = fused_render(dequantize_gaussians(qg), cam, _bg())
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("kind", ["uniform", "clustered"])
+    def test_psnr_vs_f32_scene(self, kind):
+        g = self._scene(kind, seed=7)
+        qg = quantize_gaussians(g, CHUNK)
+        cam = _cam(width=64, height=64)
+        q_img = fused_render_q(qg, cam, _bg())
+        f_img = fused_render(g, cam, _bg())
+        assert _psnr(q_img, f_img) >= 35.0
+
+    def test_gradients_match_f32_path(self):
+        """Decode-then-VJP: grads w.r.t. the f32 fields of the quantized
+        pytree equal the f32 fused path's grads at the dequantized point
+        (int8 codes are constants; DC grads arrive in fp16)."""
+        g = self._scene("uniform", n=512, seed=8)
+        qg = quantize_gaussians(g, CHUNK)
+        deq = dequantize_gaussians(qg)
+        cam = _cam(width=32, height=32)
+
+        def loss_q(pos):
+            qg2 = dataclasses.replace(qg, positions=pos)
+            return jnp.sum(fused_render_q(qg2, cam, _bg()))
+
+        def loss_f(pos):
+            g2 = dataclasses.replace(deq, positions=pos)
+            return jnp.sum(fused_render(g2, cam, _bg()))
+
+        dq = jax.grad(loss_q)(qg.positions)
+        df = jax.grad(loss_f)(deq.positions)
+        np.testing.assert_array_equal(np.asarray(dq), np.asarray(df))
+
+        ddc = jax.grad(
+            lambda dc: jnp.sum(
+                fused_render_q(
+                    dataclasses.replace(qg, sh_dc=dc), cam, _bg()
+                )
+            )
+        )(qg.sh_dc)
+        assert ddc.dtype == jnp.float16
+        assert bool(jnp.all(jnp.isfinite(ddc)))
+        assert float(jnp.abs(ddc).max()) > 0.0
+
+
+# -- compressed SceneTree through the public render() ------------------------
+
+
+class TestCompressedTreeRender:
+    def _setup(self, **cfg_kw):
+        g = clustered_gaussians(jax.random.PRNGKey(9), 4096, num_clusters=8)
+        tree_f = build_scene_tree(g, leaf_size=CHUNK)
+        tree_q = build_scene_tree(g, leaf_size=CHUNK, compress="int8")
+        cam = _cam(eye=(0.3, 0.2, -0.4), target=(2.0, 0.2, 0.5))
+        cfg = RenderConfig(
+            raster_path="pallas_fused", background=BG, cull=True, **cfg_kw
+        )
+        stats = visibility_stats(tree_f, cam, cfg)
+        assert 0 < stats["num_visible"] < tree_f.num_chunks
+        cfg = cfg.replace(visible_capacity=stats["num_visible"])
+        return tree_f, tree_q, cam, cfg
+
+    def test_culled_quantized_matches_ste_bitwise(self):
+        """A compressed resident tree and the straight-through estimator on
+        the f32 tree must produce the *same image bitwise* — gathered slots
+        are whole leaves, so the chunk statistics (and hence scales and
+        codes) are identical."""
+        tree_f, tree_q, cam, cfg = self._setup()
+        got = render(tree_q, cam, cfg)
+        ste = render(tree_f, cam, cfg.replace(compress="int8"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ste))
+
+    def test_culled_banded_quantized_matches_ste_bitwise(self):
+        tree_f, tree_q, cam, cfg = self._setup(lod_thresholds=(0.4, 1.2))
+        got = render(tree_q, cam, cfg)
+        ste = render(tree_f, cam, cfg.replace(compress="int8"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ste))
+
+    def test_culled_quantized_psnr_vs_f32(self):
+        tree_f, tree_q, cam, cfg = self._setup()
+        q_img = render(tree_q, cam, cfg)
+        f_img = render(tree_f, cam, cfg)
+        assert _psnr(q_img, f_img) >= 35.0
+
+    def test_nonfused_path_decodes_resident_tree(self):
+        """raster_path != pallas_fused dequantizes the resolve — the
+        compressed tree stays renderable on every path."""
+        tree_f, tree_q, cam, cfg = self._setup()
+        cfg = cfg.replace(raster_path="binned", early_exit=False)
+        q_img = render(tree_q, cam, cfg)
+        f_img = render(tree_f, cam, cfg)
+        assert _psnr(q_img, f_img) >= 35.0
+
+
+# -- serving -----------------------------------------------------------------
+
+
+class TestRenderServerCompress:
+    def test_server_promotes_and_reports_memory(self):
+        g = random_gaussians(jax.random.PRNGKey(10), 512, extent=1.5)
+        cfg = RenderConfig(
+            raster_path="binned",
+            tile_capacity=64,
+            early_exit=False,
+            compress="int8",
+            leaf_size=64,
+        )
+        cam = look_at_camera((0, 1.0, -5.0), (0, 0, 0), width=32, height=32)
+        server = RenderServer(g, cfg, width=32, height=32, max_batch=2)
+        assert isinstance(server.model, SceneTree) and server.model.compressed
+        mem = server.stats()["memory"]
+        assert mem is not None and mem["compressed"]
+        assert mem["ratio_vs_f32"] <= 0.45
+        with server:
+            got = server.render(cam).image
+        want = np.asarray(render(server.model, cam, cfg))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_uncompressed_raw_cloud_reports_no_memory(self):
+        g = random_gaussians(jax.random.PRNGKey(11), 64, extent=1.5)
+        cfg = RenderConfig(raster_path="binned", tile_capacity=64)
+        server = RenderServer(g, cfg, width=32, height=32)
+        assert server.stats()["memory"] is None
+
+
+# -- sharded: all-gather quantized records, decode per device ----------------
+
+
+@pytest.mark.slow
+class TestShardedQuantizedRender:
+    def test_sharded_fused_quantized_tree(self, run_multidevice):
+        run_multidevice(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.compat import make_mesh
+            from repro.core import (RenderConfig, build_scene_tree,
+                                    random_gaussians, render)
+            from repro.core.camera import orbit_cameras
+            from repro.core.pipeline import sharded_render_batch
+
+            mesh = make_mesh((2, 2, 2), ("gs", "cam", "px"))
+            g = random_gaussians(jax.random.PRNGKey(0), 512, extent=1.5)
+            tree = build_scene_tree(g, leaf_size=64, compress="int8")
+            cfg = RenderConfig(raster_path="pallas_fused", early_exit=False,
+                               cull=True, visible_capacity=4)
+            cams = orbit_cameras(2, radius=5.0, width=32, height=32,
+                                 stacked=True)
+            fn = sharded_render_batch(mesh, ("gs",), ("cam",), ("px",),
+                                      config=cfg)
+            out = fn(tree, cams, jnp.zeros(3))
+            for i in range(2):
+                want = render(tree, cams.camera(i), cfg.replace(cull=False))
+                err = float(jnp.abs(out[i] - want).max())
+                assert err < 1e-5, err
+            print("ok")
+            """,
+            devices=8,
+        )
