@@ -42,7 +42,9 @@ from repro.core import (
     random_gaussians,
     visibility_stats,
 )
-from repro.core.render import render_jit
+from repro.core.render import render_jit, render_with_stats
+from repro.obs.metrics import Registry
+from repro.obs.pipeline import fold_render_stats
 
 IMAGE_SIZE = 256
 CAMERAS = 2
@@ -162,6 +164,23 @@ def bench_scene(
         f"{lod_req_s / binned_req_s:.2f}x_binned",
     )
 
+    # Pipeline-health registry snapshot (repro.obs): the fused kernel's
+    # in-kernel counters (chunks before early exit, lanes blended, max SH
+    # band) plus cull visibility for the first camera, folded under the
+    # same canonical series names the server's /metrics endpoint exports.
+    registry = Registry()
+    _, st = render_with_stats(
+        tree, cams[0], cfg_fused.replace(collect_stats=True)
+    )
+    kernel_agg = fold_render_stats(
+        registry, st, scene=kind, gaussians=str(n)
+    )
+    emit(
+        f"{tag}_early_exit_savings",
+        kernel_agg["early_exit_savings"],
+        f"{kernel_agg['early_exit_savings']:.1%}_of_assigned_chunks",
+    )
+
     entry = {
         "gaussians": n,
         "image_size": image_size,
@@ -170,6 +189,8 @@ def bench_scene(
         "visible_fraction_mean": float(
             np.mean([s["visible_fraction"] for s in stats])
         ),
+        "kernel_stats": kernel_agg,
+        "registry": registry.snapshot(),
         "binned_req_s": binned_req_s,
         "fused_req_s": fused_req_s,
         "fused_speedup": speedup,

@@ -1,0 +1,244 @@
+"""Observability: pipeline-health registry snapshot + serving telemetry smoke.
+
+Everything the ``repro.obs`` subsystem measures, exercised end to end and
+persisted machine-readably:
+
+* ``--tiny`` (the CI smoke) replays the ``bench_serving --tiny`` load shape
+  through a continuous-batching :class:`repro.serve.RenderServer` with a
+  metrics registry and a tracer attached, then validates the whole export
+  surface: the Prometheus text exposition is fetched over HTTP from a live
+  ``serve_metrics`` endpoint and schema-checked (``validate_prometheus``),
+  the Chrome trace JSON is written to ``--trace-out`` and schema-checked
+  (``validate_trace``, the same file Perfetto loads), the ``stats()``
+  schema is pinned, and the stats memory is asserted bounded (ring
+  buffers, no unbounded per-request lists). One small ``pallas_fused``
+  render with ``collect_stats`` folds in-kernel counters into the same
+  registry so the snapshot covers every metric family.
+* full mode (default; ``benchmarks/run.py``) renders the headline 500k
+  clustered culled + fused + int8-resident config under
+  ``render_with_stats`` and folds the in-kernel diagnostics plane (chunks
+  processed before early exit, lanes blended, max SH band decoded), cull
+  visibility fraction, compacted lane/chunk occupancy (the
+  ``pallas_binned`` view of the same scene) and quantized resident bytes
+  into one registry whose ``snapshot()`` lands in ``BENCH_PR8.json`` —
+  rendered as a pipeline-health table by ``report.py --section obs``.
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--tiny]
+        [--trace-out /tmp/serve_trace.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import urllib.request
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    RenderConfig,
+    build_scene_tree,
+    orbit_cameras,
+    random_gaussians,
+)
+from repro.core.render import render_with_stats
+from repro.obs.metrics import Registry, serve_metrics, validate_prometheus
+from repro.obs.pipeline import fold_memory, fold_render_stats
+from repro.obs.tracing import Tracer, validate_trace
+from repro.serve import RenderServer, replay_schedule
+
+# Full-mode headline config (matches bench_fused's 500k clustered entry).
+N = 500_000
+SIZE = 256
+LEAF_SIZE = 256
+LOD_THRESHOLDS = (0.2, 0.5)
+
+# Tiny mode replicates the bench_serving --tiny load shape.
+TINY_N = 4_096
+TINY_SIZE = 96
+TINY_REQUESTS = 24
+TINY_BATCH = 8
+
+STATS_KEYS = {
+    "mode", "requests", "batches", "compile_ms", "latency_ms_p50",
+    "latency_ms_p95", "latency_ms_mean", "mean_batch_size", "occupancy",
+    "memory",
+}
+
+
+def _serve_load(registry: Registry, tracer: Tracer) -> dict:
+    """Replay a burst of requests through a continuous server that reports
+    into ``registry``/``tracer``; returns its ``stats()``."""
+    g = random_gaussians(jax.random.PRNGKey(0), TINY_N, extent=1.5)
+    cfg = RenderConfig(raster_path="binned")
+    cams = orbit_cameras(
+        TINY_REQUESTS, radius=5.0, width=TINY_SIZE, height=TINY_SIZE
+    )
+    server = RenderServer(
+        g, cfg, width=TINY_SIZE, height=TINY_SIZE, max_batch=TINY_BATCH,
+        registry=registry, tracer=tracer,
+    )
+    with server:
+        results, wall = replay_schedule(
+            server.submit, cams, np.zeros(len(cams))
+        )
+    stats = server.stats()
+    assert set(stats) == STATS_KEYS, sorted(stats)
+    # Bounded memory: percentiles come from a fixed ring, and the old
+    # unbounded per-request lists are gone.
+    assert len(server._lat._ring) == server.registry.histogram(
+        "render_server_latency_ms"
+    ).ring_size
+    assert not hasattr(server, "_latencies_ms")
+    assert not hasattr(server, "_batch_sizes")
+    emit(
+        "obs/serve_tiny_req_s",
+        1e6 * wall / len(results),
+        f"{len(results) / wall:.2f}req_s",
+    )
+    return stats
+
+
+def _fold_kernel_smoke(registry: Registry) -> None:
+    """One small fused render with collect_stats, folded into ``registry``
+    so the tiny snapshot covers the in-kernel counter families too."""
+    g = random_gaussians(jax.random.PRNGKey(1), 2_048, extent=1.5)
+    cam = orbit_cameras(1, radius=5.0, width=64, height=64)[0]
+    cfg = RenderConfig(
+        raster_path="pallas_fused", tile_capacity=128, collect_stats=True
+    )
+    _, st = render_with_stats(g, cam, cfg)
+    fold_render_stats(registry, st, surface="smoke")
+
+
+def tiny(trace_out: str | None) -> dict:
+    registry, tracer = Registry(), Tracer()
+    stats = _serve_load(registry, tracer)
+    _fold_kernel_smoke(registry)
+
+    # Export surface 1: Prometheus text, fetched from a live endpoint.
+    http = serve_metrics(registry, port=0)
+    try:
+        port = http.server_address[1]
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics"
+        ) as resp:
+            text = resp.read().decode()
+    finally:
+        http.shutdown()
+    families = validate_prometheus(text)
+    for fam in (
+        "render_server_latency_ms",
+        "render_server_batch_size",
+        "render_server_requests_total",
+        "render_chunks_processed",
+    ):
+        assert fam in families, (fam, sorted(families))
+
+    # Export surface 2: the Chrome trace JSON Perfetto loads.
+    if trace_out is None:
+        trace_out = tempfile.mktemp(suffix=".json", prefix="serve_trace_")
+    tracer.save(trace_out)
+    with open(trace_out) as f:
+        trace = json.load(f)
+    n_events = validate_trace(trace)
+    names = {e["name"] for e in trace["traceEvents"] if e.get("ph") == "X"}
+    assert {"queue", "render", "harvest", "warmup_compile"} <= names, names
+
+    print(
+        f"# tiny smoke OK: {len(families)} metric families validated, "
+        f"{n_events} trace events validated ({trace_out}), "
+        f"server p95 {stats['latency_ms_p95']:.1f} ms"
+    )
+    return {
+        "mode": "tiny",
+        "server_stats": {k: v for k, v in stats.items() if k != "memory"},
+        "prometheus_families": sorted(families),
+        "trace_events": n_events,
+        "registry": registry.snapshot(),
+    }
+
+
+def full() -> dict:
+    from benchmarks.bench_fused import inside_cameras, make_scene
+
+    g = make_scene("clustered", N)
+    tree = build_scene_tree(g, leaf_size=LEAF_SIZE, compress="int8")
+    cam = inside_cameras(1, SIZE)[0]
+    registry = Registry()
+
+    base = RenderConfig(
+        cull=True, compress="int8", lod_thresholds=LOD_THRESHOLDS,
+        collect_stats=True,
+    )
+    # In-kernel diagnostics plane + cull visibility on the headline
+    # culled + fused + int8 decode-in-kernel config.
+    _, st_fused = render_with_stats(
+        tree, cam, base.replace(raster_path="pallas_fused")
+    )
+    agg = fold_render_stats(registry, st_fused, config="culled_fused_int8")
+    # Lane/chunk occupancy is a property of the compacted tile lists; the
+    # pallas_binned view of the same scene measures it host-side.
+    _, st_binned = render_with_stats(
+        tree, cam, base.replace(raster_path="pallas_binned")
+    )
+    fold_render_stats(registry, st_binned, config="culled_binned_int8")
+    fold_memory(registry, tree.memory_stats(), config="culled_fused_int8")
+
+    vis = st_fused["visibility"]
+    emit(
+        "obs/cull_visible_fraction",
+        vis["visible_fraction"],
+        f"{vis['visible_fraction']:.1%}",
+    )
+    emit(
+        "obs/early_exit_savings",
+        agg["early_exit_savings"],
+        f"{agg['early_exit_savings']:.1%}_of_assigned_chunks",
+    )
+    emit(
+        "obs/chunk_occupancy_measured",
+        agg["chunk_occupancy_measured"],
+        f"{agg['chunk_occupancy_measured']:.1%}_lanes_live",
+    )
+    mem = tree.memory_stats()
+    emit(
+        "obs/resident_bytes",
+        mem["total_bytes"],
+        f"{mem['total_bytes'] / 1e6:.1f}MB_{mem['ratio_vs_f32']:.3f}x_f32",
+    )
+    return {
+        "mode": "full",
+        "gaussians": N,
+        "image_size": SIZE,
+        "kernel": agg,
+        "visibility": vis,
+        "registry": registry.snapshot(),
+    }
+
+
+def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="CI smoke: short continuous-batching serve, validates the "
+        "Prometheus exposition + Chrome trace schema end to end",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="where --tiny writes the Chrome trace JSON (default: a temp "
+        "file)",
+    )
+    args = ap.parse_args(list(argv))
+    return tiny(args.trace_out) if args.tiny else full()
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -156,6 +156,14 @@ def render_throughput(tiny: bool = False) -> dict:
     from repro.core.binning import lane_occupancy_stats
     from repro.core.features import compute_features_fused
     from repro.core.rasterize import sort_by_depth
+    from repro.obs.metrics import Registry
+    from repro.obs.pipeline import fold_memory, fold_occupancy
+
+    # Occupancy/memory also land in a metrics registry (repro.obs): the
+    # snapshot below uses the same canonical series names the render
+    # server exports, so BENCH_PR*.json and a live /metrics endpoint are
+    # directly comparable.
+    registry = Registry()
 
     n = TINY_N if tiny else RENDER_N
     size = TINY_SIZE if tiny else RENDER_SIZE
@@ -210,6 +218,7 @@ def render_throughput(tiny: bool = False) -> dict:
             capacity=base_cfg.tile_capacity,
             block_g=base_cfg.block_g,
         )
+        fold_occupancy(registry, occ, scene=scene)
 
         for path, s in speedups.items():
             emit(f"table2/{scene}_render_{path}_speedup", s, f"{s:.2f}x")
@@ -264,6 +273,9 @@ def render_throughput(tiny: bool = False) -> dict:
         f"{memory['int8']['total_bytes'] / 1e6:.1f}MB_{byte_ratio:.3f}x",
     )
     metrics["memory"] = memory
+    for mode, mem in memory.items():
+        fold_memory(registry, mem, compress=mode)
+    metrics["registry"] = registry.snapshot()
 
     if tiny:
         uni = metrics["scenes"]["uniform"]

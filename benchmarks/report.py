@@ -111,6 +111,63 @@ def trajectory_table(repo_root: str | os.PathLike) -> str:
     return header + "\n".join(rows) + "\n"
 
 
+def obs_table(repo_root: str | os.PathLike) -> str:
+    """Pipeline-health table from the newest registry snapshot on disk.
+
+    Walks ``BENCH_PR*.json`` newest-first for a ``repro.obs`` registry
+    snapshot (``bench_obs`` first, then the per-scene snapshots inside
+    ``bench_fused`` / ``bench_table2_throughput``) and renders every
+    series: gauges/counters as values, histograms as count + p50/p95.
+    The series names match the render server's ``/metrics`` exposition,
+    so this table reads like a point-in-time scrape of the benchmark.
+    """
+    paths = sorted(
+        glob.glob(os.path.join(os.fspath(repo_root), "BENCH_PR*.json")),
+        key=lambda p: int(re.search(r"BENCH_PR(\d+)", p).group(1)),
+        reverse=True,
+    )
+    snap, source = None, None
+    for path in paths:
+        with open(path) as f:
+            d = json.load(f)
+        snap = (
+            _dig(d, "bench_obs", "registry")
+            or _dig(_largest_scene(d.get("bench_fused")) or {}, "registry")
+            or _dig(d, "bench_table2_throughput", "render", "registry")
+        )
+        if snap:
+            source = os.path.basename(path)
+            break
+    if not snap:
+        return (
+            "### Pipeline health\n\nNo registry snapshot found in any "
+            "BENCH_PR*.json — run `python -m benchmarks.run` (or "
+            "`python -m benchmarks.bench_obs`).\n"
+        )
+    lines = [
+        f"### Pipeline health (`repro.obs` registry snapshot, {source})\n",
+        "| metric | type | labels | value |",
+        "|---|---|---|---|",
+    ]
+    for name in sorted(snap):
+        fam = snap[name]
+        for s in fam.get("series", []):
+            labels = ",".join(
+                f"{k}={v}" for k, v in sorted(s.get("labels", {}).items())
+            ) or "—"
+            if fam.get("type") == "histogram":
+                sm = s.get("summary", {})
+                value = (
+                    f"n={sm.get('count', 0)} "
+                    f"p50={_fmt(sm.get('p50'), '.4g')} "
+                    f"p95={_fmt(sm.get('p95'), '.4g')}"
+                )
+            else:
+                value = _fmt(s.get("value"), ".4g")
+            lines.append(f"| {name} | {fam.get('type')} | {labels} | {value} |")
+    return "\n".join(lines) + "\n"
+
+
 def load(results_dir: str) -> dict:
     out = {}
     for path in glob.glob(os.path.join(results_dir, "*.json")):
@@ -210,7 +267,7 @@ def main() -> None:
     ap.add_argument(
         "--section",
         default="all",
-        choices=["all", "roofline", "dryrun", "trajectory"],
+        choices=["all", "roofline", "dryrun", "trajectory", "obs"],
     )
     ap.add_argument(
         "--repo",
@@ -220,6 +277,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.section == "trajectory":
         print(trajectory_table(args.repo))
+        return
+    if args.section == "obs":
+        print(obs_table(args.repo))
         return
     cells = load(args.results)
     if args.section in ("all", "dryrun"):

@@ -1,11 +1,13 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR7.json`` — the machine-readable perf trajectory (render
+writes ``BENCH_PR8.json`` — the machine-readable perf trajectory (render
 speedups, max-error, lane + chunk occupancy, batched-serving throughput/
 occupancy/latency, continuous-vs-microbatch scheduler sweep, culled-octree
 throughput + visible-fraction stats, fused-vs-unfused raster throughput and
-error decomposition, quantized-resident bytes/req-s/PSNR) — to the repo
+error decomposition, quantized-resident bytes/req-s/PSNR, and the
+``repro.obs`` metrics-registry snapshot: in-kernel early-exit depth,
+lane/chunk occupancy, cull visibility, resident bytes) — to the repo
 root, then collates every checked-in ``BENCH_PR*.json`` into the
 ``BENCH_TRAJECTORY.md`` perf-trajectory table (``benchmarks.report``).
 """
@@ -18,7 +20,7 @@ import sys
 import traceback
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-BENCH_JSON = REPO_ROOT / "BENCH_PR7.json"
+BENCH_JSON = REPO_ROOT / "BENCH_PR8.json"
 
 
 def main() -> None:
@@ -28,6 +30,7 @@ def main() -> None:
         bench_fig5_parallelism,
         bench_fused,
         bench_lm_steps,
+        bench_obs,
         bench_serving,
         bench_table1_kernels,
         bench_table2_throughput,
@@ -45,6 +48,7 @@ def main() -> None:
         bench_culling,
         bench_fused,
         bench_compress,
+        bench_obs,
     ):
         try:
             section = mod.main()

@@ -20,6 +20,16 @@ round-robining requests across sizes.
 
     PYTHONPATH=src python examples/serve_render.py [--requests 32]
         [--arrival-rate 8] [--burst 3] [--mixed-sizes]
+        [--metrics-port 9100] [--trace-out trace.json]
+
+Observability (``repro.obs``): every server in the comparison reports into
+one shared metrics registry. ``--metrics-port`` serves it as Prometheus
+text at ``/metrics`` for the duration of the run (port 0 picks a free
+one); ``--trace-out`` writes a Chrome trace-event JSON with per-slot
+request spans — drag it into https://ui.perfetto.dev to see admission
+waits, step packing, and the dispatch-ahead-of-harvest overlap. Compile
+times are printed from the registry's ``render_server_compile_ms`` gauge,
+the same series the endpoint exports.
 """
 
 import argparse
@@ -30,6 +40,8 @@ import numpy as np
 
 from repro.core import RenderConfig, orbit_cameras, random_gaussians
 from repro.core.render import render_jit
+from repro.obs.metrics import Registry, serve_metrics
+from repro.obs.tracing import Tracer, span
 from repro.serve import RenderServer, replay_schedule
 
 
@@ -100,9 +112,31 @@ def main() -> None:
         "quantized SceneTree (decode-in-kernel on pallas_fused; ~0.35x "
         "f32 resident bytes — the server reports the exact footprint)",
     )
+    ap.add_argument(
+        "--metrics-port",
+        type=int,
+        default=None,
+        help="serve the shared metrics registry as Prometheus text at "
+        "/metrics on this port for the duration of the run (0 = pick a "
+        "free port)",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="write a Chrome trace-event JSON (Perfetto-loadable) with "
+        "per-slot request spans to this path",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     args.burst = max(1, args.burst)
+
+    registry = Registry()
+    tracer = Tracer() if args.trace_out else None
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = serve_metrics(registry, port=args.metrics_port)
+        port = metrics_server.server_address[1]
+        print(f"metrics: http://127.0.0.1:{port}/metrics")
 
     model = random_gaussians(jax.random.PRNGKey(0), args.gaussians, extent=1.5)
     config = RenderConfig(
@@ -135,10 +169,23 @@ def main() -> None:
 
     # --- sequential baseline (the pre-batching serving path) --------------
     # Explicit warmup: compile time is reported on its own line, never
-    # folded into request 0's latency.
+    # folded into request 0's latency. The measurement lands in the shared
+    # registry (same gauge the servers report into) and is printed from
+    # there — one source of truth for the /metrics endpoint and stdout.
+    compile_gauge = registry.gauge(
+        "render_server_compile_ms",
+        "Warmup compile time per image-size bucket (ms)",
+    )
     t0 = time.perf_counter()
-    render_jit(model, cams[0], config).block_until_ready()
-    print(f"sequential compile: {(time.perf_counter() - t0) * 1e3:.0f} ms")
+    with span("warmup_compile", tracer=tracer, mode="sequential"):
+        render_jit(model, cams[0], config).block_until_ready()
+    compile_gauge.set(
+        (time.perf_counter() - t0) * 1e3, bucket="total", mode="sequential"
+    )
+    print(
+        "sequential compile: "
+        f"{compile_gauge.value(bucket='total', mode='sequential'):.0f} ms"
+    )
 
     seq_lat = []
 
@@ -167,8 +214,10 @@ def main() -> None:
             max_batch=args.max_batch,
             max_wait_ms=args.max_wait_ms,
             mode=mode,
+            registry=registry,
+            tracer=tracer,
         )
-        compile_ms = server.warmup(cams[0])
+        server.warmup(cams[0])
         mem = server.memory_stats()
         if mode == "microbatch" and mem is not None:
             print(
@@ -177,7 +226,12 @@ def main() -> None:
                 + (", int8-quantized" if mem["compressed"] else "")
                 + ")"
             )
-        print(f"{mode} compile: {compile_ms:.0f} ms")
+        # Printed from the registry gauge warmup() populated — the same
+        # series the /metrics endpoint exports.
+        print(
+            f"{mode} compile: "
+            f"{compile_gauge.value(bucket='total', mode=mode):.0f} ms"
+        )
         with server:
             results, wall = replay_schedule(server.submit, cams, gaps)
         walls[mode] = wall
@@ -215,10 +269,13 @@ def main() -> None:
             sizes=[(size, size), (small, small)],
             max_batch=args.max_batch,
             mode="continuous",
+            registry=registry,
+            tracer=tracer,
         )
-        compile_ms = server.warmup()
+        server.warmup()
         print(
-            f"mixed sizes {size}^2 + {small}^2: compile {compile_ms:.0f} ms "
+            f"mixed sizes {size}^2 + {small}^2: compile "
+            f"{compile_gauge.value(bucket='total', mode='continuous'):.0f} ms "
             f"({len(server.buckets)} bucket executables)"
         )
         with server:
@@ -230,6 +287,13 @@ def main() -> None:
             f"({args.requests / wall:.2f} req/s), {percentiles(lat)}, "
             f"occupancy {stats['occupancy']:.0%}"
         )
+
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        n = len(tracer.events())
+        print(f"trace: {args.trace_out} ({n} events; open in ui.perfetto.dev)")
+    if metrics_server is not None:
+        metrics_server.shutdown()
 
 
 if __name__ == "__main__":

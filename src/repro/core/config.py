@@ -83,6 +83,14 @@ class RenderConfig:
         fused raster path decodes it in-kernel; raw f32 clouds render
         through the straight-through estimator (the quantized image,
         gradients to the f32 masters).
+      collect_stats: opt-in pipeline diagnostics (``repro.obs``). On the
+        ``pallas_fused`` path, ``core.render.render_with_stats`` makes the
+        kernel emit a per-tile diagnostics plane (chunks processed before
+        early exit, lanes blended, max SH band decoded) alongside the
+        image — which stays bitwise-identical (pure side output). Other
+        paths report host-side binning/occupancy stats. ``render`` itself
+        ignores the flag (the image never depends on it); it exists on the
+        config so servers/benchmarks can thread one switch end to end.
     """
 
     feature_path: str = "fused"
@@ -103,6 +111,7 @@ class RenderConfig:
     lod_thresholds: tuple[float, float] | None = None
     leaf_size: int = 256
     compress: str = "none"
+    collect_stats: bool = False
 
     def __post_init__(self) -> None:
         if self.feature_path not in FEATURE_PATHS:

@@ -128,3 +128,81 @@ def render_jit(
 ) -> jax.Array:
     """Jitted :func:`render`. ``config`` is static (hashable dataclass)."""
     return render(g, cam, config)
+
+
+def render_with_stats(
+    g: "GaussianParams | SceneTree",
+    cam: Camera,
+    config: RenderConfig | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Render one view and (opt-in) collect pipeline diagnostics.
+
+    With ``config.collect_stats=False`` this is exactly ``(render(g, cam,
+    config), None)``. With it on, the returned stats dict depends on the
+    raster path:
+
+    * ``pallas_fused``: the in-kernel per-tile diagnostics plane
+      (``chunks_processed`` / ``lanes_blended`` / ``max_sh_band`` measured
+      inside the streaming loop, plus the assigned ``chunks_assigned``
+      upper bound) — the image is bitwise-identical to the uninstrumented
+      render (same operand prep, same in-kernel op sequence).
+    * other paths: host-side ``core.binning.lane_occupancy_stats`` of the
+      same resolved/sorted features the raster consumed (compact/block
+      lane occupancy, chunk counts) — the image comes from the normal
+      ``render`` and is trivially unchanged.
+
+    Either way a ``visibility`` sub-dict (cull visible fraction) is added
+    when ``g`` is a culled SceneTree. Stats values are device arrays /
+    floats; ``repro.obs.pipeline`` folds them into a metrics registry.
+    """
+    cfg = as_config(config)
+    if not cfg.collect_stats:
+        return render(g, cam, cfg), None
+
+    from repro.core.scene import visibility_stats
+
+    extra: dict = {}
+    if isinstance(g, SceneTree) and cfg.cull:
+        vis = visibility_stats(g, cam, cfg)
+        extra["visibility"] = {
+            k: (v.item() if hasattr(v, "item") else v) for k, v in vis.items()
+        }
+
+    if cfg.raster_path == "pallas_fused":
+        from repro.kernels.fused_raster import ops as fused_ops
+
+        gr, band = resolve_scene_banded(g, cam, cfg)
+        entry = (
+            fused_ops.fused_render_q_stats
+            if isinstance(gr, QuantizedGaussianParams)
+            else fused_ops.fused_render_stats
+        )
+        img, stats = entry(
+            gr,
+            cam,
+            jax.numpy.asarray(cfg.background, jax.numpy.float32),
+            band=band,
+            tile_size=cfg.tile_size,
+            capacity=cfg.tile_capacity,
+            block_g=cfg.block_g,
+            tile_chunk=cfg.tile_chunk,
+            sh_degree=cfg.sh_degree,
+            early_exit=cfg.early_exit,
+        )
+        return img, {"kernel": stats, "block_g": cfg.block_g, **extra}
+
+    from repro.core.binning import lane_occupancy_stats
+    from repro.core.rasterize import sort_by_depth
+
+    img = render(g, cam, cfg)
+    gr = resolve_scene_f32(g, cam, cfg)
+    feats = sort_by_depth(compute_features(gr, cam, cfg))
+    occ = lane_occupancy_stats(
+        feats,
+        cam.height,
+        cam.width,
+        tile_size=cfg.tile_size,
+        capacity=cfg.tile_capacity,
+        block_g=cfg.block_g,
+    )
+    return img, {"occupancy": occ, "block_g": cfg.block_g, **extra}

@@ -7,6 +7,7 @@ from repro.kernels.fused_raster.kernel import (
     QF_ROWS,
     QI_ROWS,
     RAW_ROWS,
+    STAT_COLS,
     build_fused_bwd_pallas_call,
     build_fused_pallas_call,
     build_fused_q_pallas_call,
@@ -16,10 +17,13 @@ from repro.kernels.fused_raster.kernel import (
 )
 from repro.kernels.fused_raster.ops import (
     build_fused_operands,
+    build_fused_operands_q,
     compact_fused_operands,
     compact_fused_operands_q,
     fused_render,
     fused_render_q,
+    fused_render_q_stats,
+    fused_render_stats,
     pack_quant_rows,
     pick_tiles_per_step,
 )
@@ -31,6 +35,7 @@ __all__ = [
     "QF_ROWS",
     "QI_ROWS",
     "RAW_ROWS",
+    "STAT_COLS",
     "build_fused_bwd_pallas_call",
     "build_fused_pallas_call",
     "build_fused_q_pallas_call",
@@ -38,10 +43,13 @@ __all__ = [
     "lane_features",
     "lane_features_q",
     "build_fused_operands",
+    "build_fused_operands_q",
     "compact_fused_operands",
     "compact_fused_operands_q",
     "fused_render",
     "fused_render_q",
+    "fused_render_q_stats",
+    "fused_render_stats",
     "pack_quant_rows",
     "pick_tiles_per_step",
     "fused_reference",

@@ -72,6 +72,11 @@ from repro.kernels.tile_rasterize.kernel import (
 RAW_ROWS = 59
 DEFAULT_BLOCK_G = 128
 
+# Per-tile diagnostics plane columns (collect_stats=True side output):
+# [0] chunks processed before exit, [1] lanes blended (sum of live-lane
+# masks over processed chunks), [2] max SH band decoded, [3] pad.
+STAT_COLS = 4
+
 # Quantized-record operand rows (matches ops.pack_quant_rows; decode scales
 # are the per-chunk table broadcast per lane at compaction time):
 #   qf  (f32): [0:3] position, [3:7] quaternion, [7] log-scales scale,
@@ -436,6 +441,90 @@ def _stream_supertile(
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def _stream_supertile_stats(
+    nsteps_ref,
+    pix_all,
+    bg,
+    out_ref,
+    stats_ref,
+    chunk_features,
+    chunk_band,
+    *,
+    early_exit: bool,
+    tiles_per_step: int,
+):
+    """Diagnostics twin of :func:`_stream_supertile` (``collect_stats=True``).
+
+    The image computation is the *identical op sequence* — same
+    ``chunk_features`` calls, same ``_blend_chunk``, same loop conditions —
+    so the rendered tile is bitwise-equal to the uninstrumented kernel's
+    (pinned by test). The extended loop carry additionally accumulates,
+    per tile, the :data:`STAT_COLS` diagnostics plane:
+
+    * ``chunks_processed``: the final ``j`` — how many compacted chunks
+      ran before ``nsteps`` ran out or every lane saturated (the *measured*
+      early-exit depth, vs the theoretical ``nsteps`` upper bound);
+    * ``lanes_blended``: sum of live-lane masks (feature row 11) over the
+      processed chunks — live-lane occupancy as the blend actually saw it
+      (mask sums are small integers in f32, so accumulation order cannot
+      change the value);
+    * ``max_band``: max SH band decoded over processed chunks
+      (``chunk_band(t, j)``; the static ``sh_degree`` when unbanded).
+    """
+    g0 = pl.program_id(0)
+
+    def tile_body(tt, carry):
+        out_acc, stats_acc = carry
+        t = g0 * tiles_per_step + tt
+        n = nsteps_ref[t]
+        pix = jax.lax.dynamic_slice(
+            pix_all, (tt * TILE_PIX, 0), (TILE_PIX, 2)
+        )
+
+        def cond(carry):
+            j, t_pix, _, _, _ = carry
+            live = j < n
+            if early_exit:
+                live = live & (jnp.max(t_pix) >= EARLY_EXIT_EPS)
+            return live
+
+        def body(carry):
+            j, t_pix, acc, lanes, band_max = carry
+            feat = chunk_features(t, tt, j)
+            lanes = lanes + jnp.sum(feat[11, :])
+            band_max = jnp.maximum(band_max, chunk_band(t, j))
+            t_pix, acc = _blend_chunk(pix, feat, t_pix, acc)
+            return j + jnp.int32(1), t_pix, acc, lanes, band_max
+
+        t0 = jnp.ones((TILE_PIX, 1), jnp.float32)
+        acc0 = jnp.zeros((TILE_PIX, 3), jnp.float32)
+        j, t_pix, acc, lanes, band_max = jax.lax.while_loop(
+            cond,
+            body,
+            (jnp.int32(0), t0, acc0, jnp.float32(0.0), jnp.int32(0)),
+        )
+        tile_out = jnp.concatenate([acc + t_pix * bg, t_pix], axis=1)
+        out_acc = jax.lax.dynamic_update_slice(
+            out_acc, tile_out, (tt * TILE_PIX, 0)
+        )
+        row = jnp.stack(
+            [
+                j.astype(jnp.float32),
+                lanes,
+                band_max.astype(jnp.float32),
+                jnp.float32(0.0),
+            ]
+        )[None, :]
+        stats_acc = jax.lax.dynamic_update_slice(stats_acc, row, (tt, 0))
+        return out_acc, stats_acc
+
+    out0 = jnp.zeros((tiles_per_step * TILE_PIX, 4), jnp.float32)
+    stats0 = jnp.zeros((tiles_per_step, STAT_COLS), jnp.float32)
+    out, stats = jax.lax.fori_loop(0, tiles_per_step, tile_body, (out0, stats0))
+    out_ref[...] = out.astype(out_ref.dtype)
+    stats_ref[...] = stats.astype(stats_ref.dtype)
+
+
 def _fused_raster_kernel(
     nsteps_ref,  # (num_tiles,) int32 scalar-prefetch live-chunk counts
     band_ref,  # (num_tiles, steps) int32 scalar-prefetch per-chunk SH band
@@ -444,13 +533,14 @@ def _fused_raster_kernel(
     cam_ref,  # (1, CAM_VEC_LEN) packed camera constants
     bg_ref,  # (1, 4) background rgb + pad
     out_ref,  # (tiles_per_step * TILE_PIX, 4) rgb + final transmittance
-    *,
+    *maybe_stats_ref,  # (tiles_per_step, STAT_COLS) when collect_stats
     steps: int,
     block_g: int,
     sh_degree: int,
     banded: bool,
     early_exit: bool,
     tiles_per_step: int,
+    collect_stats: bool = False,
 ):
     raw_all = raw_ref[...]  # (RAW_ROWS, tiles_per_step * steps * block_g)
     cam = cam_ref[...]
@@ -462,6 +552,24 @@ def _fused_raster_kernel(
         band = band_ref[t, j] if banded else None
         return lane_features(raw, cam, sh_degree=sh_degree, band=band)
 
+    if collect_stats:
+        chunk_band = (
+            (lambda t, j: band_ref[t, j])
+            if banded
+            else (lambda t, j: jnp.int32(sh_degree))
+        )
+        _stream_supertile_stats(
+            nsteps_ref,
+            pix_ref[...],
+            bg_ref[0, 0:3],
+            out_ref,
+            maybe_stats_ref[0],
+            chunk_features,
+            chunk_band,
+            early_exit=early_exit,
+            tiles_per_step=tiles_per_step,
+        )
+        return
     _stream_supertile(
         nsteps_ref,
         pix_ref[...],
@@ -483,13 +591,14 @@ def _fused_raster_kernel_q(
     cam_ref,  # (1, CAM_VEC_LEN) packed camera constants
     bg_ref,  # (1, 4) background rgb + pad
     out_ref,  # (tiles_per_step * TILE_PIX, 4) rgb + final transmittance
-    *,
+    *maybe_stats_ref,  # (tiles_per_step, STAT_COLS) when collect_stats
     steps: int,
     block_g: int,
     sh_degree: int,
     banded: bool,
     early_exit: bool,
     tiles_per_step: int,
+    collect_stats: bool = False,
 ):
     """Decode-in-kernel fused raster: quantized chunks dequantize to f32
     lanes in registers right before the (unchanged) staged feature math.
@@ -519,6 +628,24 @@ def _fused_raster_kernel_q(
             band=band,
         )
 
+    if collect_stats:
+        chunk_band = (
+            (lambda t, j: band_ref[t, j])
+            if banded
+            else (lambda t, j: jnp.int32(sh_degree))
+        )
+        _stream_supertile_stats(
+            nsteps_ref,
+            pix_ref[...],
+            bg_ref[0, 0:3],
+            out_ref,
+            maybe_stats_ref[0],
+            chunk_features,
+            chunk_band,
+            early_exit=early_exit,
+            tiles_per_step=tiles_per_step,
+        )
+        return
     _stream_supertile(
         nsteps_ref,
         pix_ref[...],
@@ -541,6 +668,7 @@ def build_fused_pallas_call(
     tiles_per_step: int = 1,
     interpret: bool = False,
     dtype=jnp.float32,
+    collect_stats: bool = False,
 ):
     """Fused raw->feature->blend call over the compacted raw-record layout.
 
@@ -554,12 +682,29 @@ def build_fused_pallas_call(
     own early-exiting chunk ``while_loop``. The supertile width amortizes
     per-grid-step overhead (dominant in interpret mode) without changing
     per-tile semantics; ``num_tiles`` must divide evenly.
+
+    ``collect_stats=True`` adds a second output: the per-tile
+    (num_tiles, :data:`STAT_COLS`) diagnostics plane written by
+    ``_stream_supertile_stats`` — the image output is bitwise-unchanged.
     """
     if num_tiles % tiles_per_step != 0:
         raise ValueError(
             f"tiles_per_step={tiles_per_step} must divide num_tiles={num_tiles}"
         )
     grid = (num_tiles // tiles_per_step,)
+    out_spec = pl.BlockSpec(
+        (tiles_per_step * TILE_PIX, 4), lambda t, ns, bd: (t, 0)
+    )
+    out_shape = jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype)
+    if collect_stats:
+        out_spec = (
+            out_spec,
+            pl.BlockSpec((tiles_per_step, STAT_COLS), lambda t, ns, bd: (t, 0)),
+        )
+        out_shape = (
+            out_shape,
+            jax.ShapeDtypeStruct((num_tiles, STAT_COLS), jnp.float32),
+        )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -574,9 +719,7 @@ def build_fused_pallas_call(
             pl.BlockSpec((1, CAM_VEC_LEN), lambda t, ns, bd: (0, 0)),
             pl.BlockSpec((1, 4), lambda t, ns, bd: (0, 0)),
         ],
-        out_specs=pl.BlockSpec(
-            (tiles_per_step * TILE_PIX, 4), lambda t, ns, bd: (t, 0)
-        ),
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         functools.partial(
@@ -587,9 +730,10 @@ def build_fused_pallas_call(
             banded=banded,
             early_exit=early_exit,
             tiles_per_step=tiles_per_step,
+            collect_stats=collect_stats,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )
 
@@ -605,6 +749,7 @@ def build_fused_q_pallas_call(
     tiles_per_step: int = 1,
     interpret: bool = False,
     dtype=jnp.float32,
+    collect_stats: bool = False,
 ):
     """Quantized twin of :func:`build_fused_pallas_call`.
 
@@ -620,6 +765,19 @@ def build_fused_q_pallas_call(
         )
     grid = (num_tiles // tiles_per_step,)
     lanes = tiles_per_step * steps * block_g
+    out_spec = pl.BlockSpec(
+        (tiles_per_step * TILE_PIX, 4), lambda t, ns, bd: (t, 0)
+    )
+    out_shape = jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype)
+    if collect_stats:
+        out_spec = (
+            out_spec,
+            pl.BlockSpec((tiles_per_step, STAT_COLS), lambda t, ns, bd: (t, 0)),
+        )
+        out_shape = (
+            out_shape,
+            jax.ShapeDtypeStruct((num_tiles, STAT_COLS), jnp.float32),
+        )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -633,9 +791,7 @@ def build_fused_q_pallas_call(
             pl.BlockSpec((1, CAM_VEC_LEN), lambda t, ns, bd: (0, 0)),
             pl.BlockSpec((1, 4), lambda t, ns, bd: (0, 0)),
         ],
-        out_specs=pl.BlockSpec(
-            (tiles_per_step * TILE_PIX, 4), lambda t, ns, bd: (t, 0)
-        ),
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         functools.partial(
@@ -646,9 +802,10 @@ def build_fused_q_pallas_call(
             banded=banded,
             early_exit=early_exit,
             tiles_per_step=tiles_per_step,
+            collect_stats=collect_stats,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((num_tiles * TILE_PIX, 4), dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )
 

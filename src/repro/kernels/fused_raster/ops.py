@@ -285,6 +285,72 @@ def build_fused_operands(
     return raw_compact, nsteps, chunk_band, bins, steps
 
 
+def build_fused_operands_q(
+    qg: quant.QuantizedGaussianParams,
+    cam: Camera,
+    *,
+    band: jax.Array | None = None,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+):
+    """Quantized twin of :func:`build_fused_operands`.
+
+    Geometry-only pre-pass on the decoded fields (zero SH — degree-0
+    geometry never reads it; decode is the same elementwise ``q * scale``
+    the kernel performs, so sort order and tile lists match the f32 path on
+    the dequantized cloud exactly). Discrete outputs only, hence
+    stop_gradient. Returns ``((qf_c, qi_c, qdc_c), nsteps, chunk_band,
+    bins, steps)``.
+    """
+    log_scales, opacity = quant.dequantize_geometry(qg)
+    n = qg.num_gaussians
+    g_geo = GaussianParams(
+        positions=qg.positions,
+        quats=qg.quats,
+        log_scales=log_scales,
+        sh=jnp.zeros((n, 16, 3), jnp.float32),
+        opacity_logit=opacity,
+    )
+    geo = jax.tree.map(
+        jax.lax.stop_gradient,
+        feat_lib.compute_features_staged(g_geo, cam, sh_degree=0),
+    )
+    key = jnp.where(geo.mask > 0.5, geo.depth, jnp.inf)
+    order = jnp.argsort(key)
+    geo_sorted = jax.tree.map(lambda x: x[order], geo)
+    bins = bin_lib.bin_gaussians(
+        geo_sorted,
+        cam.height,
+        cam.width,
+        tile_size=tile_size,
+        capacity=capacity,
+        tile_chunk=tile_chunk,
+    )
+
+    qf, qi, qdc = pack_quant_rows(qg)
+    band_sorted = None if band is None else band[order]
+    planes, nsteps, chunk_band, steps = compact_fused_operands_q(
+        qf[:, order],
+        qi[:, order],
+        qdc[:, order],
+        bins,
+        band_sorted=band_sorted,
+        block_g=block_g,
+    )
+    return planes, nsteps, chunk_band, bins, steps
+
+
+def _untile_image(out: jax.Array, bins, tile_size: int, cam: Camera) -> jax.Array:
+    """(T * TILE_PIX, 4) kernel output -> (H, W, 3) cropped image."""
+    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
+    h_pad, w_pad = tiles_y * tile_size, tiles_x * tile_size
+    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
+    return img[: cam.height, : cam.width]
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12, 13))
 def _fused_blend(
     raw_compact: jax.Array,  # (RAW_ROWS, T * steps * block_g)
@@ -555,9 +621,7 @@ def fused_render(
         bins.num_tiles, steps, block_g, sh_degree,
         band is not None, early_exit, tiles_per_step, interpret,
     )
-    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
-    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
-    return img[: cam.height, : cam.width]
+    return _untile_image(out, bins, tile_size, cam)
 
 
 @functools.partial(
@@ -608,48 +672,20 @@ def fused_render_q(
     bg = jnp.asarray(background, jnp.float32)
     bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
 
-    # Geometry-only pre-pass on the decoded fields (zero SH — degree-0
-    # geometry never reads it). Discrete outputs (sort order, tile lists)
-    # only, so stop_gradient matches build_fused_operands.
-    log_scales, opacity = quant.dequantize_geometry(qg)
-    n = qg.num_gaussians
-    g_geo = GaussianParams(
-        positions=qg.positions,
-        quats=qg.quats,
-        log_scales=log_scales,
-        sh=jnp.zeros((n, 16, 3), jnp.float32),
-        opacity_logit=opacity,
-    )
-    geo = jax.tree.map(
-        jax.lax.stop_gradient,
-        feat_lib.compute_features_staged(g_geo, cam, sh_degree=0),
-    )
-    key = jnp.where(geo.mask > 0.5, geo.depth, jnp.inf)
-    order = jnp.argsort(key)
-    geo_sorted = jax.tree.map(lambda x: x[order], geo)
-    bins = bin_lib.bin_gaussians(
-        geo_sorted,
-        cam.height,
-        cam.width,
-        tile_size=tile_size,
-        capacity=capacity,
-        tile_chunk=tile_chunk,
-    )
-
-    qf, qi, qdc = pack_quant_rows(qg)
-    band_sorted = None if band is None else band[order]
-    (qf_c, qi_c, qdc_c), nsteps, chunk_band, steps = compact_fused_operands_q(
-        qf[:, order],
-        qi[:, order],
-        qdc[:, order],
-        bins,
-        band_sorted=band_sorted,
-        block_g=block_g,
+    (qf_c, qi_c, qdc_c), nsteps, chunk_band, bins, steps = (
+        build_fused_operands_q(
+            qg,
+            cam,
+            band=band,
+            tile_size=tile_size,
+            capacity=capacity,
+            block_g=block_g,
+            tile_chunk=tile_chunk,
+        )
     )
     cam_vec = pack_camera(cam)
 
-    tiles_y, tiles_x = bins.tiles_y, bins.tiles_x
-    h_pad, w_pad = tiles_y * tile_size, tiles_x * tile_size
+    h_pad, w_pad = bins.tiles_y * tile_size, bins.tiles_x * tile_size
     pix = _tile_order_pixels(h_pad, w_pad, tile_size)
     if tiles_per_step is None:
         tiles_per_step = pick_tiles_per_step(bins.num_tiles)
@@ -659,6 +695,177 @@ def fused_render_q(
         bins.num_tiles, steps, block_g, sh_degree,
         band is not None, early_exit, tiles_per_step, interpret,
     )
-    img = out[:, 0:3].reshape(tiles_y, tiles_x, tile_size, tile_size, 3)
-    img = img.transpose(0, 2, 1, 3, 4).reshape(h_pad, w_pad, 3)
-    return img[: cam.height, : cam.width]
+    return _untile_image(out, bins, tile_size, cam)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tile_size", "capacity", "block_g", "tile_chunk", "sh_degree",
+        "early_exit", "tiles_per_step", "interpret",
+    ),
+)
+def fused_render_stats(
+    g: GaussianParams,
+    cam: Camera,
+    background: jax.Array,
+    *,
+    band: jax.Array | None = None,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+    sh_degree: int = 3,
+    early_exit: bool = True,
+    tiles_per_step: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, dict]:
+    """``fused_render`` with the in-kernel diagnostics plane.
+
+    Returns ``(image, stats)`` where ``stats`` holds per-tile arrays:
+    ``chunks_processed`` / ``lanes_blended`` / ``max_sh_band`` (the
+    :data:`kernel.STAT_COLS` plane measured *inside* the streaming loop)
+    plus ``chunks_assigned`` (``nsteps`` — the theoretical upper bound the
+    early exit cuts below). The image is bitwise-identical to
+    ``fused_render`` — identical operand prep, identical in-kernel op
+    sequence (pinned by test). Inference-only: no custom VJP.
+    """
+    if tile_size * tile_size != k.TILE_PIX:
+        raise ValueError(
+            f"fused raster path requires tile_size^2 == {k.TILE_PIX}, "
+            f"got tile_size={tile_size}"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    bg = jnp.asarray(background, jnp.float32)
+    bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
+
+    raw_compact, nsteps, chunk_band, bins, steps = build_fused_operands(
+        g,
+        cam,
+        band=band,
+        tile_size=tile_size,
+        capacity=capacity,
+        block_g=block_g,
+        tile_chunk=tile_chunk,
+    )
+    cam_vec = pack_camera(cam)
+
+    h_pad, w_pad = bins.tiles_y * tile_size, bins.tiles_x * tile_size
+    pix = _tile_order_pixels(h_pad, w_pad, tile_size)
+    if tiles_per_step is None:
+        tiles_per_step = pick_tiles_per_step(bins.num_tiles)
+
+    call = k.build_fused_pallas_call(
+        bins.num_tiles,
+        steps,
+        block_g=block_g,
+        sh_degree=sh_degree,
+        banded=band is not None,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+        interpret=interpret,
+        dtype=raw_compact.dtype,
+        collect_stats=True,
+    )
+    out, tile_stats = call(
+        nsteps.astype(jnp.int32),
+        chunk_band.astype(jnp.int32),
+        pix,
+        raw_compact,
+        cam_vec,
+        bg4,
+    )
+    stats = {
+        "chunks_processed": tile_stats[:, 0],
+        "lanes_blended": tile_stats[:, 1],
+        "max_sh_band": tile_stats[:, 2],
+        "chunks_assigned": nsteps,
+    }
+    return _untile_image(out, bins, tile_size, cam), stats
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tile_size", "capacity", "block_g", "tile_chunk", "sh_degree",
+        "early_exit", "tiles_per_step", "interpret",
+    ),
+)
+def fused_render_q_stats(
+    qg: quant.QuantizedGaussianParams,
+    cam: Camera,
+    background: jax.Array,
+    *,
+    band: jax.Array | None = None,
+    tile_size: int = 16,
+    capacity: int = bin_lib.DEFAULT_CAPACITY,
+    block_g: int = k.DEFAULT_BLOCK_G,
+    tile_chunk: int | None = 64,
+    sh_degree: int = 3,
+    early_exit: bool = True,
+    tiles_per_step: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, dict]:
+    """``fused_render_q`` with the in-kernel diagnostics plane.
+
+    Same ``(image, stats)`` contract as :func:`fused_render_stats`;
+    the image is bitwise-identical to ``fused_render_q``.
+    """
+    if tile_size * tile_size != k.TILE_PIX:
+        raise ValueError(
+            f"fused raster path requires tile_size^2 == {k.TILE_PIX}, "
+            f"got tile_size={tile_size}"
+        )
+    if interpret is None:
+        interpret = _default_interpret()
+    bg = jnp.asarray(background, jnp.float32)
+    bg4 = jnp.concatenate([bg, jnp.zeros((1,), bg.dtype)])[None, :]
+
+    (qf_c, qi_c, qdc_c), nsteps, chunk_band, bins, steps = (
+        build_fused_operands_q(
+            qg,
+            cam,
+            band=band,
+            tile_size=tile_size,
+            capacity=capacity,
+            block_g=block_g,
+            tile_chunk=tile_chunk,
+        )
+    )
+    cam_vec = pack_camera(cam)
+
+    h_pad, w_pad = bins.tiles_y * tile_size, bins.tiles_x * tile_size
+    pix = _tile_order_pixels(h_pad, w_pad, tile_size)
+    if tiles_per_step is None:
+        tiles_per_step = pick_tiles_per_step(bins.num_tiles)
+
+    call = k.build_fused_q_pallas_call(
+        bins.num_tiles,
+        steps,
+        block_g=block_g,
+        sh_degree=sh_degree,
+        banded=band is not None,
+        early_exit=early_exit,
+        tiles_per_step=tiles_per_step,
+        interpret=interpret,
+        dtype=qf_c.dtype,
+        collect_stats=True,
+    )
+    out, tile_stats = call(
+        nsteps.astype(jnp.int32),
+        chunk_band.astype(jnp.int32),
+        pix,
+        qf_c,
+        qi_c,
+        qdc_c,
+        cam_vec,
+        bg4,
+    )
+    stats = {
+        "chunks_processed": tile_stats[:, 0],
+        "lanes_blended": tile_stats[:, 1],
+        "max_sh_band": tile_stats[:, 2],
+        "chunks_assigned": nsteps,
+    }
+    return _untile_image(out, bins, tile_size, cam), stats

@@ -1,0 +1,66 @@
+"""Observability: metrics registry, tracing, and pipeline counters.
+
+Three dependency-free layers (DESIGN.md §11):
+
+* :mod:`repro.obs.metrics` — thread-safe Counter/Gauge/Histogram with
+  labeled series and bounded ring-buffer percentiles; ``snapshot()`` for
+  BENCH_PR*.json, ``render_prometheus()`` for a ``/metrics`` endpoint.
+* :mod:`repro.obs.tracing` — Chrome trace-event spans (Perfetto-loadable)
+  with explicit ``block_until_ready`` fencing for honest device timing.
+* :mod:`repro.obs.pipeline` — folds the stack's diagnostics (the fused
+  kernel's in-kernel counters, cull visibility, lane occupancy, resident
+  bytes) into one canonical metric-name catalog, plus the jnp reference
+  replay the kernel counters are tested against.
+"""
+
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BUCKETS_MS,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    get_registry,
+    serve_metrics,
+    validate_prometheus,
+)
+from repro.obs.pipeline import (
+    fold_kernel_stats,
+    fold_memory,
+    fold_occupancy,
+    fold_render_stats,
+    fold_visibility,
+    replay_fused_stats,
+    replay_fused_stats_q,
+    summarize_kernel_stats,
+)
+from repro.obs.tracing import (
+    Tracer,
+    get_tracer,
+    set_tracer,
+    span,
+    validate_trace,
+)
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS_MS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "get_registry",
+    "serve_metrics",
+    "validate_prometheus",
+    "fold_kernel_stats",
+    "fold_memory",
+    "fold_occupancy",
+    "fold_render_stats",
+    "fold_visibility",
+    "replay_fused_stats",
+    "replay_fused_stats_q",
+    "summarize_kernel_stats",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+    "span",
+    "validate_trace",
+]

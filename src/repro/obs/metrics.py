@@ -1,0 +1,459 @@
+"""Thread-safe, dependency-free metrics registry.
+
+Three instrument kinds, all with labeled series and bounded memory:
+
+* :class:`Counter` — monotonically increasing float (``inc``).
+* :class:`Gauge` — last-write-wins float (``set``).
+* :class:`Histogram` — fixed cumulative buckets (Prometheus semantics)
+  *plus* a bounded ring buffer of raw observations for exact percentiles
+  at serving scale. The ring holds the most recent ``ring_size``
+  observations, so a long-lived server's stats cost O(ring_size) memory,
+  never O(requests) — this is the fix for the unbounded latency /
+  batch-size lists the RenderServer used to keep.
+
+A :class:`Registry` owns the instruments, renders them as a JSON-friendly
+``snapshot()`` dict (what benchmarks store in BENCH_PR*.json) and as
+Prometheus text exposition (``render_prometheus()``, what the
+``--metrics-port`` endpoint serves). A process-global default registry is
+available via :func:`get_registry` for scripts that don't want to thread
+one through; servers and tests construct their own to stay isolated.
+
+Only the standard library is used — ``numpy`` is imported lazily for
+percentiles and is already a repo-wide dependency.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Iterable, Sequence
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "get_registry",
+    "serve_metrics",
+    "validate_prometheus",
+    "DEFAULT_LATENCY_BUCKETS_MS",
+]
+
+# Latency-style buckets (ms): roughly log-spaced, shared by the server and
+# the benchmarks so exported series are comparable across surfaces.
+DEFAULT_LATENCY_BUCKETS_MS = (
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
+    500.0, 1000.0, 2000.0, 5000.0, 10000.0,
+)
+
+_DEFAULT_RING = 4096
+
+
+def _label_key(labels: dict[str, str]) -> tuple[tuple[str, str], ...]:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: tuple[tuple[str, str], ...]) -> str:
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in key)
+    return "{" + inner + "}"
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt(x: float) -> str:
+    if x == math.inf:
+        return "+Inf"
+    if x == -math.inf:
+        return "-Inf"
+    f = float(x)
+    return repr(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+class _Metric:
+    """Base: a named family of labeled series."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "") -> None:
+        self.name = name
+        self.help = help
+        self._lock = threading.Lock()
+        self._series: dict[tuple[tuple[str, str], ...], object] = {}
+
+    def labels(self, **labels: str):
+        key = _label_key(labels)
+        with self._lock:
+            child = self._series.get(key)
+            if child is None:
+                child = self._new_child()
+                self._series[key] = child
+        return child
+
+    def _new_child(self):  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _items(self):
+        with self._lock:
+            return list(self._series.items())
+
+
+class _CounterChild:
+    __slots__ = ("_lock", "value")
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        with self._lock:
+            self.value += amount
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def _new_child(self) -> _CounterChild:
+        return _CounterChild()
+
+    def inc(self, amount: float = 1.0, **labels: str) -> None:
+        self.labels(**labels).inc(amount)
+
+    def value(self, **labels: str) -> float:
+        return self.labels(**labels).value
+
+
+class _GaugeChild:
+    __slots__ = ("_lock", "value")
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        with self._lock:
+            self.value += amount
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def _new_child(self) -> _GaugeChild:
+        return _GaugeChild()
+
+    def set(self, value: float, **labels: str) -> None:
+        self.labels(**labels).set(value)
+
+    def value(self, **labels: str) -> float:
+        return self.labels(**labels).value
+
+
+class _HistogramChild:
+    __slots__ = ("_lock", "bounds", "bucket_counts", "count", "sum", "_ring", "_ring_pos")
+
+    def __init__(self, bounds: tuple[float, ...], ring_size: int) -> None:
+        self._lock = threading.Lock()
+        self.bounds = bounds  # finite upper bounds, ascending; +Inf implicit
+        self.bucket_counts = [0] * (len(bounds) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self._ring: list[float] = [0.0] * ring_size
+        self._ring_pos = 0
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        with self._lock:
+            i = 0
+            for b in self.bounds:
+                if v <= b:
+                    break
+                i += 1
+            self.bucket_counts[i] += 1
+            self.count += 1
+            self.sum += v
+            ring = self._ring
+            if ring:
+                ring[self._ring_pos % len(ring)] = v
+                self._ring_pos += 1
+
+    def _recent(self) -> list[float]:
+        with self._lock:
+            n = min(self.count, len(self._ring))
+            if n == 0:
+                return []
+            if self.count <= len(self._ring):
+                return self._ring[: self.count]
+            return list(self._ring)
+
+    def percentile(self, q: float | Sequence[float]):
+        """Exact percentile(s) over the retained (most recent) observations."""
+        import numpy as np
+
+        recent = self._recent()
+        if not recent:
+            return None
+        return np.percentile(np.asarray(recent, dtype=np.float64), q)
+
+    def mean(self) -> float | None:
+        with self._lock:
+            return (self.sum / self.count) if self.count else None
+
+    def summary(self) -> dict:
+        """JSON-friendly view: count/sum/mean + p50/p95/p99/max from the ring."""
+        with self._lock:
+            count, total = self.count, self.sum
+        out: dict = {"count": count, "sum": total}
+        out["mean"] = (total / count) if count else None
+        recent = self._recent()
+        if recent:
+            import numpy as np
+
+            arr = np.asarray(recent, dtype=np.float64)
+            p50, p95, p99 = np.percentile(arr, [50.0, 95.0, 99.0])
+            out.update(p50=float(p50), p95=float(p95), p99=float(p99),
+                       max=float(arr.max()))
+        else:
+            out.update(p50=None, p95=None, p99=None, max=None)
+        return out
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(
+        self,
+        name: str,
+        help: str = "",
+        buckets: Iterable[float] = DEFAULT_LATENCY_BUCKETS_MS,
+        ring_size: int = _DEFAULT_RING,
+    ) -> None:
+        super().__init__(name, help)
+        bounds = tuple(sorted(float(b) for b in buckets if math.isfinite(b)))
+        if not bounds:
+            raise ValueError("histogram needs at least one finite bucket bound")
+        self.bounds = bounds
+        self.ring_size = int(ring_size)
+
+    def _new_child(self) -> _HistogramChild:
+        return _HistogramChild(self.bounds, self.ring_size)
+
+    def observe(self, value: float, **labels: str) -> None:
+        self.labels(**labels).observe(value)
+
+
+class Registry:
+    """A named collection of metrics; get-or-create semantics per name."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._metrics: dict[str, _Metric] = {}
+
+    def _get_or_create(self, cls, name: str, help: str, **kwargs) -> _Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help, **kwargs)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested {cls.kind}"
+                )
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(
+        self,
+        name: str,
+        help: str = "",
+        buckets: Iterable[float] = DEFAULT_LATENCY_BUCKETS_MS,
+        ring_size: int = _DEFAULT_RING,
+    ) -> Histogram:
+        return self._get_or_create(
+            Histogram, name, help, buckets=buckets, ring_size=ring_size
+        )
+
+    def metrics(self) -> list[_Metric]:
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+    def snapshot(self) -> dict:
+        """JSON-serializable dump: ``{name: {type, help, series: [...]}}``.
+
+        Histogram series carry a ``summary`` (count/sum/mean/p50/p95/p99/max)
+        plus the cumulative bucket counts; counters and gauges carry a plain
+        ``value``. This is the form benchmarks persist into BENCH_PR*.json.
+        """
+        out: dict = {}
+        for m in self.metrics():
+            series = []
+            for key, child in m._items():
+                entry: dict = {"labels": dict(key)}
+                if isinstance(child, _HistogramChild):
+                    entry["summary"] = child.summary()
+                    with child._lock:
+                        entry["buckets"] = {
+                            _fmt(b): int(sum(child.bucket_counts[: i + 1]))
+                            for i, b in enumerate(child.bounds)
+                        }
+                        entry["buckets"]["+Inf"] = int(child.count)
+                else:
+                    entry["value"] = child.value
+                series.append(entry)
+            out[m.name] = {"type": m.kind, "help": m.help, "series": series}
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format (version 0.0.4)."""
+        lines: list[str] = []
+        for m in self.metrics():
+            if m.help:
+                lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            for key, child in m._items():
+                ls = _label_str(key)
+                if isinstance(child, _HistogramChild):
+                    with child._lock:
+                        counts = list(child.bucket_counts)
+                        count, total = child.count, child.sum
+                    cum = 0
+                    for b, c in zip(child.bounds, counts):
+                        cum += c
+                        bl = _label_str(key + (("le", _fmt(b)),))
+                        lines.append(f"{m.name}_bucket{bl} {cum}")
+                    bl = _label_str(key + (("le", "+Inf"),))
+                    lines.append(f"{m.name}_bucket{bl} {count}")
+                    lines.append(f"{m.name}_sum{ls} {_fmt(total)}")
+                    lines.append(f"{m.name}_count{ls} {count}")
+                else:
+                    lines.append(f"{m.name}{ls} {_fmt(child.value)}")
+        return "\n".join(lines) + "\n"
+
+
+_global_registry = Registry()
+
+
+def get_registry() -> Registry:
+    """The process-global default registry."""
+    return _global_registry
+
+
+_NAME_RE = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+
+
+def validate_prometheus(text: str) -> dict[str, dict]:
+    """Validate Prometheus text exposition; return ``{family: info}``.
+
+    Checks line grammar, TYPE declarations, histogram bucket monotonicity,
+    the mandatory ``+Inf`` bucket, and ``_count`` == ``+Inf`` agreement.
+    Raises ``ValueError`` on the first violation. Used by tests and the CI
+    serving smoke — intentionally strict but dependency-free.
+    """
+    import re
+
+    families: dict[str, dict] = {}
+    sample_re = re.compile(
+        rf"^({_NAME_RE})(\{{[^{{}}]*\}})? (-?[0-9.eE+]+|[+-]Inf|NaN)$"
+    )
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ", 3)
+            if len(parts) != 4 or parts[3] not in (
+                "counter", "gauge", "histogram", "summary", "untyped"
+            ):
+                raise ValueError(f"line {lineno}: bad TYPE line: {line!r}")
+            families[parts[2]] = {"type": parts[3], "samples": []}
+            continue
+        if line.startswith("#"):
+            continue
+        mt = sample_re.match(line)
+        if not mt:
+            raise ValueError(f"line {lineno}: unparseable sample: {line!r}")
+        name, labels, value = mt.group(1), mt.group(2) or "", mt.group(3)
+        fam = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = name[: -len(suffix)] if name.endswith(suffix) else None
+            if base in families and families[base]["type"] == "histogram":
+                fam = base
+                break
+        if fam not in families:
+            raise ValueError(f"line {lineno}: sample {name!r} without TYPE")
+        families[fam]["samples"].append((name, labels, value))
+    # Histogram structural checks.
+    for fam, info in families.items():
+        if info["type"] != "histogram":
+            continue
+        def _series_key(labels: str) -> str:
+            inner = labels.strip("{}")
+            parts = [p for p in inner.split(",") if p and not p.startswith('le="')]
+            return ",".join(sorted(parts))
+
+        by_series: dict[str, list[tuple[float, float]]] = {}
+        counts: dict[str, float] = {}
+        for name, labels, value in info["samples"]:
+            if name == fam + "_bucket":
+                mle = re.search(r'le="([^"]+)"', labels)
+                if not mle:
+                    raise ValueError(f"{fam}: bucket sample missing le label")
+                le = math.inf if mle.group(1) == "+Inf" else float(mle.group(1))
+                by_series.setdefault(_series_key(labels), []).append(
+                    (le, float(value))
+                )
+            elif name == fam + "_count":
+                counts[_series_key(labels)] = float(value)
+        for series, buckets in by_series.items():
+            buckets.sort(key=lambda p: p[0])
+            if buckets[-1][0] != math.inf:
+                raise ValueError(f"{fam}{{{series}}}: missing +Inf bucket")
+            vals = [v for _, v in buckets]
+            if any(b > a for b, a in zip(vals, vals[1:])):
+                raise ValueError(f"{fam}{{{series}}}: non-monotonic buckets")
+            if series in counts and counts[series] != buckets[-1][1]:
+                raise ValueError(f"{fam}{{{series}}}: _count != +Inf bucket")
+    return families
+
+
+def serve_metrics(registry: Registry, port: int = 0):
+    """Serve ``registry.render_prometheus()`` at ``/metrics`` on ``port``.
+
+    Returns the started ``ThreadingHTTPServer`` (daemon thread); read the
+    bound port from ``server.server_address[1]`` (useful with ``port=0``).
+    Call ``server.shutdown()`` to stop.
+    """
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self) -> None:  # noqa: N802 (http.server API)
+            if self.path.rstrip("/") not in ("", "/metrics"):
+                self.send_error(404)
+                return
+            body = registry.render_prometheus().encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args) -> None:  # silence per-request stderr
+            pass
+
+    server = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    return server

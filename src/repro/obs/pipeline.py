@@ -1,0 +1,381 @@
+"""Pipeline counters: registry folding + the jnp reference replay.
+
+Two halves:
+
+* **Folding** (`fold_*`): convert the stack's existing diagnostic dicts —
+  the fused kernel's per-tile :data:`~repro.kernels.fused_raster.STAT_COLS`
+  plane (``render_with_stats``), ``binning.lane_occupancy_stats``,
+  ``scene.visibility_stats``, ``SceneTree.memory_stats`` — into *one
+  canonical set of metric series* on a :class:`repro.obs.metrics.Registry`.
+  Benchmarks and the RenderServer fold into the same names, so a registry
+  snapshot in BENCH_PR*.json and a ``/metrics`` scrape of a live server
+  report the same series (the perf-regression harness can assert either).
+
+* **Reference replay** (`replay_fused_stats` / `replay_fused_stats_q`):
+  recompute the kernel's in-loop counters in plain jnp by blending every
+  compacted chunk unconditionally and deriving the exit point afterwards.
+  The replay walks the exact forward transmittance trajectory — chunk
+  ``j``'s pre-blend transmittance depends only on chunks ``< j``, both
+  exit conditions (``j >= nsteps`` and transmittance saturation) are
+  monotone once false, and per-chunk mask sums are small integers in f32 —
+  so ``chunks_processed`` / ``lanes_blended`` / ``max_sh_band`` match the
+  kernel *exactly*, not approximately (pinned by test). This is the same
+  replay-exactness argument the fused backward kernel rests on.
+
+Metric name catalog (see DESIGN.md §11):
+
+================================  =========  =================================
+name                              kind       meaning
+================================  =========  =================================
+render_cull_visible_fraction      gauge      visible / total scene chunks
+render_cull_visible_chunks        gauge      visible chunk count
+render_chunks_assigned            gauge      sum of per-tile compacted chunks
+render_chunks_processed           gauge      chunks the kernel actually ran
+render_early_exit_savings         gauge      1 - processed / assigned
+render_early_exit_chunks          histogram  per-tile measured exit depth
+render_chunk_occupancy_measured   gauge      lanes blended / (processed * BG)
+render_sh_band_max                gauge      max SH band decoded this render
+render_lane_occupancy_compact     gauge      live-lane frac, compacted lists
+render_lane_occupancy_block       gauge      live-lane frac, block lists
+render_tile_overflow_rate         gauge      tiles that dropped Gaussians
+render_chunks_per_tile_mean       gauge      mean compacted chunks per tile
+scene_resident_bytes              gauge      resident scene payload bytes
+scene_resident_ratio_vs_f32       gauge      resident bytes / f32-equivalent
+================================  =========  =================================
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs.metrics import Registry
+
+__all__ = [
+    "EXIT_DEPTH_BUCKETS",
+    "fold_kernel_stats",
+    "fold_occupancy",
+    "fold_visibility",
+    "fold_memory",
+    "fold_render_stats",
+    "summarize_kernel_stats",
+    "replay_fused_stats",
+    "replay_fused_stats_q",
+]
+
+# Per-tile chunk-depth buckets (a tile rarely streams >128 chunks).
+EXIT_DEPTH_BUCKETS = (0, 1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+# ---------------------------------------------------------------------------
+# Registry folding
+# ---------------------------------------------------------------------------
+
+
+def summarize_kernel_stats(kernel: dict, *, block_g: int) -> dict:
+    """Aggregate the per-tile diagnostics plane to scalar pipeline rates."""
+    processed = np.asarray(kernel["chunks_processed"], dtype=np.float64)
+    assigned = np.asarray(kernel["chunks_assigned"], dtype=np.float64)
+    lanes = float(np.sum(np.asarray(kernel["lanes_blended"], np.float64)))
+    n_proc = float(processed.sum())
+    n_asgn = float(assigned.sum())
+    return {
+        "num_tiles": int(processed.size),
+        "chunks_assigned": n_asgn,
+        "chunks_processed": n_proc,
+        "early_exit_savings": 1.0 - n_proc / n_asgn if n_asgn else 0.0,
+        "lanes_blended": lanes,
+        "chunk_occupancy_measured": (
+            lanes / (n_proc * block_g) if n_proc else 0.0
+        ),
+        "max_sh_band": float(np.max(np.asarray(kernel["max_sh_band"])))
+        if np.asarray(kernel["max_sh_band"]).size
+        else 0.0,
+    }
+
+
+def fold_kernel_stats(
+    registry: Registry, kernel: dict, *, block_g: int, **labels: str
+) -> dict:
+    """Fold one render's in-kernel diagnostics plane into the registry."""
+    agg = summarize_kernel_stats(kernel, block_g=block_g)
+    g = registry.gauge
+    g("render_chunks_assigned", "compacted chunks assigned per render").set(
+        agg["chunks_assigned"], **labels
+    )
+    g("render_chunks_processed", "chunks executed before early exit").set(
+        agg["chunks_processed"], **labels
+    )
+    g("render_early_exit_savings", "1 - processed/assigned chunks").set(
+        agg["early_exit_savings"], **labels
+    )
+    g(
+        "render_chunk_occupancy_measured",
+        "lanes blended / (chunks processed * block_g)",
+    ).set(agg["chunk_occupancy_measured"], **labels)
+    g("render_sh_band_max", "max SH band decoded in-kernel").set(
+        agg["max_sh_band"], **labels
+    )
+    hist = registry.histogram(
+        "render_early_exit_chunks",
+        "per-tile chunks processed before exit",
+        buckets=EXIT_DEPTH_BUCKETS,
+    )
+    for depth in np.asarray(kernel["chunks_processed"]).ravel():
+        hist.observe(float(depth), **labels)
+    return agg
+
+
+def fold_occupancy(registry: Registry, occ: dict, **labels: str) -> None:
+    """Fold ``binning.lane_occupancy_stats`` output (the estimate the
+    measured in-kernel occupancy is compared against)."""
+    mapping = {
+        "compact_occupancy": (
+            "render_lane_occupancy_compact",
+            "live-lane fraction of the compacted per-tile lists",
+        ),
+        "block_occupancy": (
+            "render_lane_occupancy_block",
+            "live-lane fraction of the 128-wide block lists",
+        ),
+        "overflow_rate": (
+            "render_tile_overflow_rate",
+            "fraction of tiles that dropped Gaussians at capacity",
+        ),
+        "chunks_per_tile_mean": (
+            "render_chunks_per_tile_mean",
+            "mean compacted chunks per screen tile",
+        ),
+        "chunk_full_fraction": (
+            "render_chunk_full_fraction",
+            "fraction of compacted chunks that are completely live",
+        ),
+    }
+    for key, (name, help_) in mapping.items():
+        if key in occ:
+            registry.gauge(name, help_).set(float(occ[key]), **labels)
+
+
+def fold_visibility(registry: Registry, vis: dict, **labels: str) -> None:
+    """Fold ``scene.visibility_stats`` output (frustum-cull health)."""
+    registry.gauge(
+        "render_cull_visible_fraction",
+        "visible / total scene chunks after frustum culling",
+    ).set(float(vis["visible_fraction"]), **labels)
+    registry.gauge(
+        "render_cull_visible_chunks", "visible chunk count after culling"
+    ).set(float(vis["num_visible"]), **labels)
+
+
+def fold_memory(registry: Registry, mem: dict, **labels: str) -> None:
+    """Fold ``SceneTree.memory_stats`` output (resident footprint)."""
+    registry.gauge(
+        "scene_resident_bytes", "resident scene payload bytes"
+    ).set(float(mem["total_bytes"]), **labels)
+    if mem.get("ratio_vs_f32") is not None:
+        registry.gauge(
+            "scene_resident_ratio_vs_f32",
+            "resident bytes / f32-equivalent bytes",
+        ).set(float(mem["ratio_vs_f32"]), **labels)
+
+
+def fold_render_stats(
+    registry: Registry, stats: dict | None, **labels: str
+) -> dict | None:
+    """Fold a ``core.render.render_with_stats`` stats dict — whichever
+    sections its raster path produced. Returns the kernel aggregate (if
+    any) for callers that also want the scalars."""
+    if stats is None:
+        return None
+    agg = None
+    if "kernel" in stats:
+        agg = fold_kernel_stats(
+            registry, stats["kernel"], block_g=stats["block_g"], **labels
+        )
+    if "occupancy" in stats:
+        fold_occupancy(registry, stats["occupancy"], **labels)
+    if "visibility" in stats:
+        fold_visibility(registry, stats["visibility"], **labels)
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Reference replay of the in-kernel counters
+# ---------------------------------------------------------------------------
+
+
+def _replay_counters(
+    feats,  # (T, steps, FEAT_ROWS, block_g) all-chunk features
+    pix,  # (T * TILE_PIX, 2)
+    nsteps,  # (T,) float32 per-tile live-chunk counts
+    chunk_band,  # (T, steps) float32 per-chunk SH bands
+    *,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+) -> dict:
+    """Blend every chunk unconditionally; derive the kernel's counters.
+
+    For each tile the scan records chunk ``j``'s *pre-blend* transmittance
+    max and live-lane mask sum. A chunk was processed by the kernel iff
+    ``j < nsteps`` and (under early exit) its pre-blend max was still
+    ``>= EARLY_EXIT_EPS`` — both conditions are monotone once false, and
+    the replayed transmittance equals the kernel's bitwise up to the exit
+    point (identical ``_blend_chunk`` ops on identical features), so the
+    processed prefix is exact.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.constants import EARLY_EXIT_EPS
+    from repro.kernels.fused_raster.kernel import TILE_PIX, _blend_chunk
+
+    num_tiles, steps = feats.shape[0], feats.shape[1]
+    pix_t = pix.reshape(num_tiles, TILE_PIX, 2)
+
+    def one_tile(feats_tile, pix_tile, n, bands):
+        def step(t_pix, feat):
+            pre_max = jnp.max(t_pix)
+            mask_sum = jnp.sum(feat[11, :])
+            t_pix, _ = _blend_chunk(
+                pix_tile, feat, t_pix, jnp.zeros((TILE_PIX, 3), jnp.float32)
+            )
+            return t_pix, (pre_max, mask_sum)
+
+        t0 = jnp.ones((TILE_PIX, 1), jnp.float32)
+        _, (pre_max, mask_sums) = jax.lax.scan(step, t0, feats_tile)
+        live = jnp.arange(steps, dtype=jnp.float32) < n
+        if early_exit:
+            live = live & (pre_max >= EARLY_EXIT_EPS)
+        livef = live.astype(jnp.float32)
+        chunks = jnp.sum(livef)
+        lanes = jnp.sum(jnp.where(live, mask_sums, 0.0))
+        if banded:
+            band_max = jnp.max(
+                jnp.where(live, bands, 0.0), initial=0.0
+            )
+        else:
+            band_max = jnp.where(chunks > 0, jnp.float32(sh_degree), 0.0)
+        return chunks, lanes, band_max
+
+    chunks, lanes, band_max = jax.vmap(one_tile)(
+        feats, pix_t, nsteps, chunk_band
+    )
+    return {
+        "chunks_processed": chunks,
+        "lanes_blended": lanes,
+        "max_sh_band": band_max,
+        "chunks_assigned": nsteps,
+    }
+
+
+def replay_fused_stats(
+    raw_compact,
+    cam_vec,
+    pix,
+    nsteps,
+    chunk_band,
+    *,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+) -> dict:
+    """jnp reference for the f32 fused kernel's diagnostics plane.
+
+    Takes the exact compacted operands ``ops.build_fused_operands`` /
+    ``fused_render_stats`` feed the kernel; returns per-tile arrays with
+    the same keys as the ``fused_render_stats`` stats dict.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_raster.kernel import RAW_ROWS, lane_features
+
+    total = raw_compact.shape[1]
+    num_tiles = total // (steps * block_g)
+    raws = raw_compact.reshape(RAW_ROWS, num_tiles * steps, block_g)
+    raws = raws.transpose(1, 0, 2)  # (T*steps, RAW_ROWS, block_g)
+    bands = chunk_band.reshape(-1).astype(jnp.int32)
+    if banded:
+        feats = jax.vmap(
+            lambda raw, band: lane_features(
+                raw, cam_vec, sh_degree=sh_degree, band=band
+            )
+        )(raws, bands)
+    else:
+        feats = jax.vmap(
+            lambda raw: lane_features(raw, cam_vec, sh_degree=sh_degree)
+        )(raws)
+    feats = feats.reshape(num_tiles, steps, *feats.shape[1:])
+    return _replay_counters(
+        feats,
+        pix,
+        nsteps,
+        chunk_band,
+        sh_degree=sh_degree,
+        banded=banded,
+        early_exit=early_exit,
+    )
+
+
+def replay_fused_stats_q(
+    qf_c,
+    qi_c,
+    qdc_c,
+    cam_vec,
+    pix,
+    nsteps,
+    chunk_band,
+    *,
+    steps: int,
+    block_g: int,
+    sh_degree: int,
+    banded: bool,
+    early_exit: bool,
+) -> dict:
+    """jnp reference for the quantized fused kernel's diagnostics plane."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_raster.kernel import (
+        QDC_ROWS,
+        QF_ROWS,
+        QI_ROWS,
+        lane_features_q,
+    )
+
+    total = qf_c.shape[1]
+    num_tiles = total // (steps * block_g)
+
+    def chunked(plane, rows):
+        return plane.reshape(rows, num_tiles * steps, block_g).transpose(
+            1, 0, 2
+        )
+
+    qfs = chunked(qf_c, QF_ROWS)
+    qis = chunked(qi_c, QI_ROWS)
+    qdcs = chunked(qdc_c, QDC_ROWS)
+    bands = chunk_band.reshape(-1).astype(jnp.int32)
+    if banded:
+        feats = jax.vmap(
+            lambda qf, qi, qdc, band: lane_features_q(
+                qf, qi, qdc, cam_vec, sh_degree=sh_degree, band=band
+            )
+        )(qfs, qis, qdcs, bands)
+    else:
+        feats = jax.vmap(
+            lambda qf, qi, qdc: lane_features_q(
+                qf, qi, qdc, cam_vec, sh_degree=sh_degree
+            )
+        )(qfs, qis, qdcs)
+    feats = feats.reshape(num_tiles, steps, *feats.shape[1:])
+    return _replay_counters(
+        feats,
+        pix,
+        nsteps,
+        chunk_band,
+        sh_degree=sh_degree,
+        banded=banded,
+        early_exit=early_exit,
+    )

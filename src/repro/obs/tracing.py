@@ -1,0 +1,245 @@
+"""Lightweight tracing: Chrome trace-event JSON for Perfetto.
+
+A :class:`Tracer` collects complete ("X") events; ``with span("name")``
+wraps a region, and ``sp.fence(arrays)`` marks device values that must be
+``block_until_ready`` before the span closes — without a fence, a span
+around an async XLA dispatch measures only enqueue time, not compute.
+
+The output (``tracer.save(path)`` / ``tracer.to_json()``) is the Chrome
+trace-event format: ``{"traceEvents": [...]}`` with microsecond ``ts`` /
+``dur`` fields. Open it at https://ui.perfetto.dev (drag the file in) or
+``chrome://tracing``. Thread rows carry real thread names via "M"
+metadata events; callers can also pin events to logical rows (e.g. one
+row per server slot) with an explicit ``tid``.
+
+Dependency-free: ``jax`` is imported lazily and only when a span actually
+fences device values.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from contextlib import contextmanager
+
+__all__ = ["Tracer", "span", "get_tracer", "set_tracer"]
+
+
+class _Span:
+    """Handle yielded by :func:`span` — mutate args, fence device values."""
+
+    __slots__ = ("name", "args", "_fences")
+
+    def __init__(self, name: str, args: dict) -> None:
+        self.name = name
+        self.args = args
+        self._fences: list = []
+
+    def fence(self, value) -> None:
+        """Block on ``value`` (any pytree of jax arrays) before the span
+        closes, so the recorded duration covers device compute."""
+        self._fences.append(value)
+
+    def set(self, **kwargs) -> None:
+        self.args.update(kwargs)
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def fence(self, value) -> None:
+        pass
+
+    def set(self, **kwargs) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Collects Chrome trace events. Thread-safe; bounded by ``max_events``."""
+
+    def __init__(self, max_events: int = 200_000) -> None:
+        self._lock = threading.Lock()
+        self._events: list[dict] = []
+        self._epoch = time.perf_counter()
+        self._tids: dict[int, int] = {}
+        self._dropped = 0
+        self.max_events = max_events
+        self.pid = 1
+
+    # -- time ------------------------------------------------------------
+    def now_us(self) -> float:
+        """Microseconds since tracer epoch (the trace's time axis)."""
+        return (time.perf_counter() - self._epoch) * 1e6
+
+    def ts_us(self, t_perf: float) -> float:
+        """Convert a stored ``time.perf_counter()`` stamp to trace time.
+
+        Lets callers that already keep wall stamps (e.g. a request's
+        enqueue time recorded on the client thread) emit events at those
+        exact points after the fact.
+        """
+        return (t_perf - self._epoch) * 1e6
+
+    # -- thread rows -----------------------------------------------------
+    def _tid_for_current_thread(self) -> int:
+        ident = threading.get_ident()
+        with self._lock:
+            tid = self._tids.get(ident)
+            if tid is None:
+                tid = len(self._tids) + 1
+                self._tids[ident] = tid
+                self._events.append({
+                    "ph": "M", "pid": self.pid, "tid": tid,
+                    "name": "thread_name",
+                    "args": {"name": threading.current_thread().name},
+                })
+        return tid
+
+    def lane_tid(self, lane: int, name: str | None = None) -> int:
+        """A logical trace row (e.g. a server slot) rather than a real
+        thread; rows start at 100 to stay clear of thread rows."""
+        tid = 100 + lane
+        if name is not None:
+            with self._lock:
+                key = -(lane + 1)  # sentinel so real idents never collide
+                if key not in self._tids:
+                    self._tids[key] = tid
+                    self._events.append({
+                        "ph": "M", "pid": self.pid, "tid": tid,
+                        "name": "thread_name", "args": {"name": name},
+                    })
+        return tid
+
+    # -- events ----------------------------------------------------------
+    def emit(
+        self,
+        name: str,
+        ts_us: float,
+        dur_us: float,
+        tid: int | None = None,
+        cat: str = "repro",
+        args: dict | None = None,
+    ) -> None:
+        """Record one complete ("X") event at explicit timestamps."""
+        event = {
+            "name": name, "cat": cat, "ph": "X",
+            "ts": round(ts_us, 3), "dur": round(max(dur_us, 0.0), 3),
+            "pid": self.pid,
+            "tid": self._tid_for_current_thread() if tid is None else tid,
+        }
+        if args:
+            event["args"] = args
+        with self._lock:
+            if len(self._events) >= self.max_events:
+                self._dropped += 1
+                return
+            self._events.append(event)
+
+    def instant(self, name: str, tid: int | None = None,
+                args: dict | None = None) -> None:
+        event = {
+            "name": name, "cat": "repro", "ph": "i", "s": "t",
+            "ts": round(self.now_us(), 3), "pid": self.pid,
+            "tid": self._tid_for_current_thread() if tid is None else tid,
+        }
+        if args:
+            event["args"] = args
+        with self._lock:
+            if len(self._events) < self.max_events:
+                self._events.append(event)
+
+    # -- export ----------------------------------------------------------
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def to_json(self) -> dict:
+        out = {"traceEvents": self.events(), "displayTimeUnit": "ms"}
+        if self._dropped:
+            out["droppedEvents"] = self._dropped
+        return out
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+
+
+_current: Tracer | None = None
+_current_lock = threading.Lock()
+
+
+def get_tracer() -> Tracer | None:
+    """The process-default tracer, or None when tracing is off."""
+    return _current
+
+
+def set_tracer(tracer: Tracer | None) -> Tracer | None:
+    """Install (or clear, with None) the process-default tracer."""
+    global _current
+    with _current_lock:
+        prev, _current = _current, tracer
+    return prev
+
+
+@contextmanager
+def span(name: str, *, tracer: Tracer | None = None, tid: int | None = None,
+         **attrs):
+    """Trace a region: ``with span("bin_gaussians", tier="raster") as sp``.
+
+    Keyword attrs land in the event's ``args``. When tracing is disabled
+    (no tracer installed and none passed) this is a cheap no-op. Call
+    ``sp.fence(out)`` on device values produced inside the span to make
+    the duration cover device compute, not just async dispatch.
+    """
+    tr = tracer if tracer is not None else _current
+    if tr is None:
+        yield _NULL_SPAN
+        return
+    sp = _Span(name, dict(attrs))
+    t0 = tr.now_us()
+    try:
+        yield sp
+    finally:
+        if sp._fences:
+            import jax
+
+            jax.block_until_ready(sp._fences)
+        tr.emit(name, t0, tr.now_us() - t0, tid=tid, args=sp.args or None)
+
+
+def validate_trace(trace: dict) -> int:
+    """Check Chrome trace-event schema; return the number of "X" events.
+
+    Requires a ``traceEvents`` list where every complete event carries
+    numeric ``ts``/``dur``, a ``name``, ``pid``/``tid``. Raises
+    ``ValueError`` on the first violation — used by tests and the CI
+    serving smoke (the same file Perfetto loads).
+    """
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        raise ValueError("trace must be a dict with a traceEvents list")
+    events = trace["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    n_complete = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev:
+            raise ValueError(f"event {i}: missing ph")
+        if ev["ph"] == "X":
+            for field in ("name", "ts", "dur", "pid", "tid"):
+                if field not in ev:
+                    raise ValueError(f"event {i}: X event missing {field!r}")
+            if not isinstance(ev["ts"], (int, float)) or not isinstance(
+                ev["dur"], (int, float)
+            ):
+                raise ValueError(f"event {i}: ts/dur must be numeric")
+            if ev["dur"] < 0:
+                raise ValueError(f"event {i}: negative dur")
+            n_complete += 1
+    return n_complete
+
+
+__all__.append("validate_trace")

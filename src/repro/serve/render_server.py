@@ -75,8 +75,14 @@ from repro.core.multicam import (
     stack_cameras,
 )
 from repro.core.scene import SceneTree, build_scene_tree
+from repro.obs.metrics import DEFAULT_LATENCY_BUCKETS_MS, Registry
+from repro.obs.tracing import Tracer, span
 
 MODES = ("continuous", "microbatch")
+
+# Bucket bounds for the per-step real-request count (slot-table width is
+# small, so fine-grained powers of two resolve occupancy exactly).
+BATCH_SIZE_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 
 
 @dataclasses.dataclass
@@ -135,6 +141,8 @@ class _Step:
     bucket: tuple[int, int]
     lanes: list[_Lane]
     images: jax.Array  # (max_batch, H, W, 3); a device future until ready
+    t_dispatch: float = 0.0  # perf_counter at async dispatch
+    t_ready: float = 0.0  # perf_counter when is_ready() was observed
 
 
 class RenderServer:
@@ -162,6 +170,19 @@ class RenderServer:
       mode: ``"continuous"`` (slot table, refill-at-completion, dispatch
         pipelined ahead of harvest — the default) or ``"microbatch"``
         (PR 3's window-then-drain baseline; single bucket only).
+      registry: metrics registry (``repro.obs``) the server reports into
+        (latency/batch-size histograms, request counters, compile gauges,
+        resident-model footprint). Defaults to a fresh private
+        :class:`~repro.obs.metrics.Registry`; pass one to share a
+        ``/metrics`` endpoint across components. All instruments are
+        bounded (ring-buffer percentiles), so a long-lived server's stats
+        cost O(ring) memory, never O(requests).
+      tracer: optional :class:`~repro.obs.tracing.Tracer`. When set, every
+        served request emits ``queue`` / ``render`` / ``harvest`` spans on
+        a logical per-slot trace row, stamped with the slot's generation
+        counter at assignment — load the saved trace in Perfetto to see
+        admission waits, step packing, and the dispatch-ahead-of-harvest
+        overlap. ``None`` (default) is a zero-cost no-op.
     """
 
     def __init__(
@@ -175,6 +196,8 @@ class RenderServer:
         max_batch: int = 8,
         max_wait_ms: float = 5.0,
         mode: str = "continuous",
+        registry: Registry | None = None,
+        tracer: Tracer | None = None,
     ):
         if mode not in MODES:
             raise ValueError(f"mode={mode!r} not in {MODES}")
@@ -221,9 +244,37 @@ class RenderServer:
         # Slot table (scheduler-thread-private after start).
         self._slot_req: list[_Request | None] = [None] * self.max_batch
         self._slot_gen: list[int] = [0] * self.max_batch
-        # Stats (guarded by _lock): per-request latency, per-step occupancy.
-        self._latencies_ms: list[float] = []
-        self._batch_sizes: list[int] = []
+        # Stats live in a metrics registry (repro.obs): bounded ring-buffer
+        # histograms replace the unbounded per-request lists the server
+        # used to append to — memory is O(ring_size) for the lifetime.
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer
+        self._lat = self.registry.histogram(
+            "render_server_latency_ms",
+            "Request latency, enqueue to result available (ms)",
+            buckets=DEFAULT_LATENCY_BUCKETS_MS,
+        ).labels(mode=self.mode)
+        self._batch = self.registry.histogram(
+            "render_server_batch_size",
+            "Real (unmasked) requests per dispatched step/batch",
+            buckets=BATCH_SIZE_BUCKETS,
+        ).labels(mode=self.mode)
+        self._requests_total = self.registry.counter(
+            "render_server_requests_total", "Requests admitted by submit()"
+        ).labels(mode=self.mode)
+        self._rejected_total = self.registry.counter(
+            "render_server_rejected_total",
+            "Requests rejected at submit (size outside the bucket set)",
+        ).labels(mode=self.mode)
+        self._compile_gauge = self.registry.gauge(
+            "render_server_compile_ms",
+            "Warmup compile time per image-size bucket (ms)",
+        )
+        mem = self.memory_stats()
+        if mem is not None:
+            from repro.obs.pipeline import fold_memory
+
+            fold_memory(self.registry, mem)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -240,17 +291,26 @@ class RenderServer:
                 cam = camera
             batch = stack_cameras([cam] * self.max_batch)
             t0 = time.perf_counter()
-            if self.mode == "continuous":
-                active = jnp.ones((self.max_batch,), dtype=bool)
-                render_batch_masked_jit(
-                    self.model, batch, active, self.config
-                ).block_until_ready()
-            else:
-                render_batch_jit(self.model, batch, self.config).block_until_ready()
+            bucket_name = f"{bucket[0]}x{bucket[1]}"
+            with span(
+                "warmup_compile", tracer=self.tracer,
+                bucket=bucket_name, mode=self.mode,
+            ):
+                if self.mode == "continuous":
+                    active = jnp.ones((self.max_batch,), dtype=bool)
+                    render_batch_masked_jit(
+                        self.model, batch, active, self.config
+                    ).block_until_ready()
+                else:
+                    render_batch_jit(
+                        self.model, batch, self.config
+                    ).block_until_ready()
             ms = (time.perf_counter() - t0) * 1e3
             self.compile_ms_by_bucket[bucket] = ms
+            self._compile_gauge.set(ms, bucket=bucket_name, mode=self.mode)
             total += ms
         self.compile_ms = total
+        self._compile_gauge.set(total, bucket="total", mode=self.mode)
         return total
 
     def start(self) -> "RenderServer":
@@ -294,6 +354,7 @@ class RenderServer:
         """Enqueue one camera request; resolves to a :class:`RenderResult`."""
         key = (camera.width, camera.height)
         if key not in self._sentinels:
+            self._rejected_total.inc()
             raise ValueError(
                 f"request size {key} not in the server's static bucket set "
                 f"{self.buckets} (one compiled executable per bucket; pass "
@@ -304,6 +365,7 @@ class RenderServer:
             if self._thread is None or self._stopping:
                 raise RuntimeError("server not started")
             self._queue.put(req)
+        self._requests_total.inc()
         return req.future
 
     def render(self, camera: Camera) -> RenderResult:
@@ -320,38 +382,30 @@ class RenderServer:
     def stats(self) -> dict:
         """Latency percentiles + slot/batch occupancy over the lifetime.
 
-        ``memory`` reports the resident model's footprint (bytes by field,
-        compression ratio) when the server holds a :class:`SceneTree`;
-        ``None`` when serving a raw cloud.
+        Built from the server's registry instruments: counts and means are
+        exact over the lifetime, percentiles come from the histogram's
+        bounded ring (the most recent ``ring_size`` observations) — so the
+        schema is unchanged from the unbounded-list era but the memory is
+        O(ring), never O(requests). ``memory`` reports the resident
+        model's footprint (bytes by field, compression ratio) when the
+        server holds a :class:`SceneTree`; ``None`` when serving a raw
+        cloud.
         """
-        with self._lock:
-            lat = np.asarray(self._latencies_ms, dtype=np.float64)
-            sizes = np.asarray(self._batch_sizes, dtype=np.float64)
-        if lat.size == 0:
-            # Same schema as the served case so pollers never KeyError on
-            # an idle server.
-            return {
-                "mode": self.mode,
-                "requests": 0,
-                "batches": 0,
-                "compile_ms": self.compile_ms,
-                "latency_ms_p50": 0.0,
-                "latency_ms_p95": 0.0,
-                "latency_ms_mean": 0.0,
-                "mean_batch_size": 0.0,
-                "occupancy": 0.0,
-                "memory": self.memory_stats(),
-            }
+        lat = self._lat.summary()
+        bs = self._batch.summary()
+        mean_bs = float(bs["mean"]) if bs["mean"] is not None else 0.0
+        # None -> 0.0 on the idle server: same schema as the served case
+        # so pollers never KeyError.
         return {
             "mode": self.mode,
-            "requests": int(lat.size),
-            "batches": int(sizes.size),
+            "requests": int(lat["count"]),
+            "batches": int(bs["count"]),
             "compile_ms": self.compile_ms,
-            "latency_ms_p50": float(np.percentile(lat, 50)),
-            "latency_ms_p95": float(np.percentile(lat, 95)),
-            "latency_ms_mean": float(lat.mean()),
-            "mean_batch_size": float(sizes.mean()),
-            "occupancy": float(sizes.mean() / self.max_batch),
+            "latency_ms_p50": float(lat["p50"] or 0.0),
+            "latency_ms_p95": float(lat["p95"] or 0.0),
+            "latency_ms_mean": float(lat["mean"] or 0.0),
+            "mean_batch_size": mean_bs,
+            "occupancy": mean_bs / self.max_batch,
             "memory": self.memory_stats(),
         }
 
@@ -438,7 +492,10 @@ class RenderServer:
                 if not lane.req.future.done():
                     lane.req.future.set_exception(e)
             return None
-        return _Step(bucket=bucket, lanes=lanes, images=images)
+        return _Step(
+            bucket=bucket, lanes=lanes, images=images,
+            t_dispatch=time.perf_counter(),
+        )
 
     def _harvest(self, step: _Step) -> None:
         """Block on a step's images and fan results out to its lanes.
@@ -459,10 +516,11 @@ class RenderServer:
             return
         t_done = time.perf_counter()
         n = len(step.lanes)
-        with self._lock:
-            self._batch_sizes.append(n)
-            for lane in step.lanes:
-                self._latencies_ms.append((t_done - lane.req.t_enqueue) * 1e3)
+        self._batch.observe(n)
+        for lane in step.lanes:
+            self._lat.observe((t_done - lane.req.t_enqueue) * 1e3)
+        if self.tracer is not None:
+            self._trace_step(step, t_done)
         for lane in step.lanes:
             if not lane.req.future.done():
                 lane.req.future.set_result(
@@ -472,6 +530,38 @@ class RenderServer:
                         batch_size=n,
                     )
                 )
+
+    def _trace_step(self, step: _Step, t_done: float) -> None:
+        """Emit per-request trace spans for one harvested step.
+
+        Emitted at harvest because only then are all three boundaries
+        known. Each lane gets a logical trace row per *slot* with three
+        back-to-back spans — ``queue`` (enqueue -> dispatch: admission
+        wait plus any compute the request contended with), ``render``
+        (dispatch -> compute ready: the async XLA step the lane rode),
+        ``harvest`` (ready -> fan-out: device transfer + bookkeeping,
+        overlapped with the next step's render). ``args.gen`` carries the
+        slot's generation counter at assignment, so a reused row's spans
+        stay attributable to distinct requests.
+        """
+        tr = self.tracer
+        n = len(step.lanes)
+        bucket_name = f"{step.bucket[0]}x{step.bucket[1]}"
+        for lane in step.lanes:
+            tid = tr.lane_tid(lane.slot, f"slot {lane.slot}")
+            args = {
+                "slot": lane.slot, "gen": lane.gen,
+                "bucket": bucket_name, "batch_size": n,
+            }
+            q0 = tr.ts_us(lane.req.t_enqueue)
+            d0 = tr.ts_us(step.t_dispatch)
+            r0 = tr.ts_us(step.t_ready)
+            tr.emit("queue", q0, d0 - q0, tid=tid, cat="serve", args=args)
+            tr.emit("render", d0, r0 - d0, tid=tid, cat="serve", args=args)
+            tr.emit(
+                "harvest", r0, tr.ts_us(t_done) - r0,
+                tid=tid, cat="serve", args=args,
+            )
 
     def _try_dispatch(
         self,
@@ -520,6 +610,7 @@ class RenderServer:
             if inflight:
                 head = inflight[0]
                 if head.images.is_ready():
+                    head.t_ready = time.perf_counter()
                     # Refill-at-completion: compute is done, so the head's
                     # slots are free for the next step *before* its harvest
                     # — a reused slot's previous occupant may still be
@@ -604,13 +695,17 @@ class RenderServer:
         pad = self.max_batch - len(live)
         cams = [r.camera for r in live] + [live[-1].camera] * pad
         batch: CameraBatch = stack_cameras(cams)
-        imgs = render_batch_jit(self.model, batch, self.config)
+        with span(
+            "microbatch_step", tracer=self.tracer,
+            mode=self.mode, batch_size=len(live),
+        ) as sp:
+            imgs = render_batch_jit(self.model, batch, self.config)
+            sp.fence(imgs)
         imgs = np.asarray(jax.device_get(imgs))
         t_done = time.perf_counter()
-        with self._lock:
-            self._batch_sizes.append(len(live))
-            for r in live:
-                self._latencies_ms.append((t_done - r.t_enqueue) * 1e3)
+        self._batch.observe(len(live))
+        for r in live:
+            self._lat.observe((t_done - r.t_enqueue) * 1e3)
         for i, r in enumerate(live):
             if not r.future.done():
                 r.future.set_result(

@@ -1,0 +1,449 @@
+"""repro.obs: metrics registry, tracing, in-kernel pipeline counters, and
+the instrumented RenderServer.
+
+The two load-bearing contracts pinned here:
+
+* ``collect_stats=True`` never changes the image — bitwise-identical on
+  every raster path (the diagnostics plane is a pure side output).
+* the fused kernel's in-kernel counters equal the plain-jnp reference
+  replay **exactly** (not approximately) on the same compacted operands —
+  f32 and quantized, banded and unbanded.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RenderConfig,
+    build_scene_tree,
+    clustered_gaussians,
+    look_at_camera,
+    orbit_cameras,
+    random_gaussians,
+    render,
+)
+from repro.core.render import render_with_stats
+from repro.core.scene import resolve_scene_banded
+from repro.obs.metrics import (
+    Histogram,
+    Registry,
+    serve_metrics,
+    validate_prometheus,
+)
+from repro.obs.pipeline import (
+    fold_render_stats,
+    replay_fused_stats,
+    replay_fused_stats_q,
+    summarize_kernel_stats,
+)
+from repro.obs.tracing import Tracer, span, validate_trace
+from repro.serve import RenderServer
+
+SIZE = 32
+BG = jnp.zeros((3,), jnp.float32)
+
+
+def _tiny_scene(n: int = 192, seed: int = 0):
+    g = random_gaussians(jax.random.PRNGKey(seed), n, extent=1.5)
+    cam = look_at_camera((0.0, 1.0, -5.0), (0.0, 0.0, 0.0),
+                         width=SIZE, height=SIZE)
+    return g, cam
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_counter_gauge_labels(self):
+        reg = Registry()
+        c = reg.counter("reqs_total", "requests")
+        c.inc(mode="a")
+        c.inc(2.0, mode="a")
+        c.inc(mode="b")
+        assert c.value(mode="a") == 3.0
+        assert c.value(mode="b") == 1.0
+        g = reg.gauge("occupancy")
+        g.set(0.75, path="fused")
+        assert g.value(path="fused") == 0.75
+        # get-or-create: same object back, never a fresh series
+        assert reg.counter("reqs_total") is c
+
+    def test_kind_mismatch_raises(self):
+        reg = Registry()
+        reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_thread_safety_exact_counts(self):
+        reg = Registry()
+        c = reg.counter("n").labels()
+        h = reg.histogram("lat").labels()
+        threads, per = 8, 500
+
+        def work():
+            for i in range(per):
+                c.inc()
+                h.observe(float(i % 37))
+
+        ts = [threading.Thread(target=work) for _ in range(threads)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert c.value == threads * per
+        assert h.count == threads * per
+        # cumulative buckets account for every observation
+        assert sum(h.bucket_counts) == threads * per
+
+    def test_histogram_percentiles_match_numpy(self):
+        reg = Registry()
+        h = reg.histogram("lat_ms").labels()
+        rng = np.random.default_rng(0)
+        vals = rng.exponential(25.0, size=997)
+        for v in vals:
+            h.observe(float(v))
+        got = h.percentile([50.0, 95.0, 99.0])
+        want = np.percentile(vals, [50.0, 95.0, 99.0])
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+        s = h.summary()
+        assert s["count"] == 997
+        np.testing.assert_allclose(s["p50"], want[0])
+        np.testing.assert_allclose(s["max"], vals.max())
+
+    def test_histogram_ring_bounded(self):
+        h = Histogram("lat", buckets=(10.0, 100.0), ring_size=64)
+        child = h.labels()
+        for v in range(1000):
+            child.observe(float(v))
+        # totals are exact over the lifetime...
+        assert child.count == 1000
+        assert child.sum == sum(range(1000))
+        # ...but raw retention is bounded to the most recent ring_size
+        recent = child._recent()
+        assert len(recent) == 64
+        assert sorted(recent) == [float(v) for v in range(936, 1000)]
+
+    def test_snapshot_and_prometheus_roundtrip(self):
+        reg = Registry()
+        reg.counter("reqs_total", "served").inc(3.0, mode="continuous")
+        reg.gauge("occ").set(0.5)
+        h = reg.histogram("lat_ms", "latency", buckets=(1.0, 10.0))
+        for v in (0.5, 5.0, 50.0):
+            h.observe(v, mode="continuous")
+        snap = reg.snapshot()
+        assert snap["reqs_total"]["type"] == "counter"
+        (series,) = snap["lat_ms"]["series"]
+        assert series["summary"]["count"] == 3
+        # cumulative buckets, +Inf == count
+        assert series["buckets"] == {"1": 1, "10": 2, "+Inf": 3}
+        # the snapshot is what benchmarks persist — must be JSON-clean
+        json.dumps(snap)
+        families = validate_prometheus(reg.render_prometheus())
+        assert families["lat_ms"]["type"] == "histogram"
+        assert families["reqs_total"]["type"] == "counter"
+
+    def test_serve_metrics_endpoint(self):
+        reg = Registry()
+        reg.gauge("up").set(1.0)
+        http = serve_metrics(reg, port=0)
+        try:
+            port = http.server_address[1]
+            with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics"
+            ) as resp:
+                assert resp.status == 200
+                text = resp.read().decode()
+        finally:
+            http.shutdown()
+        assert "up 1" in text
+        validate_prometheus(text)
+
+
+# ---------------------------------------------------------------------------
+# Tracing
+# ---------------------------------------------------------------------------
+
+
+class TestTracing:
+    def test_span_nesting_and_schema(self):
+        tr = Tracer()
+        with span("outer", tracer=tr, tier="test"):
+            with span("inner", tracer=tr) as sp:
+                sp.set(detail=1)
+        trace = json.loads(json.dumps(tr.to_json()))
+        assert validate_trace(trace) == 2
+        by_name = {
+            e["name"]: e for e in trace["traceEvents"] if e["ph"] == "X"
+        }
+        outer, inner = by_name["outer"], by_name["inner"]
+        # proper nesting on the time axis
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+        assert outer["args"] == {"tier": "test"}
+        assert inner["args"] == {"detail": 1}
+        # thread rows carry names via "M" metadata events
+        assert any(
+            e["ph"] == "M" and e["name"] == "thread_name"
+            for e in trace["traceEvents"]
+        )
+
+    def test_span_fence_blocks_on_device_values(self):
+        tr = Tracer()
+        x = jnp.ones((64, 64))
+        with span("matmul", tracer=tr) as sp:
+            sp.fence(x @ x)
+        (ev,) = [e for e in tr.events() if e["ph"] == "X"]
+        assert ev["dur"] >= 0.0
+
+    def test_no_tracer_is_noop(self):
+        with span("nothing", attr=1) as sp:
+            sp.fence(jnp.ones(2))
+            sp.set(extra=2)  # must not raise
+
+    def test_max_events_bounded(self):
+        tr = Tracer(max_events=3)
+        for i in range(10):
+            tr.emit(f"e{i}", float(i), 1.0, tid=7)
+        assert len(tr.events()) <= 3
+        assert tr.to_json()["droppedEvents"] == 7
+
+    def test_lane_tid_logical_rows(self):
+        tr = Tracer()
+        assert tr.lane_tid(2, "slot 2") == 102
+        names = [
+            e["args"]["name"]
+            for e in tr.events()
+            if e["ph"] == "M" and e["name"] == "thread_name"
+        ]
+        assert "slot 2" in names
+
+
+# ---------------------------------------------------------------------------
+# collect_stats: image invariance on every raster path
+# ---------------------------------------------------------------------------
+
+
+class TestCollectStatsBitwise:
+    @pytest.mark.parametrize(
+        "path", ("dense", "binned", "pallas", "pallas_binned", "pallas_fused")
+    )
+    def test_image_bitwise_unchanged(self, path):
+        g, cam = _tiny_scene()
+        cfg = RenderConfig(raster_path=path, tile_capacity=64, sh_degree=1)
+        plain = np.asarray(render(g, cam, cfg))
+        img, stats = render_with_stats(
+            g, cam, cfg.replace(collect_stats=True)
+        )
+        assert np.array_equal(np.asarray(img), plain), (
+            f"collect_stats changed the {path} image"
+        )
+        assert stats is not None
+        expected = "kernel" if path == "pallas_fused" else "occupancy"
+        assert expected in stats
+
+    def test_collect_stats_off_returns_none(self):
+        g, cam = _tiny_scene()
+        cfg = RenderConfig(raster_path="binned", tile_capacity=64, sh_degree=1)
+        img, stats = render_with_stats(g, cam, cfg)
+        assert stats is None
+        assert np.array_equal(np.asarray(img), np.asarray(render(g, cam, cfg)))
+
+
+# ---------------------------------------------------------------------------
+# In-kernel counters == jnp reference replay (exact)
+# ---------------------------------------------------------------------------
+
+
+def _assert_counters_equal(kernel_stats: dict, ref: dict) -> None:
+    for key in ("chunks_processed", "lanes_blended", "max_sh_band"):
+        np.testing.assert_array_equal(
+            np.asarray(kernel_stats[key]),
+            np.asarray(ref[key]),
+            err_msg=f"in-kernel {key} diverged from the reference replay",
+        )
+
+
+class TestKernelCountersReplay:
+    def test_f32_counters_match_replay(self):
+        from repro.kernels.fused_raster import ops as fops
+
+        g, cam = _tiny_scene()
+        kw = dict(tile_size=16, capacity=64, block_g=128, tile_chunk=None)
+        _, stats = fops.fused_render_stats(
+            g, cam, BG, sh_degree=1, early_exit=True, **kw
+        )
+        raw_compact, nsteps, chunk_band, bins, steps = (
+            fops.build_fused_operands(g, cam, **kw)
+        )
+        pix = fops._tile_order_pixels(
+            bins.tiles_y * 16, bins.tiles_x * 16, 16
+        )
+        ref = replay_fused_stats(
+            raw_compact, fops.pack_camera(cam), pix, nsteps, chunk_band,
+            steps=steps, block_g=128, sh_degree=1, banded=False,
+            early_exit=True,
+        )
+        _assert_counters_equal(stats, ref)
+        np.testing.assert_array_equal(
+            np.asarray(stats["chunks_assigned"]), np.asarray(nsteps)
+        )
+        # processed never exceeds assigned (early exit only cuts work)
+        assert np.all(
+            np.asarray(stats["chunks_processed"])
+            <= np.asarray(stats["chunks_assigned"])
+        )
+
+    def test_quantized_banded_counters_match_replay(self):
+        from repro.kernels.fused_raster import ops as fops
+
+        g = clustered_gaussians(jax.random.PRNGKey(3), 256, num_clusters=4)
+        cam = look_at_camera((0.0, 1.0, -5.0), (0.0, 0.0, 0.0),
+                             width=SIZE, height=SIZE)
+        tree = build_scene_tree(g, leaf_size=64, compress="int8")
+        cfg = RenderConfig(
+            raster_path="pallas_fused", cull=True, compress="int8",
+            tile_capacity=64, sh_degree=3, lod_thresholds=(0.5, 4.0),
+        )
+        qg, band = resolve_scene_banded(tree, cam, cfg)
+        assert band is not None
+        kw = dict(tile_size=16, capacity=64, block_g=128, tile_chunk=None)
+        _, stats = fops.fused_render_q_stats(
+            qg, cam, BG, band=band, sh_degree=3, early_exit=True, **kw
+        )
+        (qf_c, qi_c, qdc_c), nsteps, chunk_band, bins, steps = (
+            fops.build_fused_operands_q(qg, cam, band=band, **kw)
+        )
+        pix = fops._tile_order_pixels(
+            bins.tiles_y * 16, bins.tiles_x * 16, 16
+        )
+        ref = replay_fused_stats_q(
+            qf_c, qi_c, qdc_c, fops.pack_camera(cam), pix, nsteps,
+            chunk_band, steps=steps, block_g=128, sh_degree=3, banded=True,
+            early_exit=True,
+        )
+        _assert_counters_equal(stats, ref)
+        # LOD banding visible to the counters: max band bounded by degree
+        assert float(np.max(np.asarray(stats["max_sh_band"]))) <= 3.0
+
+    def test_fold_render_stats_into_registry(self):
+        g, cam = _tiny_scene()
+        cfg = RenderConfig(
+            raster_path="pallas_fused", tile_capacity=64, sh_degree=1,
+            collect_stats=True,
+        )
+        _, st = render_with_stats(g, cam, cfg)
+        reg = Registry()
+        agg = fold_render_stats(reg, st, config="test")
+        assert agg is not None
+        assert 0.0 <= agg["early_exit_savings"] <= 1.0
+        assert 0.0 <= agg["chunk_occupancy_measured"] <= 1.0
+        assert agg == summarize_kernel_stats(
+            st["kernel"], block_g=st["block_g"]
+        )
+        snap = reg.snapshot()
+        for name in (
+            "render_chunks_assigned",
+            "render_chunks_processed",
+            "render_early_exit_savings",
+            "render_early_exit_chunks",
+            "render_chunk_occupancy_measured",
+            "render_sh_band_max",
+        ):
+            assert name in snap, name
+        # per-tile exit-depth histogram saw every tile
+        (series,) = snap["render_early_exit_chunks"]["series"]
+        assert series["summary"]["count"] == agg["num_tiles"]
+
+
+# ---------------------------------------------------------------------------
+# RenderServer observability
+# ---------------------------------------------------------------------------
+
+
+def _server(model, **kw):
+    cfg = RenderConfig(raster_path="binned", tile_capacity=64, early_exit=False)
+    kw.setdefault("width", SIZE)
+    kw.setdefault("height", SIZE)
+    kw.setdefault("max_batch", 4)
+    return RenderServer(model, cfg, **kw)
+
+
+class TestServerObservability:
+    def test_stats_keys_pinned_and_memory_bounded(self):
+        model = random_gaussians(jax.random.PRNGKey(0), 64, extent=1.5)
+        cams = orbit_cameras(5, radius=5.0, width=SIZE, height=SIZE)
+        srv = _server(model)
+        idle_keys = set(srv.stats())
+        with srv:
+            [f.result(timeout=120) for f in map(srv.submit, cams)]
+        stats = srv.stats()
+        # the pre-registry stats() schema, pinned
+        assert set(stats) == {
+            "mode", "requests", "batches", "compile_ms", "latency_ms_p50",
+            "latency_ms_p95", "latency_ms_mean", "mean_batch_size",
+            "occupancy", "memory",
+        }
+        assert idle_keys == set(stats)
+        assert stats["requests"] == 5
+        assert stats["latency_ms_p95"] >= stats["latency_ms_p50"] > 0.0
+        # bounded: ring-buffer histograms, no unbounded per-request lists
+        assert not hasattr(srv, "_latencies_ms")
+        assert not hasattr(srv, "_batch_sizes")
+        assert len(srv._lat._ring) == srv.registry.histogram(
+            "render_server_latency_ms"
+        ).ring_size
+
+    def test_metrics_and_trace_export(self):
+        model = random_gaussians(jax.random.PRNGKey(1), 64, extent=1.5)
+        cams = orbit_cameras(6, radius=5.0, width=SIZE, height=SIZE)
+        reg, tr = Registry(), Tracer()
+        with _server(model, registry=reg, tracer=tr) as srv:
+            [f.result(timeout=120) for f in map(srv.submit, cams)]
+        families = validate_prometheus(reg.render_prometheus())
+        for fam in (
+            "render_server_latency_ms",
+            "render_server_batch_size",
+            "render_server_requests_total",
+            "render_server_compile_ms",
+        ):
+            assert fam in families, fam
+        assert reg.counter("render_server_requests_total").value(
+            mode="continuous"
+        ) == 6.0
+        trace = json.loads(json.dumps(tr.to_json()))
+        assert validate_trace(trace) > 0
+        spans = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+        names = {e["name"] for e in spans}
+        assert {"queue", "render", "harvest", "warmup_compile"} <= names
+        # per-request spans are keyed by the slot's generation counter
+        queue_spans = [e for e in spans if e["name"] == "queue"]
+        assert len(queue_spans) == 6
+        for ev in queue_spans:
+            assert ev["args"]["gen"] >= 1
+            assert ev["tid"] == 100 + ev["args"]["slot"]
+
+    def test_microbatch_reports_same_series(self):
+        model = random_gaussians(jax.random.PRNGKey(2), 64, extent=1.5)
+        cams = orbit_cameras(3, radius=5.0, width=SIZE, height=SIZE)
+        reg, tr = Registry(), Tracer()
+        with _server(
+            model, mode="microbatch", max_wait_ms=5.0, registry=reg, tracer=tr
+        ) as srv:
+            [f.result(timeout=120) for f in map(srv.submit, cams)]
+        snap = reg.snapshot()
+        (series,) = [
+            s
+            for s in snap["render_server_latency_ms"]["series"]
+            if s["labels"].get("mode") == "microbatch"
+        ]
+        assert series["summary"]["count"] == 3
+        names = {e["name"] for e in tr.events() if e.get("ph") == "X"}
+        assert "microbatch_step" in names
