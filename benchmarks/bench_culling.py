@@ -110,7 +110,7 @@ def bench_scene(
 ) -> dict:
     g = make_scene(kind, n)
     t0 = time.perf_counter()
-    tree = build_scene_tree(g, leaf_size=leaf_size)
+    tree = jax.block_until_ready(build_scene_tree(g, leaf_size=leaf_size))
     build_s = time.perf_counter() - t0
     cams = inside_cameras(CAMERAS, image_size)
 

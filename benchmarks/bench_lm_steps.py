@@ -36,12 +36,15 @@ def main() -> None:
             batch["tokens"] = batch["tokens"][:, : T - cfg.num_patches]
             batch["labels"] = batch["labels"][:, : T - cfg.num_patches]
 
+        # reprolint: disable=retrace-hazard -- one compile per swept
+        # architecture; time_fn warms up past it.
         grad_fn = jax.jit(jax.value_and_grad(lambda p: mod.loss_fn(cfg, p, batch)))
         t_train = time_fn(grad_fn, params, warmup=1, iters=3)
         emit(f"lm/{arch}/train_step", t_train, f"B{B}xT{T}")
 
         state = mod.init_decode_state(cfg, B, 64)
         tok = jnp.zeros((B,), jnp.int32)
+        # reprolint: disable=retrace-hazard -- ditto: per-architecture compile.
         dec = jax.jit(lambda s, t: mod.decode_step(cfg, params, s, t))
         t_dec = time_fn(dec, state, tok, warmup=1, iters=5)
         emit(f"lm/{arch}/decode_step", t_dec, f"B{B}")

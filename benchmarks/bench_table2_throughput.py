@@ -14,6 +14,10 @@ the AIE simulator. Our ladder on this container (CPU wall-clock):
                  for the TPU-target number)
 """
 
+# reprolint: disable-file=retrace-hazard -- this benchmark's subject IS the
+# jit-assembly strategy: staged/naive deliberately build one jit per pipeline
+# stage (the HBM-round-trip baselines the fused path is measured against).
+
 from __future__ import annotations
 
 import argparse

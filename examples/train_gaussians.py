@@ -195,6 +195,7 @@ def main() -> None:
             )
         if (i + 1) % 50 == 0 or i == 0:
             print(f"step {i+1:4d}  loss {float(loss):.4f}")
+    jax.block_until_ready(g)  # fence: async dispatch is still in flight
     dt = time.time() - t0
     print(f"\ntrained {args.steps} steps in {dt:.1f}s "
           f"({1000*dt/args.steps:.0f} ms/step)")

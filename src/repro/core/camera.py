@@ -64,9 +64,12 @@ def look_at_camera(
 ) -> Camera:
     """Build a camera looking from ``eye`` toward ``target`` (OpenCV convention:
     +z forward, +x right, +y down)."""
-    eye = np.asarray(eye, dtype=np.float64)
-    target = np.asarray(target, dtype=np.float64)
-    up = np.asarray(up, dtype=np.float64)
+    # Deliberate f64: the look-at basis is orthonormalized host-side once
+    # per camera, then cast to `dtype` below — extra precision here never
+    # reaches the f32 render path.
+    eye = np.asarray(eye, dtype=np.float64)  # reprolint: disable=dtype-discipline
+    target = np.asarray(target, dtype=np.float64)  # reprolint: disable=dtype-discipline
+    up = np.asarray(up, dtype=np.float64)  # reprolint: disable=dtype-discipline
 
     fwd = target - eye
     fwd = fwd / (np.linalg.norm(fwd) + 1e-12)

@@ -165,7 +165,9 @@ def quantize_gaussians(
 def _band_lane_scales(lane: jax.Array) -> jax.Array:
     """(N, 5) lane scales -> (N, 15, 1) per-rest-basis SH decode scales."""
     reps = jnp.asarray([3, 5, 7])  # basis counts of bands 1..3
-    band_of_basis = jnp.repeat(jnp.arange(3), reps, total_repeat_length=15)
+    band_of_basis = jnp.repeat(
+        jnp.arange(3, dtype=jnp.int32), reps, total_repeat_length=15
+    )
     return lane[:, 2 + band_of_basis][:, :, None]  # (N, 15, 1)
 
 

@@ -165,7 +165,10 @@ def morton_codes(positions: np.ndarray) -> np.ndarray:
 
     Quantized on the positions' own AABB; degenerate axes collapse to 0.
     """
-    pos = np.asarray(positions, dtype=np.float64)
+    # Deliberate f64: quantizing the AABB in f64 keeps the 10-bit-per-axis
+    # bin edges stable for clouds whose extent dwarfs f32 resolution; only
+    # integer codes leave this function.
+    pos = np.asarray(positions, dtype=np.float64)  # reprolint: disable=dtype-discipline
     lo = pos.min(axis=0)
     span = pos.max(axis=0) - lo
     span = np.where(span > 0, span, 1.0)
@@ -229,7 +232,7 @@ def build_scene_tree(
     radius = (AABB_SIGMA * jnp.exp(log_scales).max(axis=-1)).reshape(
         m, leaf_size, 1
     )
-    valid = (jnp.arange(n_pad) < n).reshape(m, leaf_size, 1)
+    valid = (jnp.arange(n_pad, dtype=jnp.int32) < n).reshape(m, leaf_size, 1)
     big = jnp.asarray(jnp.finfo(pos.dtype).max, pos.dtype)
     lo = jnp.min(jnp.where(valid, pos - radius, big), axis=1)
     hi = jnp.max(jnp.where(valid, pos + radius, -big), axis=1)

@@ -140,7 +140,7 @@ class DensifyState:
 
 
 def init_densify_state(capacity: int, num_initial: int) -> DensifyState:
-    active = jnp.arange(capacity) < num_initial
+    active = jnp.arange(capacity, dtype=jnp.int32) < num_initial
     return DensifyState(
         active=active,
         grad_accum=jnp.zeros((capacity,), jnp.float32),
@@ -170,7 +170,7 @@ def densify_and_prune(
     params: GaussianParams,
     state: DensifyState,
     key: jax.Array,
-    cfg: DensifyConfig = DensifyConfig(),
+    cfg: DensifyConfig | None = None,
 ) -> tuple[GaussianParams, DensifyState]:
     """One densification event: prune -> clone/split into free slots.
 
@@ -178,6 +178,7 @@ def densify_and_prune(
     gradient first; if the pool is full, lowest-priority candidates are
     dropped (graceful saturation instead of reallocation).
     """
+    cfg = cfg if cfg is not None else DensifyConfig()
     n = params.num_gaussians
     avg_grad = state.grad_accum / jnp.maximum(state.count, 1.0)
 
@@ -197,7 +198,7 @@ def densify_and_prune(
     num_cand = jnp.sum(candidates)
     k = jnp.minimum(num_free, num_cand)  # dynamic, used via masking
 
-    slot_rank = jnp.arange(n)
+    slot_rank = jnp.arange(n, dtype=jnp.int32)
     write_valid = slot_rank < k  # rank r gets candidate cand_order[r]
     src = cand_order  # (N,) source gaussian per rank
     dst = free_order  # (N,) destination slot per rank
@@ -275,9 +276,10 @@ def densify_and_prune(
 
 
 def reset_opacity(
-    params: GaussianParams, state: DensifyState, cfg: DensifyConfig = DensifyConfig()
+    params: GaussianParams, state: DensifyState, cfg: DensifyConfig | None = None
 ) -> GaussianParams:
     """Clamp opacity down periodically (reference: fights floaters)."""
+    cfg = cfg if cfg is not None else DensifyConfig()
     cap = _inverse_sigmoid(cfg.opacity_reset_value)
     new_logit = jnp.where(
         state.active,

@@ -36,8 +36,8 @@ def attention_ref(
     vf = jnp.repeat(vf, g, axis=1)
     logits = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
 
-    q_pos = jnp.arange(t)[:, None] + (s - t)
-    k_pos = jnp.arange(s)[None, :]
+    q_pos = jnp.arange(t, dtype=jnp.int32)[:, None] + (s - t)
+    k_pos = jnp.arange(s, dtype=jnp.int32)[None, :]
     mask = jnp.ones((t, s), dtype=bool)
     if causal:
         mask = mask & (q_pos >= k_pos)

@@ -314,33 +314,38 @@ class RenderServer:
         return total
 
     def start(self) -> "RenderServer":
-        if self._thread is not None:
-            raise RuntimeError("server already started")
         if self.compile_ms is None:
             self.warmup()
-        with self._lock:
-            self._stopping = False
         target = (
             self._scheduler_loop
             if self.mode == "continuous"
             else self._microbatch_loop
         )
-        self._thread = threading.Thread(target=target, daemon=True)
-        self._thread.start()
+        # Check-and-set under the lock: two racing start() calls must not
+        # both see `_thread is None` and spawn two scheduler loops.
+        with self._lock:
+            if self._thread is not None:
+                raise RuntimeError("server already started")
+            self._stopping = False
+            self._thread = threading.Thread(target=target, daemon=True)
+            self._thread.start()
         return self
 
     def stop(self) -> None:
-        if self._thread is None:
-            return
         # Flip the stopping flag under the same lock submit() enqueues
         # under: every successful submit's put strictly precedes the poison
         # pill, so the scheduler either serves it or its drain rejects it —
-        # no future is ever stranded.
+        # no future is ever stranded. The thread handle is claimed under
+        # the same lock (so concurrent stop() calls join exactly once) but
+        # joined outside it, or submit()'s rejection path would deadlock.
         with self._lock:
+            thread = self._thread
+            if thread is None:
+                return
+            self._thread = None
             self._stopping = True
             self._queue.put(None)  # poison pill
-        self._thread.join()
-        self._thread = None
+        thread.join()
 
     def __enter__(self) -> "RenderServer":
         return self.start()

@@ -100,16 +100,15 @@ def init_sharded_state(
     abstract = P.abstract_tree(defs, cfg.pdtype())
     shardings = shd.tree_shardings(logical, abstract, mesh, mode)
 
-    @jax.jit
-    def _init(key):
-        return P.init_tree(key, defs, cfg.pdtype())
-
     with mesh:
+        # reprolint: disable=retrace-hazard -- one-shot setup: params and
+        # optimizer state are initialized into their shardings exactly once
+        # per training run.
         params = jax.jit(
             lambda key: P.init_tree(key, defs, cfg.pdtype()),
             out_shardings=shardings,
         )(jax.random.PRNGKey(seed))
-        opt = jax.jit(
+        opt = jax.jit(  # reprolint: disable=retrace-hazard
             adamw_init,
             out_shardings={
                 "m": shardings,
@@ -213,6 +212,8 @@ class Trainer:
 
     def _run_inner(self) -> dict:
         state = self.restore_or_init()
+        # reprolint: disable=retrace-hazard -- one compile per run() (and per
+        # restart attempt, where the rebuilt executable is the point).
         step_fn = jax.jit(
             build_train_step(
                 self.cfg, self.opt_cfg, microbatches=self.tcfg.microbatches

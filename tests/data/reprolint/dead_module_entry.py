@@ -1,0 +1,4 @@
+"""Golden fixture: the entry-point root (mapped to examples/entry.py)."""
+from repro.deadfix.used import helper  # keeps `used` alive
+
+print(helper())

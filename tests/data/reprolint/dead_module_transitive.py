@@ -1,0 +1,5 @@
+"""Golden NEGATIVE: reachable transitively (src/repro/deadfix/transitive.py)."""
+
+
+def value():
+    return 42

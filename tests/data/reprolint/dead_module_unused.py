@@ -1,0 +1,5 @@
+"""Golden POSITIVE: nothing imports this (src/repro/deadfix/unused.py)."""
+
+
+def never_called():
+    return "dead"

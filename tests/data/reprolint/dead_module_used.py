@@ -1,0 +1,6 @@
+"""Golden NEGATIVE: reachable from the entry root (src/repro/deadfix/used.py)."""
+from repro.deadfix import transitive  # noqa: F401
+
+
+def helper():
+    return transitive.value()

@@ -1,0 +1,11 @@
+"""Golden NEGATIVE: explicit operand-plane widths everywhere."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def explicit_widths(n):
+    idx = jnp.arange(n, dtype=jnp.int32)
+    acc = jnp.zeros((n,), dtype=jnp.float32)
+    one = jnp.ones((n, 3), jnp.float32)  # positional dtype — fine
+    host = np.asarray([1.0, 2.0], dtype=np.float32)
+    return idx, acc, one, host

@@ -1,0 +1,13 @@
+"""Golden POSITIVE: dtype-discipline breaches (synthetic src/repro/core path)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def implicit_widths(n):
+    idx = jnp.arange(n)  # LINE: dtype-less arange
+    acc = jnp.zeros((n,))  # LINE: dtype-less zeros
+    one = jnp.ones((n, 3))  # LINE: dtype-less ones
+    buf = jnp.empty((n,))  # LINE: dtype-less empty
+    host = np.asarray([1.0, 2.0], dtype=np.float64)  # LINE: explicit f64
+    wide = jnp.asarray(host, dtype=jnp.float64)  # LINE: explicit f64
+    return idx, acc, one, buf, wide

@@ -1,0 +1,25 @@
+"""Golden NEGATIVE: properly fenced timings and host-only regions."""
+import time
+
+import jax
+
+from somekernel import launch_render  # noqa: F401
+
+
+def fenced_benchmark(g):
+    t0 = time.perf_counter()
+    img = jax.block_until_ready(launch_render(g))
+    dt = time.perf_counter() - t0  # fenced — fine
+    return img, dt
+
+
+def fenced_via_item(g):
+    t0 = time.perf_counter()
+    loss = launch_render(g).sum().item()  # .item() syncs — fine
+    return loss, time.perf_counter() - t0
+
+
+def host_only_region():
+    t0 = time.perf_counter()
+    total = sum(range(1000))  # no device work in the region
+    return total, time.perf_counter() - t0

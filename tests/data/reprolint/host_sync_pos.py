@@ -1,0 +1,19 @@
+"""Golden POSITIVE: unfenced timing of async device work (benchmarks path)."""
+import time
+
+from somekernel import launch_render  # noqa: F401
+
+
+def unfenced_benchmark(g):
+    t0 = time.perf_counter()  # LINE: region measures dispatch, not compute
+    img = launch_render(g)  # device work, never fenced
+    dt = time.perf_counter() - t0
+    return img, dt
+
+
+def unfenced_time_time(g):
+    t0 = time.time()
+    out = launch_render(g)
+    print("still launching...")
+    wall = time.time() - t0  # flagged via the same t0 region
+    return out, wall

@@ -1,0 +1,12 @@
+"""Golden NEGATIVE: a pure kernel body (synthetic kernels/*/kernel.py path)."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def good_kernel(x_ref, o_ref, *, early_exit: bool):
+    v = x_ref[...]
+    if early_exit:  # static Python-level parameter — fine
+        pl.debug_print("skipping")  # sanctioned debug print
+        o_ref[...] = jnp.zeros_like(v)
+        return
+    o_ref[...] = jnp.where(v > 0, v, -v)  # data-dependence via where — fine

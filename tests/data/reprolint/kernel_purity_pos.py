@@ -1,0 +1,17 @@
+"""Golden POSITIVE: impurity inside a Pallas kernel module.
+
+Linted under the synthetic path ``src/repro/kernels/fx/kernel.py`` so the
+kernel-purity globs apply.
+"""
+import numpy as np
+
+
+def bad_kernel(x_ref, o_ref):
+    v = x_ref[...]
+    print("tracing")  # LINE: trace-time side effect
+    host = np.asarray(v)  # LINE: host materialization
+    s = v.sum().item()  # LINE: host sync
+    if v[0] > 0:  # LINE: branch baked on Ref-loaded data
+        o_ref[...] = v + s
+    else:
+        o_ref[...] = v - host.mean()

@@ -1,0 +1,33 @@
+"""Golden NEGATIVE: disciplined threaded server (src/repro/serve path)."""
+import queue
+import threading
+
+
+class DisciplinedServer:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = queue.Queue()  # allowlisted thread-safe container
+        self._stats = {}
+        self._scratch = []  # scheduler-private: only the loop touches it
+        self._thread = None  # pre-thread init is exempt
+
+    def start(self):
+        with self._lock:
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    def _loop(self):
+        while True:
+            item = self._queue.get()
+            self._scratch.append(item)  # single-side access — fine
+            with self._lock:
+                self._stats["served"] = self._stats.get("served", 0) + 1
+
+    def submit(self, item):
+        self._queue.put(item)  # safe-attrs allowlist
+        with self._lock:
+            self._stats["submitted"] = item
+
+    def stats(self):
+        with self._lock:
+            return dict(self._stats)

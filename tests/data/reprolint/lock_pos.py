@@ -1,0 +1,24 @@
+"""Golden POSITIVE: racy threaded server (synthetic src/repro/serve path)."""
+import threading
+
+
+class RacyServer:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats = {}  # written by both sides
+        self._pending = 0  # locked in submit, lock-free in the loop
+        self._thread = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            self._stats["served"] = self._stats.get("served", 0) + 1  # LINE
+            self._pending -= 1  # LINE: mixed discipline
+
+    def submit(self, item):
+        with self._lock:
+            self._pending += 1
+        self._stats["submitted"] = item  # LINE: cross-thread, lock-free

@@ -1,0 +1,36 @@
+"""Golden NEGATIVE: sanctioned jit-construction shapes."""
+import functools
+
+import jax
+
+FROZEN = (1, 2, 3)  # immutable module global — fine to close over
+
+module_level = jax.jit(lambda x: x * 2)  # module scope — fine
+
+
+class Server:
+    def __init__(self, f):
+        self._f = jax.jit(f)  # cached on self in __init__ — fine
+
+    def call(self, x):
+        return self._f(x)
+
+
+@functools.lru_cache(maxsize=8)
+def jit_factory(n):
+    return jax.jit(lambda x: x * n)  # lru_cache'd factory — fine
+
+
+@jax.jit
+def reads_frozen_global(x):
+    return x * FROZEN[0]  # immutable capture — fine
+
+
+def main():
+    step = jax.jit(lambda x: x + 1)  # single-invocation entry point — fine
+    return step(0)
+
+
+def test_something():
+    f = jax.jit(lambda x: x * 3)  # a test body runs once — fine
+    assert f(1) == 3

@@ -1,0 +1,44 @@
+"""Golden POSITIVE: retracing hazards the rule must flag."""
+import functools
+
+import jax
+
+REGISTRY = {}  # mutable module global...
+REGISTRY["k"] = 1  # ...that the module mutates
+
+
+def fresh_jit_per_call(f, x):
+    g = jax.jit(f)  # LINE: fresh jit cache per call
+    return g(x)
+
+
+def jit_in_loop(fns, x):
+    out = []
+    for f in fns:
+        out.append(jax.jit(f)(x))  # LINE: compile per iteration
+    return out
+
+
+def decorated_inner(x):
+    @jax.jit  # LINE: fresh decorated jit per enclosing call
+    def inner(y):
+        return y * 2
+
+    return inner(x)
+
+
+@jax.jit
+def reads_mutable_global(x):
+    return x * REGISTRY["k"]  # LINE: baked at trace time
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def mutable_static_default(x, axes=[0, 1]):  # LINE: unhashable static default
+    return x.sum()
+
+
+def main():
+    for _ in range(3):
+        f = jax.jit(lambda v: v + 1)  # LINE: loop beats the main() exemption
+        f(0)
+

@@ -1,0 +1,19 @@
+"""Golden fixture: every suppression form silences a real violation."""
+import jax
+
+
+def inline_form(f, x):
+    g = jax.jit(f)  # reprolint: disable=retrace-hazard -- fixture rationale
+    return g(x)
+
+
+def standalone_form(f, x):
+    # reprolint: disable=retrace-hazard -- a standalone comment covers the
+    # next code line, skipping past this continuation comment line.
+    g = jax.jit(f)
+    return g(x)
+
+
+def still_fires(f, x):
+    g = jax.jit(f)  # LINE: no suppression — must still be reported
+    return g(x)

@@ -1,0 +1,11 @@
+"""Golden fixture: disable-file silences the whole module for one rule."""
+# reprolint: disable-file=retrace-hazard -- fixture: whole-module waiver
+import jax
+
+
+def first(f, x):
+    return jax.jit(f)(x)
+
+
+def second(f, x):
+    return jax.jit(f)(x)

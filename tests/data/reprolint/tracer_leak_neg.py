@@ -1,0 +1,37 @@
+"""Golden NEGATIVE: static-value branching that must stay silent."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "n"))
+def branch_on_static(x, mode, n):
+    if mode == "fast":  # static argument — fine
+        return x
+    for _ in range(n):  # static trip count — fine
+        x = x + 1
+    return x
+
+
+@jax.jit
+def branch_on_shape(x):
+    if x.shape[0] > 2:  # .shape is trace-time static — fine
+        return x
+    if x.ndim == 1 and x.dtype == jnp.float32:  # static attrs — fine
+        return x[None]
+    return x
+
+
+@jax.jit
+def untainted_locals(x):
+    n = len([1, 2, 3])  # host value, no flow from x
+    if n > 2:  # fine
+        return x * n
+    return x
+
+
+def plain_python(x):
+    if x > 0:  # not traced at all — fine
+        return x
+    return -x

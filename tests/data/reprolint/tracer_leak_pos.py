@@ -1,0 +1,46 @@
+"""Golden POSITIVE: every flagged line is a real tracer leak."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_traced(x):
+    if x > 0:  # LINE: if
+        return x
+    return -x
+
+
+@jax.jit
+def loop_on_traced(x):
+    while x.sum() > 1:  # LINE: while
+        x = x * 0.5
+    return x
+
+
+@jax.jit
+def assert_on_traced(x):
+    assert x.min() >= 0  # LINE: assert
+    return x
+
+
+@jax.jit
+def bool_of_traced(x):
+    flag = bool(x)  # LINE: bool
+    return x if flag else -x
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def branch_on_flowed(x, mode):
+    y = jnp.abs(x) + 1.0
+    if y[0] > 2.0:  # LINE: flowed — y taints from x through arithmetic
+        return y
+    return x
+
+
+@jax.custom_vjp
+def custom_op(x):
+    if x > 0:  # LINE: custom_vjp primal traces too
+        return x
+    return -x

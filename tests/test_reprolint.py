@@ -1,0 +1,179 @@
+"""reprolint test suite: golden fixtures per rule + repo self-lint.
+
+Each fixture file under ``tests/data/reprolint/`` is linted under a
+*synthetic* repo-relative path chosen to land inside the rule's
+configured scope (e.g. the kernel-purity fixture pretends to live at
+``src/repro/kernels/fx/kernel.py``). The project's real pyproject
+config is used throughout, so these tests also pin the shipped scoping
+and allowlists.
+"""
+
+from __future__ import annotations
+
+import ast
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "data" / "reprolint"
+
+sys.path.insert(0, str(REPO))  # `tools` package lives at the repo root
+
+from tools.reprolint.config import load_config  # noqa: E402
+from tools.reprolint.engine import (  # noqa: E402
+    SourceFile,
+    apply_baseline,
+    lint_sources,
+    load_baseline,
+)
+from tools.reprolint.findings import Finding  # noqa: E402
+
+
+def _sf(fixture: str, as_path: str) -> SourceFile:
+    text = (FIXTURES / fixture).read_text()
+    return SourceFile(as_path, text, ast.parse(text))
+
+
+def _lint(files: list[SourceFile], rule: str) -> list[Finding]:
+    return lint_sources(files, REPO, load_config(REPO), select={rule})
+
+
+def _lines(findings: list[Finding]) -> set[int]:
+    return {f.line for f in findings}
+
+
+def _marked_lines(fixture: str) -> set[int]:
+    """Lines carrying a ``# LINE:`` marker in the fixture."""
+    out = set()
+    for i, line in enumerate((FIXTURES / fixture).read_text().splitlines(), 1):
+        if "# LINE" in line:
+            out.add(i)
+    return out
+
+
+# -- per-rule golden fixtures ---------------------------------------------
+
+CASES = [
+    ("tracer-leak", "tracer_leak_pos.py", "tracer_leak_neg.py", "src/repro/core/fx.py"),
+    ("retrace-hazard", "retrace_pos.py", "retrace_neg.py", "src/repro/core/fx.py"),
+    (
+        "kernel-purity",
+        "kernel_purity_pos.py",
+        "kernel_purity_neg.py",
+        "src/repro/kernels/fx/kernel.py",
+    ),
+    ("dtype-discipline", "dtype_pos.py", "dtype_neg.py", "src/repro/core/fx.py"),
+    ("host-sync", "host_sync_pos.py", "host_sync_neg.py", "benchmarks/fx.py"),
+    ("lock-discipline", "lock_pos.py", "lock_neg.py", "src/repro/serve/fx.py"),
+]
+
+
+@pytest.mark.parametrize("rule,pos,neg,path", CASES, ids=[c[0] for c in CASES])
+def test_rule_fires_on_positive(rule, pos, neg, path):
+    findings = _lint([_sf(pos, path)], rule)
+    assert findings, f"{rule} reported nothing on its positive fixture"
+    assert all(f.rule == rule for f in findings)
+    marked = _marked_lines(pos)
+    if marked:  # every deliberately-seeded violation line is caught
+        assert marked <= _lines(findings), (
+            f"{rule} missed marked lines "
+            f"{sorted(marked - _lines(findings))}: "
+            + "\n".join(f.text() for f in findings)
+        )
+
+
+@pytest.mark.parametrize("rule,pos,neg,path", CASES, ids=[c[0] for c in CASES])
+def test_rule_silent_on_negative(rule, pos, neg, path):
+    findings = _lint([_sf(neg, path)], rule)
+    assert not findings, "\n".join(f.text() for f in findings)
+
+
+def test_dead_module_reachability():
+    files = [
+        _sf("dead_module_entry.py", "examples/entry.py"),
+        _sf("dead_module_used.py", "src/repro/deadfix/used.py"),
+        _sf("dead_module_transitive.py", "src/repro/deadfix/transitive.py"),
+        _sf("dead_module_unused.py", "src/repro/deadfix/unused.py"),
+    ]
+    findings = _lint(files, "dead-module")
+    assert [f.path for f in findings] == ["src/repro/deadfix/unused.py"]
+    assert "repro.deadfix.unused" in findings[0].message
+
+
+def test_dead_module_allowlist():
+    # The shipped allowlist keeps the dynamically-imported zoo alive.
+    files = [_sf("dead_module_unused.py", "src/repro/configs/ghost.py")]
+    assert not _lint(files, "dead-module")
+
+
+# -- suppression mechanics -------------------------------------------------
+
+
+def test_inline_and_standalone_suppressions():
+    findings = _lint([_sf("suppression.py", "src/repro/core/fx.py")], "retrace-hazard")
+    assert _lines(findings) == _marked_lines("suppression.py"), "\n".join(
+        f.text() for f in findings
+    )
+
+
+def test_disable_file_suppression():
+    files = [_sf("suppression_file.py", "src/repro/core/fx.py")]
+    assert not _lint(files, "retrace-hazard")
+
+
+# -- baseline --------------------------------------------------------------
+
+
+def test_baseline_roundtrip(tmp_path):
+    f = Finding("a.py", 3, 1, "retrace-hazard", "msg")
+    g = Finding("a.py", 9, 1, "retrace-hazard", "other msg")
+    base = tmp_path / "baseline.txt"
+    base.write_text("# comment\n\n" + f.baseline_key() + "\n")
+    kept = apply_baseline([f, g], load_baseline(base))
+    assert kept == [g]
+    # Line-number-free identity: a shifted duplicate still matches.
+    shifted = Finding("a.py", 300, 7, "retrace-hazard", "msg")
+    assert not apply_baseline([shifted], load_baseline(base))
+
+
+def test_shipped_baseline_is_empty():
+    assert not load_baseline(REPO / "tools" / "reprolint" / "baseline.txt")
+
+
+# -- config loading (mini-TOML fallback must match the shipped file) -------
+
+
+def test_config_loads_shipped_pyproject():
+    cfg = load_config(REPO)
+    assert cfg["paths"] == ["src", "tests", "benchmarks", "examples"]
+    assert "tests/data" in cfg["exclude"]
+    assert cfg["rules"]["lock-discipline"]["safe-attrs"] == ["_queue"]
+    allow = cfg["rules"]["dead-module"]["allow"]
+    assert "repro.configs.*" in allow and "repro.kernels.*.ref" in allow
+
+
+# -- end-to-end: the repo lints clean (tier-1 acceptance gate) -------------
+
+
+def test_reprolint_self_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", "--format", "text"],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert proc.returncode == 0, (
+        "reprolint found violations in the repo:\n"
+        f"{proc.stdout}\n{proc.stderr}"
+    )
+
+
+def test_github_format_annotation():
+    f = Finding("src/a.py", 3, 2, "tracer-leak", "bad % thing")
+    out = f.github()
+    assert out.startswith("::error file=src/a.py,line=3,col=2,")
+    assert "%25" in out and "\n" not in out

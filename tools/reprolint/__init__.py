@@ -1,0 +1,25 @@
+"""reprolint — project-specific static analysis for the repro codebase.
+
+Two rule families guard the contracts this reproduction lives by:
+
+* **JAX/Pallas contract rules** — tracer leaks (Python control flow on
+  traced values inside jitted / custom-VJP / kernel bodies), retracing
+  hazards (``jax.jit`` constructed per call, mutable statics, jitted
+  closures over mutable globals), kernel purity (host syncs and
+  data-dependent Python branching under ``kernels/*/kernel.py``), and
+  dtype discipline (implicit f64, dtype-less constructors in hot paths).
+* **Serving race rules** — lock discipline for the threaded render
+  server (shared ``self._*`` state touched by both the scheduler thread
+  and client threads must be accessed under ``self._lock``), plus a
+  dead-module reachability check.
+
+Run it as ``python -m tools.reprolint [paths...]`` from the repo root.
+Configuration lives in ``pyproject.toml`` under ``[tool.reprolint]``;
+per-line escapes use ``# reprolint: disable=<rule>[,<rule>...]``.
+See DESIGN.md §12 for the rule catalog and how to add a rule.
+"""
+
+from tools.reprolint.engine import lint_paths, lint_sources  # noqa: F401
+from tools.reprolint.findings import Finding  # noqa: F401
+
+__version__ = "1.0.0"

@@ -1,0 +1,360 @@
+"""Shared AST machinery: dotted names, jit detection, taint analysis.
+
+Everything here is deliberately intraprocedural and conservative in the
+*low-false-positive* direction: reprolint runs in CI with a zero-entry
+baseline, so a rule that cries wolf is worse than one that misses an
+exotic spelling. The contracts it models are the ones this codebase
+actually uses (``@jax.jit`` / ``functools.partial(jax.jit, ...)``
+decorators, ``name = jax.jit(fn)`` module aliases, ``*_ref`` Pallas
+operand naming, ``with self._lock:`` critical sections).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+# Attribute accesses on a traced value that yield *static* (trace-time)
+# information — branching on these is the supported JAX idiom.
+STATIC_ATTRS = {
+    "shape",
+    "ndim",
+    "dtype",
+    "size",
+    "weak_type",
+    "sharding",
+    "aval",
+    "itemsize",
+    "num_gaussians",  # GaussianParams property: positions.shape[0]
+    "num_real",  # QuantizedGaussianParams static field
+    "chunk_size",  # QuantizedGaussianParams static field
+    "num_chunks",  # SceneTree static chunk count
+    "leaf_size",  # SceneTree static field
+}
+
+# Calls whose result is static regardless of argument taint.
+STATIC_CALLS = {
+    "len",
+    "isinstance",
+    "issubclass",
+    "type",
+    "hasattr",
+    "callable",
+    "id",
+    "repr",
+    "range",
+    "enumerate",
+    "as_config",  # RenderConfig coercion: static by construction
+    "cdiv",
+    "pick_tiles_per_step",
+}
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``jax.numpy.zeros`` for nested Attribute/Name chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def last_segment(name: str | None) -> str | None:
+    return None if name is None else name.rsplit(".", 1)[-1]
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.FunctionDef | ast.AsyncFunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)] + (
+        [a.vararg.arg] if a.vararg else []
+    ) + ([a.kwarg.arg] if a.kwarg else [])
+
+
+def positional_param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+# -- jit / custom_vjp detection ------------------------------------------
+
+JIT_NAMES = {"jax.jit", "jit"}
+CUSTOM_VJP_NAMES = {"jax.custom_vjp", "custom_vjp"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+@dataclasses.dataclass
+class TracedFunction:
+    """A function whose body runs under JAX tracing.
+
+    ``static_params`` are parameter names excluded from tracing
+    (static_argnums/static_argnames/nondiff_argnums); everything else is
+    a tracer inside the body.
+    """
+
+    fn: ast.FunctionDef | ast.AsyncFunctionDef
+    static_params: set[str]
+    reason: str  # "jax.jit" | "jax.custom_vjp" | "defvjp fwd" | "defvjp bwd"
+
+
+def _literal_positions(node: ast.AST | None) -> list[int]:
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int)
+        ]
+    return []
+
+
+def _literal_names(node: ast.AST | None) -> list[str]:
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        ]
+    return []
+
+
+def _static_params_from_call(
+    call: ast.Call, fn: ast.FunctionDef | ast.AsyncFunctionDef
+) -> set[str]:
+    """Resolve static/nondiff argnums+argnames kwargs against ``fn``."""
+    statics: set[str] = set()
+    positional = positional_param_names(fn)
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_argnames", "nondiff_argnums"):
+            for pos in _literal_positions(kw.value):
+                if 0 <= pos < len(positional):
+                    statics.add(positional[pos])
+            statics.update(_literal_names(kw.value))
+    return statics
+
+
+def _match_wrapper(node: ast.AST, names: set[str]) -> ast.Call | bool | None:
+    """Does a decorator / call expression apply one of ``names``?
+
+    Returns the configuring ``ast.Call`` when one exists (so statics can
+    be read), True for a bare name match, None for no match.
+    """
+    if dotted_name(node) in names:
+        return True
+    if isinstance(node, ast.Call):
+        if dotted_name(node.func) in names:
+            return node
+        # functools.partial(jax.jit, static_argnames=...)
+        if dotted_name(node.func) in PARTIAL_NAMES and node.args:
+            if dotted_name(node.args[0]) in names:
+                return node
+    return None
+
+
+def find_traced_functions(tree: ast.Module) -> list[TracedFunction]:
+    """All functions in a module whose bodies trace: decorated with
+    jit/custom_vjp (directly or via partial), aliased through a
+    module-level ``x = jax.jit(f, ...)``, or registered via
+    ``f.defvjp(fwd, bwd)``."""
+    by_name: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
+    for fn in walk_functions(tree):
+        by_name.setdefault(fn.name, fn)
+
+    traced: dict[int, TracedFunction] = {}
+    vjp_nondiff: dict[str, int] = {}  # custom_vjp object name -> #nondiff args
+
+    def add(fn, statics, reason):
+        if id(fn) not in traced:
+            traced[id(fn)] = TracedFunction(fn, statics, reason)
+
+    for fn in walk_functions(tree):
+        for deco in fn.decorator_list:
+            m = _match_wrapper(deco, JIT_NAMES)
+            if m is not None:
+                statics = _static_params_from_call(m, fn) if isinstance(m, ast.Call) else set()
+                add(fn, statics | {"self", "cls"}, "jax.jit")
+            m = _match_wrapper(deco, CUSTOM_VJP_NAMES)
+            if m is not None:
+                statics = _static_params_from_call(m, fn) if isinstance(m, ast.Call) else set()
+                add(fn, statics | {"self", "cls"}, "jax.custom_vjp")
+                if isinstance(m, ast.Call):
+                    for kw in m.keywords:
+                        if kw.arg == "nondiff_argnums":
+                            vjp_nondiff[fn.name] = len(_literal_positions(kw.value))
+                vjp_nondiff.setdefault(fn.name, 0)
+
+    for node in ast.walk(tree):
+        # name = jax.jit(f, ...) — mark f's def as traced.
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            if dotted_name(call.func) in JIT_NAMES and call.args:
+                target = call.args[0]
+                if isinstance(target, ast.Name) and target.id in by_name:
+                    fn = by_name[target.id]
+                    add(fn, _static_params_from_call(call, fn) | {"self", "cls"}, "jax.jit")
+        # f.defvjp(fwd, bwd): fwd traces like f; bwd's leading params are
+        # the nondiff args (static), the rest (residuals, cotangents) trace.
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr == "defvjp" and len(node.args) >= 2:
+                owner = dotted_name(node.func.value)
+                n_nondiff = vjp_nondiff.get(owner or "", None)
+                if n_nondiff is None:
+                    continue
+                fwd, bwd = node.args[0], node.args[1]
+                if isinstance(fwd, ast.Name) and fwd.id in by_name:
+                    fn = by_name[fwd.id]
+                    owner_fn = by_name.get(owner or "")
+                    statics = (
+                        traced[id(owner_fn)].static_params
+                        if owner_fn is not None and id(owner_fn) in traced
+                        else set()
+                    )
+                    add(fn, set(statics) | {"self", "cls"}, "defvjp fwd")
+                if isinstance(bwd, ast.Name) and bwd.id in by_name:
+                    fn = by_name[bwd.id]
+                    statics = set(positional_param_names(fn)[:n_nondiff])
+                    add(fn, statics | {"self", "cls"}, "defvjp bwd")
+    return list(traced.values())
+
+
+# -- taint analysis -------------------------------------------------------
+
+
+class Taint:
+    """Monotone intraprocedural taint over a function body.
+
+    Names in ``seeds`` start tainted; assignments propagate taint through
+    expressions (monotone — a rebind never clears taint, which is the
+    conservative direction for loops). ``subscript_seeds`` taints the
+    *result of subscripting* a name (Pallas ``ref[...]`` loads) rather
+    than the name itself.
+    """
+
+    def __init__(
+        self,
+        fn: ast.FunctionDef | ast.AsyncFunctionDef,
+        seeds: set[str],
+        *,
+        subscript_seeds: set[str] | None = None,
+        static_attrs: set[str] | None = None,
+        static_calls: set[str] | None = None,
+    ):
+        self.fn = fn
+        self.tainted = set(seeds)
+        self.subscript_seeds = set(subscript_seeds or ())
+        self.static_attrs = STATIC_ATTRS | set(static_attrs or ())
+        self.static_calls = STATIC_CALLS | set(static_calls or ())
+
+    def run(self) -> None:
+        """Propagate assignments to a fixpoint (bounded)."""
+        for _ in range(10):
+            before = len(self.tainted)
+            for node in ast.walk(self.fn):
+                if isinstance(node, ast.Assign):
+                    if self.is_tainted(node.value):
+                        for t in node.targets:
+                            self._taint_target(t)
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    if self.is_tainted(node.value):
+                        self._taint_target(node.target)
+                elif isinstance(node, ast.AugAssign):
+                    if self.is_tainted(node.value) or self.is_tainted(node.target):
+                        self._taint_target(node.target)
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    if self.is_tainted(node.iter):
+                        self._taint_target(node.target)
+                elif isinstance(node, ast.withitem) and node.optional_vars:
+                    if self.is_tainted(node.context_expr):
+                        self._taint_target(node.optional_vars)
+                elif isinstance(node, ast.NamedExpr):
+                    if self.is_tainted(node.value):
+                        self._taint_target(node.target)
+            if len(self.tainted) == before:
+                break
+
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._taint_target(e)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+        # Attribute/Subscript stores don't introduce new tainted *names*.
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in self.static_attrs:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            base = node.value
+            if isinstance(base, ast.Name) and base.id in self.subscript_seeds:
+                return True
+            return self.is_tainted(base) or self.is_tainted(node.slice)
+        if isinstance(node, ast.Call):
+            name = last_segment(call_name(node))
+            if name in self.static_calls:
+                return False
+            parts = [node.func] if isinstance(node.func, ast.Attribute) else []
+            return any(
+                self.is_tainted(c)
+                for c in (*parts, *node.args, *[k.value for k in node.keywords])
+            )
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, (ast.Lambda, ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        return any(self.is_tainted(c) for c in ast.iter_child_nodes(node))
+
+
+def control_flow_on_taint(
+    fn: ast.FunctionDef | ast.AsyncFunctionDef, taint: Taint
+) -> list[tuple[ast.AST, str]]:
+    """Python control-flow / concretization sites whose test is tainted.
+
+    Nested function definitions are included (closures over tracers are
+    just as traced), but their *own* parameters are unknown, so only
+    closure taint flows in.
+    """
+    hits: list[tuple[ast.AST, str]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.If) and taint.is_tainted(node.test):
+            hits.append((node, "Python `if` on a traced value"))
+        elif isinstance(node, ast.While) and taint.is_tainted(node.test):
+            hits.append((node, "Python `while` on a traced value"))
+        elif isinstance(node, ast.Assert) and taint.is_tainted(node.test):
+            hits.append((node, "`assert` on a traced value"))
+        elif isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in ("bool", "int", "float") and node.args and any(
+                taint.is_tainted(a) for a in node.args
+            ):
+                hits.append((node, f"`{name}()` concretizes a traced value"))
+        elif isinstance(node, (ast.comprehension,)) and any(
+            taint.is_tainted(i) for i in node.ifs
+        ):
+            hits.append((node.ifs[0], "comprehension `if` on a traced value"))
+    return hits

@@ -1,0 +1,110 @@
+"""Command line: ``python -m tools.reprolint [paths...]``.
+
+Exit status is 0 when every finding is baselined (the shipped baseline
+is empty, so in practice: when there are no findings), 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.reprolint.config import load_config
+from tools.reprolint.engine import (
+    all_rules,
+    apply_baseline,
+    discover_files,
+    lint_sources,
+    load_baseline,
+    write_baseline,
+)
+from tools.reprolint.findings import render
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="Project-specific JAX/Pallas contract checker and "
+        "serving-layer race detector.",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files/directories to lint (default: [tool.reprolint] paths)",
+    )
+    ap.add_argument(
+        "--format",
+        choices=("text", "github"),
+        default="text",
+        help="output format (github = Actions error annotations)",
+    )
+    ap.add_argument(
+        "--root",
+        default=".",
+        help="repo root (pyproject.toml location; paths resolve against it)",
+    )
+    ap.add_argument(
+        "--select",
+        default=None,
+        help="comma-separated rule names to run (default: all)",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="baseline file (default: [tool.reprolint] baseline)",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="report findings even if baselined",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="write current findings to the baseline file and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name:18s} {rule.summary}")
+        return 0
+
+    root = Path(args.root).resolve()
+    cfg = load_config(root)
+    select = (
+        {s.strip() for s in args.select.split(",") if s.strip()}
+        if args.select
+        else None
+    )
+    files = discover_files(root, args.paths or cfg["paths"], cfg["exclude"])
+    findings = lint_sources(files, root, cfg, select)
+
+    baseline_path = root / (args.baseline or cfg["baseline"])
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(
+            f"wrote {len(findings)} finding(s) to {baseline_path}",
+            file=sys.stderr,
+        )
+        return 0
+    if not args.no_baseline:
+        findings = apply_baseline(findings, load_baseline(baseline_path))
+
+    if findings:
+        print(render(findings, args.format))
+        print(
+            f"\nreprolint: {len(findings)} finding(s) in {len(files)} file(s)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"reprolint: clean ({len(files)} files, "
+        f"{len(select) if select else len(all_rules())} rules)",
+        file=sys.stderr,
+    )
+    return 0

@@ -1,0 +1,170 @@
+"""Configuration loading: ``[tool.reprolint]`` tables in pyproject.toml.
+
+Uses :mod:`tomllib` when available (Python >= 3.11) and falls back to a
+deliberately tiny TOML-subset reader on 3.10 (the container/CI floor).
+The subset covers exactly what reprolint's own tables use: ``[a.b.c]``
+headers, string / bool / int values, and (possibly multiline) arrays of
+strings. Unknown sections are skipped wholesale, so the rest of
+pyproject.toml can use any TOML it likes.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Any
+
+SECTION_PREFIX = "tool.reprolint"
+
+DEFAULTS: dict[str, Any] = {
+    "paths": ["src", "tests", "benchmarks", "examples"],
+    "exclude": [],
+    "baseline": "tools/reprolint/baseline.txt",
+    "rules": {},  # per-rule tables: {"kernel-purity": {"globs": [...]}, ...}
+}
+
+
+def load_config(root: Path) -> dict[str, Any]:
+    """Read ``[tool.reprolint]`` (+ sub-tables) from ``root/pyproject.toml``."""
+    cfg = {k: (dict(v) if isinstance(v, dict) else list(v) if isinstance(v, list) else v)
+           for k, v in DEFAULTS.items()}
+    pyproject = root / "pyproject.toml"
+    if not pyproject.exists():
+        return cfg
+    sections = _read_sections(pyproject.read_text())
+    top = sections.get(SECTION_PREFIX, {})
+    for key in ("paths", "exclude", "baseline"):
+        if key in top:
+            cfg[key] = top[key]
+    for name, table in sections.items():
+        if name.startswith(SECTION_PREFIX + "."):
+            cfg["rules"][name[len(SECTION_PREFIX) + 1 :]] = table
+    return cfg
+
+
+def rule_table(cfg: dict[str, Any], rule: str) -> dict[str, Any]:
+    return cfg.get("rules", {}).get(rule, {})
+
+
+def _read_sections(text: str) -> dict[str, dict[str, Any]]:
+    try:
+        import tomllib  # Python >= 3.11
+
+        data = tomllib.loads(text)
+        out: dict[str, dict[str, Any]] = {}
+        _flatten(data, "", out)
+        return out
+    except ModuleNotFoundError:
+        return _mini_toml(text)
+
+
+def _flatten(node: Any, prefix: str, out: dict[str, dict[str, Any]]) -> None:
+    if not isinstance(node, dict):
+        return
+    scalars = {k: v for k, v in node.items() if not isinstance(v, dict)}
+    if scalars and prefix:
+        out.setdefault(prefix, {}).update(scalars)
+    for k, v in node.items():
+        if isinstance(v, dict):
+            _flatten(v, f"{prefix}.{k}" if prefix else k, out)
+
+
+# -- TOML-subset fallback (3.10) -----------------------------------------
+
+_HEADER = re.compile(r"^\[([A-Za-z0-9_.\-\"]+)\]\s*(?:#.*)?$")
+_KEYVAL = re.compile(r"^([A-Za-z0-9_\-]+)\s*=\s*(.*)$")
+
+
+def _mini_toml(text: str) -> dict[str, dict[str, Any]]:
+    sections: dict[str, dict[str, Any]] = {}
+    current: dict[str, Any] | None = None
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i].strip()
+        i += 1
+        if not line or line.startswith("#"):
+            continue
+        m = _HEADER.match(line)
+        if m:
+            name = m.group(1).replace('"', "")
+            if name == SECTION_PREFIX or name.startswith(SECTION_PREFIX + "."):
+                current = sections.setdefault(name, {})
+            else:
+                current = None
+            continue
+        if current is None:
+            continue
+        m = _KEYVAL.match(line)
+        if not m:
+            continue
+        key, raw = m.group(1), _strip_comment(m.group(2).strip())
+        if raw.startswith("[") and "]" not in _strip_strings(raw):
+            # Multiline array: accumulate (comment-stripped) lines until
+            # the closing bracket.
+            while i < len(lines):
+                piece = _strip_comment(lines[i].strip())
+                raw += " " + piece
+                i += 1
+                if "]" in _strip_strings(piece):
+                    break
+        current[key] = _parse_value(raw)
+    return sections
+
+
+def _strip_comment(s: str) -> str:
+    """Drop a trailing ``# ...`` comment (string literals respected)."""
+    stripped = _strip_strings(s)
+    if "#" in stripped:
+        return s[: stripped.index("#")].rstrip()
+    return s
+
+
+def _strip_strings(s: str) -> str:
+    """Remove string literals so structural chars inside them are ignored."""
+    return re.sub(r'"(?:[^"\\]|\\.)*"|\'[^\']*\'', '""', s)
+
+
+def _parse_value(raw: str) -> Any:
+    raw = _strip_comment(raw.strip())
+    if raw.startswith("["):
+        body = raw[raw.index("[") + 1 : raw.rindex("]")]
+        items = [s.strip() for s in _split_top(body)]
+        return [_parse_value(s) for s in items if s]
+    if raw.startswith('"') and raw.endswith('"'):
+        return raw[1:-1].replace('\\"', '"').replace("\\\\", "\\")
+    if raw.startswith("'") and raw.endswith("'"):
+        return raw[1:-1]
+    if raw in ("true", "false"):
+        return raw == "true"
+    try:
+        return int(raw)
+    except ValueError:
+        return raw
+
+
+def _split_top(body: str) -> list[str]:
+    """Split an array body on commas that are not inside string literals."""
+    out, cur, in_str, quote = [], [], False, ""
+    i = 0
+    while i < len(body):
+        ch = body[i]
+        if in_str:
+            cur.append(ch)
+            if ch == "\\" and quote == '"' and i + 1 < len(body):
+                cur.append(body[i + 1])
+                i += 1
+            elif ch == quote:
+                in_str = False
+        elif ch in "\"'":
+            in_str, quote = True, ch
+            cur.append(ch)
+        elif ch == ",":
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+        i += 1
+    if cur:
+        out.append("".join(cur))
+    return out

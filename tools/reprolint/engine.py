@@ -1,0 +1,200 @@
+"""Rule engine: file discovery, suppressions, baseline, rule dispatch."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Any, Iterable
+
+from tools.reprolint.config import load_config
+from tools.reprolint.findings import Finding
+
+# Rule list = comma-separated names; an optional ` -- rationale` follows.
+_SUPPRESS = re.compile(
+    r"#\s*reprolint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)"
+)
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str  # repo-root-relative, posix separators
+    text: str
+    tree: ast.Module | None
+    syntax_error: str | None = None
+
+    @property
+    def lines(self) -> list[str]:
+        return self.text.splitlines()
+
+    def suppressions(self) -> tuple[dict[int, set[str]], set[str]]:
+        """(line -> rules disabled on that line, rules disabled file-wide).
+
+        A ``# reprolint: disable=<rule>`` comment applies to its own line
+        and, when it sits on a comment-only line, to the next code line —
+        skipping past any continuation comment lines, so a multi-line
+        rationale above a statement still covers it. An optional
+        `` -- rationale`` suffix is encouraged and ignored by the parser.
+        ``disable-file=`` applies everywhere; ``all`` matches every rule.
+        """
+        per_line: dict[int, set[str]] = {}
+        whole_file: set[str] = set()
+        lines = self.lines
+        for i, line in enumerate(lines, start=1):
+            m = _SUPPRESS.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(2).split(",") if r.strip()}
+            if m.group(1) == "disable-file":
+                whole_file |= rules
+                continue
+            per_line.setdefault(i, set()).update(rules)
+            if line.lstrip().startswith("#"):
+                j = i  # 0-based index of the line after the comment
+                while j < len(lines) and lines[j].lstrip().startswith("#"):
+                    j += 1
+                per_line.setdefault(j + 1, set()).update(rules)
+        return per_line, whole_file
+
+
+class Project:
+    """All parsed files plus config — the unit rules run against."""
+
+    def __init__(self, root: Path, files: list[SourceFile], cfg: dict[str, Any]):
+        self.root = root
+        self.files = files
+        self.cfg = cfg
+
+    def rule_option(self, rule: str, key: str, default: Any) -> Any:
+        return self.cfg.get("rules", {}).get(rule, {}).get(key, default)
+
+
+class Rule:
+    """Base class: subclass, set ``name``/``summary``, override a check."""
+
+    name = "rule"
+    summary = ""
+
+    def check_file(self, sf: SourceFile, project: Project) -> list[Finding]:
+        return []
+
+    def check_project(self, project: Project) -> list[Finding]:
+        return []
+
+    # Helper: does this file fall under the rule's configured paths?
+    def in_scope(self, sf: SourceFile, project: Project, default_paths: list[str]) -> bool:
+        prefixes = project.rule_option(self.name, "paths", default_paths)
+        return any(
+            sf.path == p or sf.path.startswith(p.rstrip("/") + "/") for p in prefixes
+        )
+
+
+def all_rules() -> list[Rule]:
+    from tools.reprolint.rules import ALL_RULES
+
+    return [cls() for cls in ALL_RULES]
+
+
+def discover_files(root: Path, paths: Iterable[str], exclude: Iterable[str]) -> list[SourceFile]:
+    out: list[SourceFile] = []
+    seen: set[str] = set()
+    excl = [e.rstrip("/") for e in exclude]
+    for p in paths:
+        base = (root / p).resolve()
+        candidates = [base] if base.is_file() else sorted(base.rglob("*.py"))
+        for f in candidates:
+            rel = f.relative_to(root).as_posix()
+            if rel in seen:
+                continue
+            if any(rel == e or rel.startswith(e + "/") for e in excl):
+                continue
+            seen.add(rel)
+            text = f.read_text()
+            try:
+                tree = ast.parse(text, filename=rel)
+                out.append(SourceFile(rel, text, tree))
+            except SyntaxError as e:
+                out.append(SourceFile(rel, text, None, syntax_error=str(e)))
+    return out
+
+
+def lint_sources(
+    files: list[SourceFile],
+    root: Path,
+    cfg: dict[str, Any] | None = None,
+    select: set[str] | None = None,
+) -> list[Finding]:
+    """Run every (selected) rule over pre-discovered files."""
+    cfg = cfg if cfg is not None else load_config(root)
+    project = Project(root, files, cfg)
+    rules = [r for r in all_rules() if select is None or r.name in select]
+    findings: list[Finding] = []
+    for sf in files:
+        if sf.syntax_error is not None:
+            findings.append(Finding(sf.path, 1, 1, "syntax", sf.syntax_error))
+            continue
+        per_line, whole = sf.suppressions()
+        for rule in rules:
+            for f in rule.check_file(sf, project):
+                if _suppressed(f, per_line, whole):
+                    continue
+                findings.append(f)
+    suppress_by_path = {
+        sf.path: sf.suppressions() for sf in files if sf.syntax_error is None
+    }
+    for rule in rules:
+        for f in rule.check_project(project):
+            per_line, whole = suppress_by_path.get(f.path, ({}, set()))
+            if _suppressed(f, per_line, whole):
+                continue
+            findings.append(f)
+    return sorted(findings)
+
+
+def _suppressed(f: Finding, per_line: dict[int, set[str]], whole: set[str]) -> bool:
+    for rules in (whole, per_line.get(f.line, set())):
+        if f.rule in rules or "all" in rules:
+            return True
+    return False
+
+
+def lint_paths(
+    root: Path,
+    paths: Iterable[str] | None = None,
+    select: set[str] | None = None,
+) -> list[Finding]:
+    cfg = load_config(root)
+    files = discover_files(root, paths or cfg["paths"], cfg["exclude"])
+    return lint_sources(files, root, cfg, select)
+
+
+# -- baseline -------------------------------------------------------------
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    keys = set()
+    for line in path.read_text().splitlines():
+        line = line.rstrip("\n")
+        if not line.strip() or line.lstrip().startswith("#"):
+            continue
+        keys.add(line)
+    return keys
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    lines = [
+        "# reprolint baseline — one `path<TAB>rule<TAB>message` per line.",
+        "# Policy: this file stays EMPTY; real findings get fixed or carry an",
+        "# inline `# reprolint: disable=<rule>` with a rationale. The baseline",
+        "# exists only to land the tool ahead of a fix in an emergency.",
+    ]
+    lines += sorted({f.baseline_key() for f in findings})
+    path.write_text("\n".join(lines) + "\n")
+
+
+def apply_baseline(findings: list[Finding], baseline: set[str]) -> list[Finding]:
+    return [f for f in findings if f.baseline_key() not in baseline]

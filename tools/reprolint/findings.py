@@ -1,0 +1,50 @@
+"""Finding record + output formats (human text, GitHub annotations)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location.
+
+    ``path`` is repo-root-relative with forward slashes so findings,
+    baseline entries, and CI annotations are stable across machines.
+    """
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def baseline_key(self) -> str:
+        """Line-number-free identity used by the baseline file.
+
+        Keyed on (path, rule, message) so unrelated edits that shift
+        line numbers don't churn the baseline.
+        """
+        return f"{self.path}\t{self.rule}\t{self.message}"
+
+    def text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def github(self) -> str:
+        """GitHub Actions workflow-command annotation (one line)."""
+        # Annotation messages must not contain raw newlines/percent signs.
+        msg = (
+            self.message.replace("%", "%25")
+            .replace("\r", "%0D")
+            .replace("\n", "%0A")
+        )
+        return (
+            f"::error file={self.path},line={self.line},col={self.col},"
+            f"title=reprolint[{self.rule}]::{msg}"
+        )
+
+
+def render(findings: list[Finding], fmt: str) -> str:
+    if fmt == "github":
+        return "\n".join(f.github() for f in findings)
+    return "\n".join(f.text() for f in findings)

@@ -1,0 +1,21 @@
+"""Rule registry. Adding a rule = write the module, list the class here
+(see DESIGN.md §12 for the checklist: rule module, registry entry,
+positive + negative golden fixtures, docs row)."""
+
+from tools.reprolint.rules.dead_code import DeadModuleRule
+from tools.reprolint.rules.dtype_discipline import DtypeDisciplineRule
+from tools.reprolint.rules.host_sync import HostSyncRule
+from tools.reprolint.rules.kernel_purity import KernelPurityRule
+from tools.reprolint.rules.lock_discipline import LockDisciplineRule
+from tools.reprolint.rules.retrace import RetraceHazardRule
+from tools.reprolint.rules.tracer_leak import TracerLeakRule
+
+ALL_RULES = [
+    TracerLeakRule,
+    RetraceHazardRule,
+    KernelPurityRule,
+    DtypeDisciplineRule,
+    HostSyncRule,
+    LockDisciplineRule,
+    DeadModuleRule,
+]

@@ -1,0 +1,140 @@
+"""dead-module: modules unreachable from the project's entry points.
+
+Builds the static import graph over ``src/`` and walks reachability from
+the configured roots (the runnable surface: ``examples/``,
+``benchmarks/`` — tests deliberately do *not* keep a module alive; a
+module only a test imports is dead product code). Seed-era zoo modules
+loaded dynamically (``repro.configs.*`` via ``importlib`` in the config
+registry, ``repro.models.*`` via ``family_module``) live in the
+pyproject allowlist; anything *new* that nothing reaches fails CI.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+
+from tools.reprolint.engine import Finding, Project, Rule, SourceFile
+
+_DEFAULT_ROOTS = ["examples", "benchmarks"]
+_DEFAULT_ALLOW: list[str] = []
+
+
+class DeadModuleRule(Rule):
+    name = "dead-module"
+    summary = (
+        "src/ modules unreachable from the configured entry-point roots "
+        "(allowlist covers dynamically-imported seed zoo modules)"
+    )
+
+    def check_project(self, project: Project) -> list[Finding]:
+        roots = project.rule_option(self.name, "roots", _DEFAULT_ROOTS)
+        allow = project.rule_option(self.name, "allow", _DEFAULT_ALLOW)
+
+        # Map module name -> source file for everything under src/.
+        modules: dict[str, SourceFile] = {}
+        for sf in project.files:
+            mod = _module_name(sf.path)
+            if mod is not None:
+                modules[mod] = sf
+
+        # Import edges (module -> imported repro modules).
+        edges: dict[str, set[str]] = {}
+        for mod, sf in modules.items():
+            if sf.tree is not None:
+                edges[mod] = _imports(sf.tree, mod, modules)
+
+        # Roots: repro modules imported by any file under the root dirs.
+        reachable: set[str] = set()
+        frontier: list[str] = []
+        for sf in project.files:
+            if sf.tree is None:
+                continue
+            if any(
+                sf.path == r or sf.path.startswith(r.rstrip("/") + "/")
+                for r in roots
+            ):
+                frontier.extend(_imports(sf.tree, None, modules))
+        while frontier:
+            mod = frontier.pop()
+            if mod in reachable:
+                continue
+            reachable.add(mod)
+            # Importing a submodule imports every ancestor package.
+            parts = mod.split(".")
+            for i in range(1, len(parts)):
+                anc = ".".join(parts[:i])
+                if anc in modules and anc not in reachable:
+                    frontier.append(anc)
+            frontier.extend(edges.get(mod, ()))
+
+        findings: list[Finding] = []
+        for mod in sorted(modules):
+            if mod in reachable:
+                continue
+            if mod.endswith("__init__"):
+                continue  # handled via package name
+            if any(fnmatch.fnmatch(mod, pat) for pat in allow):
+                continue
+            # A package counts as reachable if any of its children are.
+            if any(r.startswith(mod + ".") for r in reachable):
+                continue
+            findings.append(
+                Finding(
+                    modules[mod].path,
+                    1,
+                    1,
+                    self.name,
+                    f"module `{mod}` is unreachable from the entry-point roots "
+                    f"({', '.join(roots)}) — delete it or add it to the "
+                    "[tool.reprolint.dead-module] allow list with a reason",
+                )
+            )
+        return findings
+
+
+def _module_name(path: str) -> str | None:
+    """src/repro/core/render.py -> repro.core.render (None outside src/)."""
+    if not path.startswith("src/") or not path.endswith(".py"):
+        return None
+    parts = path[len("src/") : -len(".py")].split("/")
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def _imports(
+    tree: ast.Module, current: str | None, modules: dict[str, SourceFile]
+) -> set[str]:
+    """Resolve Import/ImportFrom nodes to known module names."""
+    out: set[str] = set()
+
+    def add_known(name: str) -> None:
+        # `from pkg import symbol`: try pkg.symbol as a module, else pkg.
+        if name in modules:
+            out.add(name)
+        elif name.rpartition(".")[0] in modules:
+            out.add(name.rpartition(".")[0])
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                add_known(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level and current is not None:
+                base_parts = current.split(".")[: -node.level]
+                base = ".".join(base_parts)
+                prefix = f"{base}.{node.module}" if node.module else base
+            elif node.level:
+                continue  # relative import outside src/ — not resolvable
+            else:
+                prefix = node.module or ""
+            if not prefix:
+                continue
+            if prefix in modules and all(
+                f"{prefix}.{a.name}" not in modules for a in node.names
+            ):
+                out.add(prefix)
+            for alias in node.names:
+                add_known(f"{prefix}.{alias.name}")
+    return out

@@ -1,0 +1,120 @@
+"""dtype-discipline: keep the hot paths' dtypes explicit and f64-free.
+
+The render/serving stack is engineered f32-end-to-end (decode-in-kernel
+is *bitwise* pinned against jnp at f32; images are compared bitwise
+across raster paths). An implicit f64 — from an explicit ``float64``
+dtype, ``.astype(float)``, or a dtype-less constructor whose default
+shifts under ``jax_enable_x64`` — either doubles bandwidth on the hot
+path or breaks bitwise-equality contracts. In ``core/`` and
+``kernels/`` every ``jnp.zeros/ones/empty/full/arange`` must name its
+dtype, and float64 never appears.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import call_name, dotted_name
+from tools.reprolint.engine import Finding, Project, Rule, SourceFile
+
+_DEFAULT_PATHS = ["src/repro/core", "src/repro/kernels"]
+
+# constructor -> index of the positional dtype slot (None = keyword-only).
+_CONSTRUCTORS = {
+    "zeros": 1,
+    "ones": 1,
+    "empty": 1,
+    "full": 2,
+    "arange": None,
+}
+_NS = {"jnp", "jax.numpy", "np", "numpy"}
+
+_F64_NAMES = {
+    "jnp.float64",
+    "np.float64",
+    "numpy.float64",
+    "jax.numpy.float64",
+    "jnp.complex128",
+    "np.complex128",
+}
+
+
+class DtypeDisciplineRule(Rule):
+    name = "dtype-discipline"
+    summary = (
+        "dtype-less jnp.zeros/ones/arange/empty/full and explicit float64 "
+        "in core/ and kernels/"
+    )
+
+    def check_file(self, sf: SourceFile, project: Project) -> list[Finding]:
+        if not self.in_scope(sf, project, _DEFAULT_PATHS):
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Attribute) and dotted_name(node) in _F64_NAMES:
+                findings.append(
+                    Finding(
+                        sf.path,
+                        node.lineno,
+                        node.col_offset + 1,
+                        self.name,
+                        f"explicit {dotted_name(node)} on an f32-end-to-end path "
+                        "— the pipeline's bitwise contracts assume f32",
+                    )
+                )
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name is None or "." not in name:
+                continue
+            ns, _, fn = name.rpartition(".")
+            if ns not in _NS or fn not in _CONSTRUCTORS:
+                continue
+            dtype_pos = _CONSTRUCTORS[fn]
+            has_dtype = any(kw.arg == "dtype" for kw in node.keywords)
+            if not has_dtype and dtype_pos is not None:
+                has_dtype = len(node.args) > dtype_pos
+            if not has_dtype:
+                findings.append(
+                    Finding(
+                        sf.path,
+                        node.lineno,
+                        node.col_offset + 1,
+                        self.name,
+                        f"dtype-less {name}() — the default shifts under "
+                        "jax_enable_x64 and hides the operand plane's width; "
+                        "name the dtype explicitly",
+                    )
+                )
+            # .astype(float) / dtype=float — weak f64 under x64.
+            for kw in node.keywords:
+                if kw.arg == "dtype" and isinstance(kw.value, ast.Name):
+                    if kw.value.id == "float":
+                        findings.append(
+                            Finding(
+                                sf.path,
+                                kw.value.lineno,
+                                kw.value.col_offset + 1,
+                                self.name,
+                                "dtype=float promotes to f64 under "
+                                "jax_enable_x64; use jnp.float32",
+                            )
+                        )
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype"
+                and node.args
+                and isinstance(node.args[0], ast.Name)
+                and node.args[0].id == "float"
+            ):
+                findings.append(
+                    Finding(
+                        sf.path,
+                        node.lineno,
+                        node.col_offset + 1,
+                        self.name,
+                        ".astype(float) promotes to f64 under jax_enable_x64; "
+                        "use jnp.float32",
+                    )
+                )
+        return findings

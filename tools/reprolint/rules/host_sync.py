@@ -1,0 +1,187 @@
+"""host-sync: unfenced timing of asynchronously-dispatched device work.
+
+JAX dispatches asynchronously: a ``perf_counter()`` delta around device
+work measures *dispatch*, not compute, unless something in the timed
+region forces completion (``block_until_ready``, ``device_get``,
+``.item()``, ``np.asarray``, ``Future.result()``). Benchmarks and
+examples are exactly where such numbers get quoted, so every timed
+region that launches device work must carry a fence before the delta is
+taken.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import call_name, last_segment
+from tools.reprolint.engine import Finding, Project, Rule, SourceFile
+
+_DEFAULT_PATHS = ["examples", "benchmarks"]
+
+_CLOCKS = {
+    "time.perf_counter",
+    "time.time",
+    "time.monotonic",
+    "perf_counter",
+    "monotonic",
+}
+
+# Calls that force device work to completion inside the region.
+_FENCE_DOTTED = {
+    "jax.block_until_ready",
+    "jax.device_get",
+    "np.asarray",
+    "numpy.asarray",
+    "np.array",
+    "numpy.array",
+}
+_FENCE_METHODS = {"block_until_ready", "item", "result", "tolist", "copy_to_host"}
+
+# Host-side helpers that never dispatch device work: their presence in a
+# timed region neither fences nor needs fencing.
+_NEUTRAL = {
+    "print",
+    "format",
+    "len",
+    "range",
+    "enumerate",
+    "zip",
+    "append",
+    "extend",
+    "join",
+    "split",
+    "items",
+    "keys",
+    "values",
+    "get",
+    "sleep",
+    "time",
+    "perf_counter",
+    "monotonic",
+    "str",
+    "repr",
+    "int",
+    "float",
+    "bool",
+    "abs",
+    "min",
+    "max",
+    "sum",
+    "sorted",
+    "round",
+    "isinstance",
+    "hasattr",
+    "popleft",
+    "pop",
+    "add",
+    "update",
+    "write",
+    "flush",
+}
+
+
+def _clock_assign(stmt: ast.stmt) -> str | None:
+    """``t0 = time.perf_counter()`` -> ``t0``."""
+    if (
+        isinstance(stmt, ast.Assign)
+        and len(stmt.targets) == 1
+        and isinstance(stmt.targets[0], ast.Name)
+        and isinstance(stmt.value, ast.Call)
+        and call_name(stmt.value) in _CLOCKS
+    ):
+        return stmt.targets[0].id
+    return None
+
+
+def _uses_delta(node: ast.AST, timer: str) -> bool:
+    """Any ``<expr> - <timer>`` inside ``node``."""
+    for sub in ast.walk(node):
+        if (
+            isinstance(sub, ast.BinOp)
+            and isinstance(sub.op, ast.Sub)
+            and isinstance(sub.right, ast.Name)
+            and sub.right.id == timer
+        ):
+            return True
+    return False
+
+
+def _classify_calls(stmts: list[ast.stmt], neutral: set[str]) -> tuple[bool, bool]:
+    """(region launches device work, region contains a fence)."""
+    device_work = fence = False
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            seg = last_segment(name)
+            if name in _FENCE_DOTTED or (
+                isinstance(node.func, ast.Attribute) and node.func.attr in _FENCE_METHODS
+            ):
+                fence = True
+            elif seg in neutral or (name or "").startswith("time."):
+                continue
+            else:
+                device_work = True
+    return device_work, fence
+
+
+class HostSyncRule(Rule):
+    name = "host-sync"
+    summary = (
+        "perf_counter deltas around device work without a completion fence "
+        "(times async dispatch, not compute)"
+    )
+
+    def check_file(self, sf: SourceFile, project: Project) -> list[Finding]:
+        if not self.in_scope(sf, project, _DEFAULT_PATHS):
+            return []
+        neutral = _NEUTRAL | set(project.rule_option(self.name, "neutral-calls", []))
+        findings: list[Finding] = []
+
+        def check_block(stmts: list[ast.stmt]) -> None:
+            for i, stmt in enumerate(stmts):
+                timer = _clock_assign(stmt)
+                if timer is not None:
+                    region: list[ast.stmt] = []
+                    for later in stmts[i + 1 :]:
+                        if _uses_delta(later, timer):
+                            break
+                        region.append(later)
+                    else:
+                        region = []  # delta never taken in this block
+                    if region:
+                        device_work, fence = _classify_calls(region, neutral)
+                        if device_work and not fence:
+                            findings.append(
+                                Finding(
+                                    sf.path,
+                                    stmt.lineno,
+                                    stmt.col_offset + 1,
+                                    self.name,
+                                    f"timed region starting at `{timer} = "
+                                    "perf_counter()` launches device work but "
+                                    "never fences before the delta — wrap the "
+                                    "result in jax.block_until_ready (async "
+                                    "dispatch makes this measure launch time)",
+                                )
+                            )
+                # Recurse into nested suites — but not into nested function
+                # or class definitions (each function body gets its own
+                # top-level pass below).
+                if isinstance(
+                    stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+                ):
+                    continue
+                for attr in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, attr, None)
+                    if sub:
+                        check_block(sub)
+                for handler in getattr(stmt, "handlers", []) or []:
+                    check_block(handler.body)
+
+        check_block(sf.tree.body)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                check_block(node.body)
+        return findings

@@ -1,0 +1,287 @@
+"""lock-discipline: shared mutable state in threaded serving classes.
+
+For every class that launches a worker thread (``threading.Thread(
+target=self._x)``), methods are classified into two sides:
+
+* **scheduler-side** — the transitive closure of ``self.*()`` calls
+  reachable from any thread target (candidate targets are the bare
+  ``self._x`` method references in the method that constructs the
+  Thread, which also resolves ``target = self._a if cond else self._b``);
+* **client-side** — every other method. ``__init__`` is exempt: it runs
+  strictly before the thread exists (happens-before via Thread.start).
+
+Two violation classes on private mutable attributes (``self._*``):
+
+1. **cross-thread sharing** — an attribute *written* on one side and
+   *accessed* on the other must be accessed under ``with self._lock:``
+   everywhere (this is where the PR 4 batch-poisoning class of bug
+   lived: generation counters / slot tables / stats read lock-free off
+   the scheduler's shoulder);
+2. **mixed discipline** — an attribute accessed under the lock somewhere
+   and lock-free elsewhere is protected only by coincidence; either
+   every access takes the lock or none should (thread-safe containers
+   like ``queue.Queue`` go in the ``safe-attrs`` allowlist).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from tools.reprolint.astutil import dotted_name
+from tools.reprolint.engine import Finding, Project, Rule, SourceFile
+
+_DEFAULT_PATHS = ["src/repro/serve"]
+
+
+@dataclasses.dataclass
+class _Access:
+    attr: str
+    line: int
+    col: int
+    write: bool
+    locked: bool
+    method: str
+    side: str  # "scheduler" | "client"
+
+
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    summary = (
+        "scheduler-thread vs client-thread classification; shared self._* "
+        "state accessed outside `with self._lock:`"
+    )
+
+    def check_file(self, sf: SourceFile, project: Project) -> list[Finding]:
+        if not self.in_scope(sf, project, _DEFAULT_PATHS):
+            return []
+        safe = set(project.rule_option(self.name, "safe-attrs", []))
+        findings: list[Finding] = []
+        for node in sf.tree.body:
+            if isinstance(node, ast.ClassDef):
+                findings += self._check_class(sf, node, safe)
+        return findings
+
+    # -- class analysis ----------------------------------------------------
+
+    def _check_class(
+        self, sf: SourceFile, cls: ast.ClassDef, safe: set[str]
+    ) -> list[Finding]:
+        methods = {
+            m.name: m
+            for m in cls.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        lock_attrs = self._lock_attrs(methods.get("__init__"))
+        targets = self._thread_targets(methods)
+        if not targets or not lock_attrs:
+            return []  # not a threaded class / no lock to check against
+
+        scheduler_side = self._closure(targets, methods)
+        accesses: list[_Access] = []
+        for name, m in methods.items():
+            if name == "__init__":
+                continue  # pre-thread: happens-before Thread.start()
+            side = "scheduler" if name in scheduler_side else "client"
+            accesses += self._method_accesses(m, lock_attrs, side)
+
+        by_attr: dict[str, list[_Access]] = {}
+        for a in accesses:
+            if a.attr.startswith("_") and a.attr not in lock_attrs and a.attr not in safe:
+                by_attr.setdefault(a.attr, []).append(a)
+
+        findings: list[Finding] = []
+        for attr, accs in sorted(by_attr.items()):
+            write_sides = {a.side for a in accs if a.write}
+            access_sides = {a.side for a in accs}
+            shared = bool(write_sides) and len(access_sides) > 1
+            ever_locked = any(a.locked for a in accs)
+            for a in accs:
+                if a.locked:
+                    continue
+                if shared:
+                    findings.append(
+                        Finding(
+                            sf.path,
+                            a.line,
+                            a.col,
+                            self.name,
+                            f"`self.{attr}` is {'written' if a.write else 'read'} "
+                            f"lock-free in {a.side}-side `{cls.name}.{a.method}` "
+                            f"but the {_other(a.side)} side also touches it "
+                            f"(written on: {', '.join(sorted(write_sides))}); "
+                            "guard every access with `with self._lock:`",
+                        )
+                    )
+                elif ever_locked:
+                    findings.append(
+                        Finding(
+                            sf.path,
+                            a.line,
+                            a.col,
+                            self.name,
+                            f"mixed lock discipline on `self.{attr}`: "
+                            f"{'write' if a.write else 'read'} in "
+                            f"`{cls.name}.{a.method}` skips the lock while other "
+                            "accesses take it — hold `self._lock` here too (or "
+                            "allowlist the attr as thread-safe)",
+                        )
+                    )
+        return findings
+
+    # -- classification helpers -------------------------------------------
+
+    @staticmethod
+    def _lock_attrs(init: ast.FunctionDef | None) -> set[str]:
+        """Attributes assigned threading.Lock()/RLock() in __init__."""
+        out: set[str] = set()
+        if init is None:
+            return out
+        for node in ast.walk(init):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                if dotted_name(node.value.func) in (
+                    "threading.Lock",
+                    "threading.RLock",
+                    "Lock",
+                    "RLock",
+                ):
+                    for t in node.targets:
+                        if (
+                            isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"
+                        ):
+                            out.add(t.attr)
+        return out
+
+    @staticmethod
+    def _thread_targets(methods: dict[str, ast.FunctionDef]) -> set[str]:
+        """Method names used as thread entry points.
+
+        Any bare ``self._x`` method reference (not a call) inside a method
+        that constructs a ``threading.Thread`` counts — this resolves both
+        ``Thread(target=self._loop)`` and the indirection
+        ``target = self._a if cond else self._b; Thread(target=target)``.
+        """
+        targets: set[str] = set()
+        for m in methods.values():
+            makes_thread = any(
+                isinstance(n, ast.Call)
+                and dotted_name(n.func) in ("threading.Thread", "Thread")
+                for n in ast.walk(m)
+            )
+            if not makes_thread:
+                continue
+            for node in ast.walk(m):
+                if (
+                    isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self"
+                    and node.attr in methods
+                    and isinstance(node.ctx, ast.Load)
+                ):
+                    # A *reference* to the method (call sites wrap the
+                    # Attribute in Call.func — exclude those).
+                    targets.add(node.attr)
+            for node in ast.walk(m):
+                if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute
+                ):
+                    targets.discard(
+                        node.func.attr
+                        if isinstance(node.func.value, ast.Name)
+                        and node.func.value.id == "self"
+                        else ""
+                    )
+        return {t for t in targets if t}
+
+    @staticmethod
+    def _closure(roots: set[str], methods: dict[str, ast.FunctionDef]) -> set[str]:
+        """Transitive closure of self-method calls from the thread targets."""
+        seen = set(roots)
+        frontier = list(roots)
+        while frontier:
+            m = methods.get(frontier.pop(), None)
+            if m is None:
+                continue
+            for node in ast.walk(m):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr in methods
+                    and node.func.attr not in seen
+                ):
+                    seen.add(node.func.attr)
+                    frontier.append(node.func.attr)
+        return seen
+
+    # -- access extraction -------------------------------------------------
+
+    def _method_accesses(
+        self, m: ast.FunctionDef, lock_attrs: set[str], side: str
+    ) -> list[_Access]:
+        accesses: list[_Access] = []
+
+        def visit(node: ast.AST, locked: bool) -> None:
+            if isinstance(node, ast.With):
+                holds = locked or any(
+                    isinstance(item.context_expr, ast.Attribute)
+                    and isinstance(item.context_expr.value, ast.Name)
+                    and item.context_expr.value.id == "self"
+                    and item.context_expr.attr in lock_attrs
+                    for item in node.items
+                )
+                for item in node.items:
+                    visit(item.context_expr, locked)
+                for child in node.body:
+                    visit(child, holds)
+                return
+            if isinstance(node, ast.Attribute) and (
+                isinstance(node.value, ast.Name) and node.value.id == "self"
+            ):
+                accesses.append(
+                    _Access(
+                        attr=node.attr,
+                        line=node.lineno,
+                        col=node.col_offset + 1,
+                        write=isinstance(node.ctx, (ast.Store, ast.Del)),
+                        locked=locked,
+                        method=m.name,
+                        side=side,
+                    )
+                )
+            # A subscript/augmented store through the attribute
+            # (self._slots[i] = x) parses as Load on the Attribute with a
+            # Store on the Subscript — reclassify.
+            if isinstance(node, (ast.Subscript,)) and isinstance(
+                node.ctx, (ast.Store, ast.Del)
+            ):
+                base = node.value
+                if (
+                    isinstance(base, ast.Attribute)
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id == "self"
+                ):
+                    accesses.append(
+                        _Access(
+                            attr=base.attr,
+                            line=base.lineno,
+                            col=base.col_offset + 1,
+                            write=True,
+                            locked=locked,
+                            method=m.name,
+                            side=side,
+                        )
+                    )
+            for child in ast.iter_child_nodes(node):
+                visit(child, locked)
+
+        for stmt in m.body:
+            visit(stmt, False)
+        return accesses
+
+
+def _other(side: str) -> str:
+    return "client" if side == "scheduler" else "scheduler"

@@ -1,0 +1,290 @@
+"""retrace-hazard: patterns that silently recompile on every call.
+
+Three hazard classes, all of which have bitten JAX serving stacks:
+
+1. ``jax.jit(...)`` constructed inside a function body — every call of
+   the enclosing function builds a *fresh* jitted callable with an empty
+   cache, so the executable recompiles per call (per iteration, when the
+   construction sits in a loop). Module-level jits, ``self._f =
+   jax.jit(...)`` cached in ``__init__``, and ``functools.lru_cache``-
+   wrapped factories are the supported shapes. Single-invocation scopes
+   — pytest ``test_*`` functions and the configured ``entry-functions``
+   (default ``main``) — are exempt when the construction is not inside
+   a loop: a body that runs once per process cannot retrace.
+2. Mutable defaults (list/dict/set) on static parameters — unhashable
+   values reaching ``static_argnums``/``static_argnames`` raise at call
+   time, and a call site passing a list literal for a static parameter
+   does the same.
+3. A jitted function reading a module-level *mutable* global (a
+   list/dict/set that the module also mutates or rebinds): the value is
+   baked in at trace time, so later mutation silently serves stale
+   constants (or retraces, when it changes hashability).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import (
+    JIT_NAMES,
+    _match_wrapper,
+    call_name,
+    dotted_name,
+    find_traced_functions,
+    positional_param_names,
+    walk_functions,
+)
+from tools.reprolint.engine import Finding, Project, Rule, SourceFile
+
+_CACHE_DECOS = {
+    "functools.lru_cache",
+    "lru_cache",
+    "functools.cache",
+    "cache",
+}
+
+_MUTATORS = {
+    "append",
+    "extend",
+    "insert",
+    "update",
+    "setdefault",
+    "pop",
+    "popitem",
+    "clear",
+    "add",
+    "discard",
+    "remove",
+}
+
+
+class RetraceHazardRule(Rule):
+    name = "retrace-hazard"
+    summary = (
+        "jax.jit built per call/iteration, mutable values on static args, "
+        "jitted closures over mutable module globals"
+    )
+
+    def check_file(self, sf: SourceFile, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        findings += self._jit_in_function_bodies(sf, project)
+        findings += self._mutable_static_defaults(sf)
+        findings += self._mutable_global_capture(sf)
+        return findings
+
+    # -- 1. jit constructed inside function bodies ------------------------
+
+    def _jit_in_function_bodies(
+        self, sf: SourceFile, project: Project
+    ) -> list[Finding]:
+        findings: list[Finding] = []
+        entry_fns = set(
+            project.rule_option(self.name, "entry-functions", ["main"])
+        )
+        for fn in walk_functions(sf.tree):
+            one_shot = fn.name in entry_fns or fn.name.startswith("test_")
+            enclosing_loops = self._loop_lines(fn)
+            for node in ast.walk(fn):
+                site = None
+                if isinstance(node, ast.Call) and dotted_name(node.func) in JIT_NAMES:
+                    site = node
+                elif isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ) and node is not fn:
+                    for deco in node.decorator_list:
+                        if _match_wrapper(deco, JIT_NAMES) is not None:
+                            site = deco
+                            break
+                if site is None:
+                    continue
+                if self._is_cached(fn, node, site):
+                    continue
+                in_loop = any(
+                    lo <= site.lineno <= hi for lo, hi in enclosing_loops
+                )
+                if one_shot and not in_loop:
+                    continue
+                detail = (
+                    "inside a loop — a fresh executable (and compile) per iteration"
+                    if in_loop
+                    else f"inside `{fn.name}` — a fresh jit cache per call"
+                )
+                findings.append(
+                    Finding(
+                        sf.path,
+                        site.lineno,
+                        site.col_offset + 1,
+                        self.name,
+                        f"jax.jit constructed {detail}; hoist to module level, "
+                        "cache on self in __init__, or wrap the factory in "
+                        "functools.lru_cache",
+                    )
+                )
+        return findings
+
+    @staticmethod
+    def _loop_lines(fn: ast.AST) -> list[tuple[int, int]]:
+        spans = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+                spans.append((node.lineno, node.end_lineno or node.lineno))
+        return spans
+
+    @staticmethod
+    def _is_cached(
+        fn: ast.FunctionDef | ast.AsyncFunctionDef, node: ast.AST, site: ast.AST
+    ) -> bool:
+        """Sanctioned construction-in-body shapes."""
+        # self._f = jax.jit(...) inside __init__: compiled once per instance.
+        if fn.name == "__init__":
+            for stmt in ast.walk(fn):
+                if isinstance(stmt, ast.Assign) and stmt.value is node:
+                    if any(
+                        isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                        for t in stmt.targets
+                    ):
+                        return True
+        # Enclosing function is an lru_cache'd factory: one jit per key.
+        for deco in fn.decorator_list:
+            name = dotted_name(deco if not isinstance(deco, ast.Call) else deco.func)
+            if name in _CACHE_DECOS:
+                return True
+        return False
+
+    # -- 2. mutable / unhashable values on static parameters --------------
+
+    def _mutable_static_defaults(self, sf: SourceFile) -> list[Finding]:
+        findings: list[Finding] = []
+        static_by_fn: dict[str, set[str]] = {}
+        for tf in find_traced_functions(sf.tree):
+            statics = tf.static_params - {"self", "cls"}
+            if statics:
+                static_by_fn[tf.fn.name] = statics
+            args = tf.fn.args
+            pos = positional_param_names(tf.fn)
+            defaults = list(args.defaults)
+            owners = pos[len(pos) - len(defaults) :] if defaults else []
+            pairs = list(zip(owners, defaults)) + [
+                (a.arg, d)
+                for a, d in zip(args.kwonlyargs, args.kw_defaults)
+                if d is not None
+            ]
+            for pname, default in pairs:
+                if pname in statics and isinstance(
+                    default, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp)
+                ):
+                    findings.append(
+                        Finding(
+                            sf.path,
+                            default.lineno,
+                            default.col_offset + 1,
+                            self.name,
+                            f"static parameter `{pname}` of `{tf.fn.name}` has an "
+                            "unhashable (mutable) default — jit static args must "
+                            "hash; use a tuple/frozen value",
+                        )
+                    )
+        # Call sites in the same module passing list/dict/set literals to a
+        # known static parameter by keyword.
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = call_name(node)
+            statics = static_by_fn.get(callee or "", None) or static_by_fn.get(
+                (callee or "").rsplit(".", 1)[-1], None
+            )
+            if not statics:
+                continue
+            for kw in node.keywords:
+                if kw.arg in statics and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp)
+                ):
+                    findings.append(
+                        Finding(
+                            sf.path,
+                            kw.value.lineno,
+                            kw.value.col_offset + 1,
+                            self.name,
+                            f"unhashable literal passed to static parameter "
+                            f"`{kw.arg}` of `{callee}` — jit static args must "
+                            "hash; pass a tuple",
+                        )
+                    )
+        return findings
+
+    # -- 3. jitted closures over mutable module globals -------------------
+
+    def _mutable_global_capture(self, sf: SourceFile) -> list[Finding]:
+        tree = sf.tree
+        # Module-level names bound to mutable literals...
+        mutable_literals: dict[str, int] = {}
+        bind_counts: dict[str, int] = {}
+        for stmt in tree.body:
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = [t for t in stmt.targets if isinstance(t, ast.Name)]
+                value = stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+                targets, value = [stmt.target], stmt.value
+            else:
+                continue
+            for t in targets:
+                bind_counts[t.id] = bind_counts.get(t.id, 0) + 1
+                if isinstance(
+                    value, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp)
+                ):
+                    mutable_literals[t.id] = t.lineno
+        # ...that the module actually mutates (method call, subscript store,
+        # `global` rebind, or repeated module-level binding).
+        mutated: set[str] = {n for n, c in bind_counts.items() if c > 1}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Global):
+                mutated.update(node.names)
+            elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                if node.func.attr in _MUTATORS and isinstance(
+                    node.func.value, ast.Name
+                ):
+                    mutated.add(node.func.value.id)
+            elif isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                    if isinstance(node, ast.AugAssign)
+                    else node.targets
+                )
+                for t in targets:
+                    if isinstance(t, ast.Subscript) and isinstance(t.value, ast.Name):
+                        mutated.add(t.value.id)
+        hazardous = {n for n in mutable_literals if n in mutated}
+        if not hazardous:
+            return []
+        findings = []
+        for tf in find_traced_functions(tree):
+            # Params and locally-assigned names shadow the module global.
+            local = set(positional_param_names(tf.fn))
+            for node in ast.walk(tf.fn):
+                if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                    local.add(node.id)
+            for node in ast.walk(tf.fn):
+                if (
+                    isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in hazardous
+                    and node.id not in local
+                ):
+                    findings.append(
+                        Finding(
+                            sf.path,
+                            node.lineno,
+                            node.col_offset + 1,
+                            self.name,
+                            f"jitted `{tf.fn.name}` reads module global "
+                            f"`{node.id}`, a mutable container this module also "
+                            "mutates — the value is baked at trace time; pass it "
+                            "as an argument or freeze it",
+                        )
+                    )
+        return findings

@@ -1,0 +1,54 @@
+"""tracer-leak: Python control flow on traced values in traced bodies.
+
+Inside a ``@jax.jit`` / ``jax.custom_vjp`` body every non-static argument
+is a tracer. A Python ``if``/``while``/``assert``/``bool()`` on a value
+data-flowing from one either crashes at trace time (ConcretizationTypeError)
+or — worse — silently bakes one branch into the compiled program. The
+supported idioms (branching on ``.shape``/``.dtype``/static argnames,
+``lax.cond``/``jnp.where``) stay silent.
+"""
+
+from __future__ import annotations
+
+from tools.reprolint.astutil import (
+    Taint,
+    control_flow_on_taint,
+    find_traced_functions,
+    param_names,
+)
+from tools.reprolint.engine import Finding, Project, Rule, SourceFile
+
+
+class TracerLeakRule(Rule):
+    name = "tracer-leak"
+    summary = (
+        "Python if/while/assert/bool() on values data-flowing from traced "
+        "arguments inside jit/custom_vjp bodies"
+    )
+
+    def check_file(self, sf: SourceFile, project: Project) -> list[Finding]:
+        extra_static = set(project.rule_option(self.name, "static-attrs", []))
+        extra_calls = set(project.rule_option(self.name, "static-calls", []))
+        findings: list[Finding] = []
+        for tf in find_traced_functions(sf.tree):
+            seeds = {
+                p for p in param_names(tf.fn) if p not in tf.static_params
+            }
+            if not seeds:
+                continue
+            taint = Taint(
+                tf.fn, seeds, static_attrs=extra_static, static_calls=extra_calls
+            )
+            taint.run()
+            for node, why in control_flow_on_taint(tf.fn, taint):
+                findings.append(
+                    Finding(
+                        sf.path,
+                        node.lineno,
+                        node.col_offset + 1,
+                        self.name,
+                        f"{why} inside `{tf.fn.name}` (traced via {tf.reason}); "
+                        "use lax.cond/jnp.where, or mark the argument static",
+                    )
+                )
+        return findings
