@@ -65,7 +65,7 @@ TINY_BATCH = 8
 STATS_KEYS = {
     "mode", "requests", "batches", "compile_ms", "latency_ms_p50",
     "latency_ms_p95", "latency_ms_mean", "mean_batch_size", "occupancy",
-    "memory",
+    "memory", "slo",
 }
 
 

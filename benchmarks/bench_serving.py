@@ -33,6 +33,7 @@ from benchmarks.common import emit
 from repro.core import RenderConfig, orbit_cameras, random_gaussians, stack_cameras
 from repro.core.multicam import render_batch_jit
 from repro.core.render import render_jit
+from repro.obs import Registry, SLOMonitor, SLOTargets, serve_metrics
 from repro.serve import RenderServer, replay_schedule
 
 N = 8_192
@@ -190,6 +191,102 @@ def _scheduler_sweep(
     return sweep
 
 
+def _burst_images(model, cams, cfg, max_batch: int, slo=None):
+    """One full burst through a continuous server; returns (images, wall_s).
+
+    Identical offered load with and without ``slo`` — the monitored run
+    must serve the same frames at (close to) the same rate.
+    """
+    size = cams[0].width
+    server = RenderServer(
+        model, cfg, width=size, height=size, max_batch=max_batch, slo=slo,
+    )
+    server.warmup(cams[0])
+    with server:
+        t0 = time.perf_counter()
+        futs = [server.submit(cam) for cam in cams]
+        images = [f.result().image for f in futs]
+        wall = time.perf_counter() - t0
+    return images, wall
+
+
+def _slo_smoke(model, cams, cfg, max_batch: int) -> dict:
+    """Live SLO layer under a > capacity burst, endpoints polled mid-load.
+
+    The whole request set arrives at t=0 against ``max_batch`` slots with a
+    queue-depth target far below the burst size, so the monitor *must*
+    pass through ``overloaded`` while the queue drains (``/healthz`` 503)
+    and recover to ``ok`` after ``clear_s`` of calm. A twin unmonitored
+    burst pins the overhead: identical images, comparable wall clock.
+    """
+    import json as _json
+    import urllib.error
+    import urllib.request
+
+    base_images, base_wall = _burst_images(model, cams, cfg, max_batch)
+
+    reg = Registry()
+    monitor = SLOMonitor(
+        SLOTargets(
+            max_queue_depth=float(max_batch // 2),
+            window_s=30.0,
+            trip_s=0.0,
+            clear_s=0.3,
+        ),
+        registry=reg,
+        mode="continuous",
+    )
+    http = serve_metrics(reg, slo=monitor)
+    states_seen: set[str] = set()
+    healthz_codes: set[int] = set()
+
+    def poll() -> None:
+        req = urllib.request.Request(f"http://127.0.0.1:{http.port}/healthz")
+        try:
+            with urllib.request.urlopen(req, timeout=5) as r:
+                healthz_codes.add(r.status)
+        except urllib.error.HTTPError as e:
+            healthz_codes.add(e.code)
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{http.port}/slo", timeout=5
+        ) as r:
+            states_seen.add(_json.loads(r.read())["state"])
+
+    size = cams[0].width
+    server = RenderServer(
+        model, cfg, width=size, height=size, max_batch=max_batch,
+        slo=monitor,
+    )
+    server.warmup(cams[0])
+    with server:
+        t0 = time.perf_counter()
+        futs = [server.submit(cam) for cam in cams]
+        poll()  # mid-burst: the queue is deep right now
+        images = [f.result().image for f in futs]
+        wall = time.perf_counter() - t0
+        poll()
+        # Drained: wait out clear_s (+ margin) for the recovery transition.
+        deadline = time.perf_counter() + 5.0
+        while monitor.evaluate() != "ok" and time.perf_counter() < deadline:
+            time.sleep(0.05)
+        poll()
+    http.shutdown()
+
+    identical = len(base_images) == len(images) and all(
+        np.array_equal(a, b) for a, b in zip(base_images, images)
+    )
+    return {
+        "req_s": len(cams) / wall,
+        "req_s_unmonitored": len(cams) / base_wall,
+        "overhead_ratio": base_wall / wall,  # ~1.0 = monitor is free
+        "states_seen": sorted(states_seen),
+        "healthz_codes": sorted(healthz_codes),
+        "transitions": monitor.transitions(),
+        "final_state": monitor.state,
+        "images_identical": identical,
+    }
+
+
 def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
     """Run the serving benchmarks; returns machine-readable metrics
     (``benchmarks/run.py`` folds them into ``BENCH_PR3.json``)."""
@@ -294,7 +391,28 @@ def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
         streams=3 if args.tiny else 1,
     )
 
+    # Live SLO layer: monitored vs unmonitored burst + endpoint polling.
+    metrics["slo"] = slo = _slo_smoke(
+        model, cams, server_cfg, max_batch=batch_sizes[-1]
+    )
+    emit(
+        "serving/slo_monitored_req_s",
+        1e6 / slo["req_s"],
+        f"{slo['req_s']:.2f}req_s_states_{'_'.join(slo['states_seen'])}",
+    )
+
     if args.tiny:
+        # The burst (3x the slot table) must visibly overload, serve 503 on
+        # /healthz while it lasts, and recover once drained; the monitor
+        # must not change what is served or (materially) how fast.
+        assert "overloaded" in slo["states_seen"], slo
+        assert 503 in slo["healthz_codes"], slo
+        assert 200 in slo["healthz_codes"], slo
+        assert slo["final_state"] == "ok", slo
+        assert slo["images_identical"], "SLO monitor changed served images"
+        assert slo["overhead_ratio"] >= 0.6, (
+            f"SLO monitor cost too much serving throughput: {slo}"
+        )
         top = metrics["paths"]["binned"]["batched"][str(batch_sizes[-1])]
         # Re-baselined with bin_gaussians' select="sort" default (PR 4):
         # the flip sped the *sequential* baseline up ~3.5x on binning, so at
@@ -306,10 +424,17 @@ def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
             f"batched serving far slower than sequential: {metrics['paths']}"
         )
         assert 0.0 < srv["occupancy"] <= 1.0, srv
+        # Even with 3 alternating-order streams, a single sweep's
+        # continuous-vs-micro ratio jitters a few percent either side of
+        # parity on a 2-core runner (observed 0.98–1.15x at this scale).
+        # The inline smoke only pins "not catastrophically slower"; the
+        # statistical contract — median across --trials runs >= 0.9 with a
+        # MAD-sized noise margin — is the perfguard budget
+        # serving-continuous-vs-micro (pyproject [tool.perfguard]).
         for label, entry in metrics["scheduler_sweep"].items():
-            assert entry["continuous"]["req_s"] >= entry["microbatch"]["req_s"], (
-                f"continuous batching slower than micro-batching at {label}: "
-                f"{entry}"
+            assert entry["continuous_speedup"] >= 0.85, (
+                f"continuous batching far slower than micro-batching at "
+                f"{label}: {entry}"
             )
         print(
             f"# tiny smoke OK: batched {top['speedup_vs_sequential']:.2f}x "
@@ -319,6 +444,8 @@ def main(argv: tuple[str, ...] | list[str] = ()) -> dict:
                 f"{e['continuous_speedup']:.2f}x micro at {label}"
                 for label, e in metrics["scheduler_sweep"].items()
             )
+            + f"; slo states {slo['states_seen']} "
+            f"(overhead {slo['overhead_ratio']:.2f}x)"
         )
 
     return metrics

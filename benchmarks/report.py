@@ -8,6 +8,9 @@
   ``BENCH_TRAJECTORY.md`` after every full benchmark run.
 * dry-run / roofline tables from ``results/dryrun/*.json`` (the LM-substrate
   experiments in EXPERIMENTS.md).
+* ``perfguard_table``: the ``[tool.perfguard]`` budgets evaluated against
+  the newest BENCH file (``--section perfguard``) — the markdown twin of
+  ``python -m tools.perfguard check``.
 
 Usage: PYTHONPATH=src:. python -m benchmarks.report [--section trajectory]
 Prints markdown to stdout.
@@ -56,7 +59,22 @@ def _largest_scene(section: dict | None) -> dict | None:
     return sizes[max(sizes, key=int)]
 
 
+def _scalar(x):
+    """Reduce a ``--trials N`` sample list to its median; pass scalars
+    (and anything non-numeric) through. Keeps the tables schema-agnostic
+    across the scalar-leaf (trials=1) and list-leaf (trials>1) BENCH
+    forms."""
+    if isinstance(x, list) and x and all(
+        isinstance(v, (int, float)) and not isinstance(v, bool) for v in x
+    ):
+        s = sorted(x)
+        mid = len(s) // 2
+        return s[mid] if len(s) % 2 else 0.5 * (s[mid - 1] + s[mid])
+    return x
+
+
 def _fmt(x, spec: str = ".2f", suffix: str = "") -> str:
+    x = _scalar(x)
     if x is None:
         return "—"
     return f"{x:{spec}}{suffix}"
@@ -68,15 +86,20 @@ def trajectory_table(repo_root: str | os.PathLike) -> str:
     Columns are the headline metric each PR introduced; earlier PRs show
     "—" for sections that did not exist yet. Robust to missing files and
     missing keys — a reshuffled schema degrades to a dash, never a crash.
+    A PR *inside* the covered range with no BENCH file (a PR that changed
+    no measured surface) renders as an explicit all-dash row, so the table
+    says "not measured" instead of silently renumbering the trajectory.
     """
     rows = []
-    paths = sorted(
-        glob.glob(os.path.join(os.fspath(repo_root), "BENCH_PR*.json")),
-        key=lambda p: int(re.search(r"BENCH_PR(\d+)", p).group(1)),
-    )
-    for path in paths:
-        pr = int(re.search(r"BENCH_PR(\d+)", path).group(1))
-        with open(path) as f:
+    by_pr = {
+        int(re.search(r"BENCH_PR(\d+)", p).group(1)): p
+        for p in glob.glob(os.path.join(os.fspath(repo_root), "BENCH_PR*.json"))
+    }
+    for pr in range(min(by_pr), max(by_pr) + 1) if by_pr else ():
+        if pr not in by_pr:
+            rows.append(f"| PR {pr} | — | — | — | — | — | — | — |")
+            continue
+        with open(by_pr[pr]) as f:
             d = json.load(f)
         clu = _dig(d, "bench_table2_throughput", "render", "scenes", "clustered")
         fused = _largest_scene(d.get("bench_fused"))
@@ -93,7 +116,7 @@ def trajectory_table(repo_root: str | os.PathLike) -> str:
                 serve=_fmt(_dig(d, "bench_serving", "server", "req_s")),
                 cull=_fmt(
                     _dig(culled, "culled_speedup"),
-                    suffix=f"x@{_dig(culled, 'gaussians', default=0) // 1000}k",
+                    suffix=f"x@{int(_scalar(_dig(culled, 'gaussians', default=0))) // 1000}k",
                 ) if culled else "—",
                 fused=_fmt(_dig(fused, "fused_speedup"), suffix="x"),
                 bytes=_fmt(_dig(comp, "byte_ratio"), ".3f", "x f32")
@@ -165,6 +188,45 @@ def obs_table(repo_root: str | os.PathLike) -> str:
             else:
                 value = _fmt(s.get("value"), ".4g")
             lines.append(f"| {name} | {fam.get('type')} | {labels} | {value} |")
+    return "\n".join(lines) + "\n"
+
+
+def perfguard_table(repo_root: str | os.PathLike) -> str:
+    """Budget status table: every ``[tool.perfguard]`` budget evaluated
+    against the newest BENCH file (same decision logic as
+    ``python -m tools.perfguard check``, rendered as markdown)."""
+    import pathlib
+    import sys
+
+    root = pathlib.Path(os.fspath(repo_root))
+    sys.path.insert(0, os.fspath(root))  # tools/ lives at the repo root
+    try:
+        from tools.perfguard import bench as bench_io
+        from tools.perfguard.budgets import evaluate_budgets
+        from tools.perfguard.config import load_config
+    finally:
+        sys.path.pop(0)
+
+    cfg = load_config(root)
+    bench_path = bench_io.latest_bench(root, cfg["bench_glob"])
+    if bench_path is None:
+        return (
+            "### Perf budgets\n\nNo BENCH results found — run "
+            "`python -m benchmarks.run` first.\n"
+        )
+    bench = bench_io.load_bench(bench_path)
+    baseline = bench_io.load_baseline(root / cfg["baseline"])
+    results = evaluate_budgets(
+        cfg["budgets"], bench, baseline,
+        profile=bench_io.bench_profile(bench),
+    )
+    lines = [
+        f"### Perf budgets (`tool.perfguard` vs {bench_path.name})\n",
+        "| budget | status | detail |",
+        "|---|---|---|",
+    ]
+    for r in results:
+        lines.append(f"| {r.budget.name} | {r.status} | {r.message} |")
     return "\n".join(lines) + "\n"
 
 
@@ -267,7 +329,7 @@ def main() -> None:
     ap.add_argument(
         "--section",
         default="all",
-        choices=["all", "roofline", "dryrun", "trajectory", "obs"],
+        choices=["all", "roofline", "dryrun", "trajectory", "obs", "perfguard"],
     )
     ap.add_argument(
         "--repo",
@@ -280,6 +342,9 @@ def main() -> None:
         return
     if args.section == "obs":
         print(obs_table(args.repo))
+        return
+    if args.section == "perfguard":
+        print(perfguard_table(args.repo))
         return
     cells = load(args.results)
     if args.section in ("all", "dryrun"):

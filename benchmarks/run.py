@@ -1,7 +1,7 @@
 """Benchmark aggregator. One section per paper table/figure + substrate.
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo-wide contract) and
-writes ``BENCH_PR8.json`` — the machine-readable perf trajectory (render
+writes ``BENCH_PR10.json`` — the machine-readable perf trajectory (render
 speedups, max-error, lane + chunk occupancy, batched-serving throughput/
 occupancy/latency, continuous-vs-microbatch scheduler sweep, culled-octree
 throughput + visible-fraction stats, fused-vs-unfused raster throughput and
@@ -10,20 +10,63 @@ error decomposition, quantized-resident bytes/req-s/PSNR, and the
 lane/chunk occupancy, cull visibility, resident bytes) — to the repo
 root, then collates every checked-in ``BENCH_PR*.json`` into the
 ``BENCH_TRAJECTORY.md`` perf-trajectory table (``benchmarks.report``).
+
+Every results file carries a top-level ``_meta`` provenance table —
+``{schema_version, git_sha, date, hostname, trials, profile}`` — so
+``tools/perfguard`` (and anyone reading the trajectory) knows where each
+number came from and whether two files are comparable. Modes:
+
+* ``--tiny`` runs the smoke-scale variant of every section that has one
+  (profile ``"tiny"``; sections without a tiny mode are skipped) —
+  this is what CI's perfguard job measures.
+* ``--trials N`` repeats the whole sweep N times and stores every numeric
+  leaf as a list of per-trial samples (newest schema; ``N=1`` keeps the
+  scalar form). perfguard reduces either form to its median.
+* ``--out PATH`` redirects the results file (CI writes to a temp path so
+  a smoke run never dirties the committed trajectory).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
 import traceback
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-BENCH_JSON = REPO_ROOT / "BENCH_PR8.json"
+BENCH_JSON = REPO_ROOT / "BENCH_PR10.json"
 
 
-def main() -> None:
+def _merge_trials(acc, new):
+    """Fold one trial's section tree into the accumulator, leaf-wise.
+
+    Numeric leaves accumulate into per-trial sample lists; everything else
+    (strings, registry snapshots, pre-existing lists) keeps trial 0's
+    value — re-measuring a config echo or a metrics snapshot adds nothing.
+    """
+    if isinstance(acc, dict) and isinstance(new, dict):
+        out = dict(acc)
+        for k, v in new.items():
+            out[k] = _merge_trials(acc[k], v) if k in acc else v
+        return out
+    if isinstance(acc, list) and all(
+        isinstance(x, (int, float)) and not isinstance(x, bool) for x in acc
+    ):
+        if isinstance(new, (int, float)) and not isinstance(new, bool):
+            return acc + [new]
+        return acc
+    if (
+        isinstance(acc, (int, float))
+        and not isinstance(acc, bool)
+        and isinstance(new, (int, float))
+        and not isinstance(new, bool)
+    ):
+        return [acc, new]
+    return acc
+
+
+def _run_once(tiny: bool) -> dict:
     from benchmarks import (
         bench_compress,
         bench_culling,
@@ -34,34 +77,77 @@ def main() -> None:
         bench_serving,
         bench_table1_kernels,
         bench_table2_throughput,
-        report,
     )
 
-    print("name,us_per_call,derived")
+    # (module, supports --tiny). Sections without a tiny mode only run at
+    # full scale — the tiny profile is the CI smoke subset, not a slower
+    # spelling of the full sweep.
+    mods = [
+        (bench_table1_kernels, False),
+        (bench_table2_throughput, True),
+        (bench_fig5_parallelism, False),
+        (bench_lm_steps, False),
+        (bench_serving, True),
+        (bench_culling, True),
+        (bench_fused, True),
+        (bench_compress, True),
+        (bench_obs, True),
+    ]
     metrics: dict = {}
-    for mod in (
-        bench_table1_kernels,
-        bench_table2_throughput,
-        bench_fig5_parallelism,
-        bench_lm_steps,
-        bench_serving,
-        bench_culling,
-        bench_fused,
-        bench_compress,
-        bench_obs,
-    ):
+    for mod, has_tiny in mods:
+        if tiny and not has_tiny:
+            print(f"# {mod.__name__}: no tiny mode, skipped", file=sys.stderr)
+            continue
         try:
-            section = mod.main()
+            section = mod.main(("--tiny",)) if (tiny and has_tiny) else mod.main()
         except Exception:
             print(f"# {mod.__name__} FAILED", file=sys.stderr)
             traceback.print_exc()
             raise
         if isinstance(section, dict):
             metrics[mod.__name__.removeprefix("benchmarks.")] = section
+    return metrics
 
-    BENCH_JSON.write_text(json.dumps(metrics, indent=2, sort_keys=True) + "\n")
-    print(f"# wrote {BENCH_JSON}", file=sys.stderr)
 
+def main(argv: tuple[str, ...] | list[str] | None = None) -> None:
+    from tools.perfguard.bench import provenance_meta
+
+    from benchmarks import report
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--tiny", action="store_true",
+        help="smoke scale: run each section's --tiny variant (profile=tiny)",
+    )
+    ap.add_argument(
+        "--trials", type=int, default=1,
+        help="repeat the sweep N times; numeric leaves become sample lists",
+    )
+    ap.add_argument(
+        "--out", default=None,
+        help=f"results path (default: {BENCH_JSON.name} in the repo root)",
+    )
+    args = ap.parse_args(argv)
+    if args.trials < 1:
+        ap.error("--trials must be >= 1")
+    out_path = pathlib.Path(args.out) if args.out else BENCH_JSON
+
+    print("name,us_per_call,derived")
+    metrics = _run_once(args.tiny)
+    for trial in range(1, args.trials):
+        print(f"# trial {trial + 1}/{args.trials}", file=sys.stderr)
+        metrics = _merge_trials(metrics, _run_once(args.tiny))
+
+    metrics["_meta"] = provenance_meta(
+        trials=args.trials,
+        profile="tiny" if args.tiny else "full",
+        root=REPO_ROOT,
+    )
+    out_path.write_text(json.dumps(metrics, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
+
+    # The trajectory table collates only the *committed* repo-root files,
+    # so regenerating it after a smoke run writes the same bytes.
     trajectory = REPO_ROOT / "BENCH_TRAJECTORY.md"
     trajectory.write_text(report.trajectory_table(REPO_ROOT))
     print(f"# wrote {trajectory}", file=sys.stderr)

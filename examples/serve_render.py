@@ -30,6 +30,14 @@ request spans — drag it into https://ui.perfetto.dev to see admission
 waits, step packing, and the dispatch-ahead-of-harvest overlap. Compile
 times are printed from the registry's ``render_server_compile_ms`` gauge,
 the same series the endpoint exports.
+
+Live SLOs (``repro.obs.slo``): ``--slo-p95-ms`` / ``--slo-max-queue``
+declare targets for the continuous server; one
+:class:`~repro.obs.slo.SLOMonitor` is shared between the server (which
+feeds it request events) and the metrics endpoint (which then also serves
+``/healthz`` — 503 once overloaded — and ``/slo``, the full state/window
+snapshot). The run prints the final health state and any overload
+transitions the burst pattern caused.
 """
 
 import argparse
@@ -41,6 +49,7 @@ import numpy as np
 from repro.core import RenderConfig, orbit_cameras, random_gaussians
 from repro.core.render import render_jit
 from repro.obs.metrics import Registry, serve_metrics
+from repro.obs.slo import SLOMonitor, SLOTargets
 from repro.obs.tracing import Tracer, span
 from repro.serve import RenderServer, replay_schedule
 
@@ -121,6 +130,21 @@ def main() -> None:
         "free port)",
     )
     ap.add_argument(
+        "--slo-p95-ms",
+        type=float,
+        default=None,
+        help="declare a windowed p95 latency target for the continuous "
+        "server; enables the live SLO monitor (state printed at the end, "
+        "/healthz + /slo served when --metrics-port is set)",
+    )
+    ap.add_argument(
+        "--slo-max-queue",
+        type=float,
+        default=None,
+        help="declare a queue-depth ceiling for the continuous server "
+        "(same monitor as --slo-p95-ms)",
+    )
+    ap.add_argument(
         "--trace-out",
         default=None,
         help="write a Chrome trace-event JSON (Perfetto-loadable) with "
@@ -132,11 +156,30 @@ def main() -> None:
 
     registry = Registry()
     tracer = Tracer() if args.trace_out else None
+    # One monitor shared by the continuous server (event source) and the
+    # metrics endpoint (/healthz + /slo) — repro.obs.slo.
+    slo_monitor = None
+    if args.slo_p95_ms is not None or args.slo_max_queue is not None:
+        slo_monitor = SLOMonitor(
+            SLOTargets(
+                p95_ms=args.slo_p95_ms,
+                max_queue_depth=args.slo_max_queue,
+            ),
+            registry=registry,
+            mode="continuous",
+        )
     metrics_server = None
     if args.metrics_port is not None:
-        metrics_server = serve_metrics(registry, port=args.metrics_port)
-        port = metrics_server.server_address[1]
+        metrics_server = serve_metrics(
+            registry, port=args.metrics_port, slo=slo_monitor
+        )
+        port = metrics_server.port
         print(f"metrics: http://127.0.0.1:{port}/metrics")
+        if slo_monitor is not None:
+            print(
+                f"slo:     http://127.0.0.1:{port}/slo  "
+                f"(health: http://127.0.0.1:{port}/healthz)"
+            )
 
     model = random_gaussians(jax.random.PRNGKey(0), args.gaussians, extent=1.5)
     config = RenderConfig(
@@ -216,6 +259,7 @@ def main() -> None:
             mode=mode,
             registry=registry,
             tracer=tracer,
+            slo=slo_monitor if mode == "continuous" else None,
         )
         server.warmup(cams[0])
         mem = server.memory_stats()
@@ -247,6 +291,24 @@ def main() -> None:
         f"throughput:  continuous = {walls['microbatch'] / walls['continuous']:.2f}x "
         f"micro-batching, {seq_wall / walls['continuous']:.2f}x sequential"
     )
+    if slo_monitor is not None:
+        snap = slo_monitor.snapshot()
+        w = snap["window"]
+        p95 = w["p95_ms"]
+        print(
+            f"slo:         state={snap['state']} "
+            f"(window p95 {'—' if p95 is None else f'{p95:.1f} ms'}, "
+            f"{w['req_s']:.2f} req/s, depth {w['queue_depth']})"
+            + (
+                " — transitions: "
+                + ", ".join(
+                    f"{t['from']}->{t['to']}@{t['t_s']:.2f}s"
+                    for t in snap["transitions"]
+                )
+                if snap["transitions"]
+                else ""
+            )
+        )
 
     # --- mixed-size buckets (continuous only) ------------------------------
     if args.mixed_sizes:

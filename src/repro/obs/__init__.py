@@ -11,6 +11,9 @@ Three dependency-free layers (DESIGN.md §11):
   kernel's in-kernel counters, cull visibility, lane occupancy, resident
   bytes) into one canonical metric-name catalog, plus the jnp reference
   replay the kernel counters are tested against.
+* :mod:`repro.obs.slo` — rolling-window SLO monitor + overload state
+  machine over the registry; feeds ``/healthz`` and ``/slo`` on the
+  ``serve_metrics()`` endpoint (DESIGN.md §13).
 """
 
 from repro.obs.metrics import (
@@ -32,6 +35,10 @@ from repro.obs.pipeline import (
     replay_fused_stats,
     replay_fused_stats_q,
     summarize_kernel_stats,
+)
+from repro.obs.slo import (
+    SLOMonitor,
+    SLOTargets,
 )
 from repro.obs.tracing import (
     Tracer,
@@ -58,6 +65,8 @@ __all__ = [
     "replay_fused_stats",
     "replay_fused_stats_q",
     "summarize_kernel_stats",
+    "SLOMonitor",
+    "SLOTargets",
     "Tracer",
     "get_tracer",
     "set_tracer",

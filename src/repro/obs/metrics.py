@@ -24,6 +24,8 @@ percentiles and is already a repo-wide dependency.
 
 from __future__ import annotations
 
+import errno
+import json
 import math
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -430,30 +432,65 @@ def validate_prometheus(text: str) -> dict[str, dict]:
     return families
 
 
-def serve_metrics(registry: Registry, port: int = 0):
+def serve_metrics(registry: Registry, port: int = 0, *, slo=None):
     """Serve ``registry.render_prometheus()`` at ``/metrics`` on ``port``.
 
-    Returns the started ``ThreadingHTTPServer`` (daemon thread); read the
-    bound port from ``server.server_address[1]`` (useful with ``port=0``).
-    Call ``server.shutdown()`` to stop.
+    With ``slo=`` (an :class:`repro.obs.slo.SLOMonitor`), two JSON
+    endpoints join ``/metrics``:
+
+    * ``/healthz`` — liveness for load balancers: 200 while the monitor is
+      ``ok`` or ``degraded``, 503 once ``overloaded``.
+    * ``/slo`` — the full ``snapshot()`` (state, rolling window, targets,
+      transition history), always 200.
+
+    Returns the started ``ThreadingHTTPServer`` (daemon thread); the bound
+    port — resolved even when ``port=0`` asked the OS to pick — is on the
+    handle as ``server.port`` (and ``server.server_address[1]``). Call
+    ``server.shutdown()`` to stop. A ``port`` that is already in use
+    raises ``OSError`` naming the port instead of the bare bind errno.
     """
 
     class Handler(BaseHTTPRequestHandler):
-        def do_GET(self) -> None:  # noqa: N802 (http.server API)
-            if self.path.rstrip("/") not in ("", "/metrics"):
-                self.send_error(404)
-                return
-            body = registry.render_prometheus().encode()
-            self.send_response(200)
-            self.send_header("Content-Type", "text/plain; version=0.0.4")
+        def _send(self, code: int, body: bytes, ctype: str) -> None:
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
 
+        def do_GET(self) -> None:  # noqa: N802 (http.server API)
+            path = self.path.rstrip("/")
+            if path in ("", "/metrics"):
+                body = registry.render_prometheus().encode()
+                self._send(200, body, "text/plain; version=0.0.4")
+            elif path == "/healthz" and slo is not None:
+                healthy, doc = slo.healthz()
+                self._send(
+                    200 if healthy else 503,
+                    json.dumps(doc).encode(),
+                    "application/json",
+                )
+            elif path == "/slo" and slo is not None:
+                self._send(
+                    200, json.dumps(slo.snapshot()).encode(), "application/json"
+                )
+            else:
+                self.send_error(404)
+
         def log_message(self, *args) -> None:  # silence per-request stderr
             pass
 
-    server = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    try:
+        server = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    except OSError as e:
+        if e.errno == errno.EADDRINUSE:
+            raise OSError(
+                errno.EADDRINUSE,
+                f"metrics port {port} already in use on 127.0.0.1 — pass "
+                "port=0 to let the OS pick a free one",
+            ) from e
+        raise
+    server.port = server.server_address[1]
     thread = threading.Thread(target=server.serve_forever, daemon=True)
     thread.start()
     return server

@@ -1,0 +1,349 @@
+"""Live SLO monitoring: rolling-window serving health + overload states.
+
+The runtime half of the perf contract whose static half is
+``tools/perfguard`` (DESIGN.md §13): perfguard gates *commits* on the
+BENCH trajectory; this module watches a *running* :class:`RenderServer`
+against declared targets and exposes the admission-control signal the
+fleet-scale roadmap item will consume.
+
+Three pieces:
+
+* :class:`SLOTargets` — the declared objectives: windowed p95/p99 latency
+  ceilings, a req/s floor, queue-depth and reject-rate ceilings, plus the
+  state-machine knobs (window span, trip/clear hold times, overload
+  factor).
+* :class:`SLOMonitor` — a thread-safe rolling window over request events
+  (``observe_latency`` / ``note_admit`` / ``note_done`` / ``note_reject``)
+  with exact percentiles (numpy's linear interpolation, computed stdlib-
+  side and pinned equal by test), windowed req/s, instantaneous queue
+  depth (admitted minus resolved), and windowed reject rate.
+* the **overload state machine** — ``ok -> degraded -> overloaded`` with
+  time-based hysteresis. Every evaluation classifies current *pressure*:
+
+  - level 2 (overloaded): any hard breach — queue depth or reject rate
+    over target, or a latency percentile beyond ``overload_factor`` times
+    its ceiling, or req/s under ``min_req_s / overload_factor`` while
+    demand exists;
+  - level 1 (degraded): any soft breach — a latency percentile over its
+    ceiling, or req/s under ``min_req_s`` while demand exists;
+  - level 0 (ok): no breach.
+
+  The state only moves after the new level has held continuously for
+  ``trip_s`` (escalation) or ``clear_s`` (recovery) — so a single slow
+  request can't flap the health signal, and a step load can legitimately
+  jump ``ok -> overloaded`` directly once ``trip_s`` elapses. The
+  ``min_req_s`` floor is only judged while the admission window is
+  non-empty *and* demand has been visible for at least one expected
+  service interval: an idle server is healthy, and a just-admitted first
+  request is not yet starvation.
+
+The monitor is clock-injectable (``clock=``) so the hysteresis schedule
+is testable with scripted time, and registry-backed (``registry=``) so
+``slo_state`` / ``slo_window_*`` gauges ride the same ``/metrics``
+exposition as everything else. ``serve_metrics(..., slo=monitor)`` adds
+``/healthz`` (200 until overloaded, then 503) and ``/slo`` (full JSON
+snapshot) next to ``/metrics``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import threading
+import time
+from typing import Callable
+
+from repro.obs.metrics import Registry
+
+__all__ = ["SLOTargets", "SLOMonitor", "STATES"]
+
+STATES = ("ok", "degraded", "overloaded")
+_MAX_TRANSITIONS = 64  # bounded history, like every other obs buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTargets:
+    """Declared service-level objectives + state-machine knobs.
+
+    Every objective is optional (None = not monitored); the state machine
+    runs over whichever are set. ``window_s`` bounds both the memory and
+    the reaction horizon: percentiles/rates are computed over events in
+    the last ``window_s`` seconds only.
+    """
+
+    p95_ms: float | None = None
+    p99_ms: float | None = None
+    min_req_s: float | None = None
+    max_queue_depth: float | None = None
+    max_reject_rate: float | None = None
+    overload_factor: float = 2.0  # hard-breach multiplier on latency/req_s
+    window_s: float = 30.0
+    trip_s: float = 0.0  # how long pressure must hold before escalating
+    clear_s: float = 5.0  # how long calm must hold before recovering
+
+    def __post_init__(self):
+        if self.overload_factor < 1.0:
+            raise ValueError("overload_factor must be >= 1")
+        if self.window_s <= 0:
+            raise ValueError("window_s must be positive")
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """numpy's default linear-interpolation percentile over a sorted list.
+
+    Kept stdlib-side so the serving hot path never imports numpy; equality
+    with ``np.percentile`` over the same window is pinned by test.
+    """
+    n = len(sorted_vals)
+    if n == 1:
+        return sorted_vals[0]
+    k = (n - 1) * (q / 100.0)
+    f = math.floor(k)
+    c = math.ceil(k)
+    if f == c:
+        return sorted_vals[int(k)]
+    return sorted_vals[f] * (c - k) + sorted_vals[c] * (k - f)
+
+
+class SLOMonitor:
+    """Thread-safe rolling-window SLO evaluation + overload state machine.
+
+    All mutators evaluate the state machine inline (the window is small —
+    O(events in window) — and serving rates here are tens of req/s), so
+    the health signal is current the moment ``snapshot()`` or a gauge is
+    read; ``snapshot()`` itself also evaluates, so pollers see recovery
+    even when traffic has stopped.
+    """
+
+    def __init__(
+        self,
+        targets: SLOTargets,
+        *,
+        registry: Registry | None = None,
+        clock: Callable[[], float] = time.monotonic,
+        **labels: str,
+    ) -> None:
+        self.targets = targets
+        self._clock = clock
+        self._labels = {str(k): str(v) for k, v in labels.items()}
+        self._lock = threading.Lock()
+        self._t0 = clock()
+        self._lat: collections.deque[tuple[float, float]] = collections.deque()
+        self._done: collections.deque[float] = collections.deque()
+        self._admit: collections.deque[float] = collections.deque()
+        self._reject: collections.deque[float] = collections.deque()
+        self._depth = 0
+        self._state = 0
+        self._state_since = self._t0
+        self._pending_level: int | None = None
+        self._pending_since = self._t0
+        self._transitions: collections.deque[dict] = collections.deque(
+            maxlen=_MAX_TRANSITIONS
+        )
+        self._gauges = None
+        if registry is not None:
+            g = registry.gauge
+            self._gauges = {
+                "state": g("slo_state", "0=ok 1=degraded 2=overloaded"),
+                "p95": g("slo_window_p95_ms", "windowed request latency p95"),
+                "p99": g("slo_window_p99_ms", "windowed request latency p99"),
+                "req_s": g("slo_window_req_s", "completed requests per second"),
+                "depth": g("slo_queue_depth", "admitted minus resolved requests"),
+                "reject": g("slo_reject_rate", "windowed rejected / offered"),
+                "transitions": registry.counter(
+                    "slo_state_transitions_total",
+                    "overload state-machine transitions",
+                ),
+            }
+            self._gauges["state"].set(0.0, **self._labels)
+
+    # -- event intake ------------------------------------------------------
+
+    def observe_latency(self, ms: float) -> None:
+        """One served request's latency (enqueue -> result, ms)."""
+        with self._lock:
+            self._lat.append((self._clock(), float(ms)))
+            self._evaluate_locked()
+
+    def note_admit(self, n: int = 1) -> None:
+        """``n`` requests admitted (queue depth rises)."""
+        with self._lock:
+            t = self._clock()
+            self._admit.extend([t] * n)
+            self._depth += n
+            self._evaluate_locked()
+
+    def note_done(self, n: int = 1) -> None:
+        """``n`` admitted requests resolved — served, failed, or cancelled
+        (queue depth falls; only served requests also observe a latency)."""
+        with self._lock:
+            t = self._clock()
+            self._done.extend([t] * n)
+            self._depth = max(0, self._depth - n)
+            self._evaluate_locked()
+
+    def note_reject(self, n: int = 1) -> None:
+        """``n`` requests rejected at admission (never occupied the queue)."""
+        with self._lock:
+            t = self._clock()
+            self._reject.extend([t] * n)
+            self._evaluate_locked()
+
+    # -- window math -------------------------------------------------------
+
+    def _prune_locked(self, now: float) -> None:
+        horizon = now - self.targets.window_s
+        while self._lat and self._lat[0][0] < horizon:
+            self._lat.popleft()
+        for dq in (self._done, self._admit, self._reject):
+            while dq and dq[0] < horizon:
+                dq.popleft()
+
+    def _window_locked(self, now: float) -> dict:
+        self._prune_locked(now)
+        vals = sorted(v for _, v in self._lat)
+        # req/s over the elapsed-capped window: a monitor younger than
+        # window_s divides by its true age, not the full span.
+        span = max(min(self.targets.window_s, now - self._t0), 1e-9)
+        offered = len(self._admit) + len(self._reject)
+        return {
+            "n_latency": len(vals),
+            "p50_ms": _percentile(vals, 50.0) if vals else None,
+            "p95_ms": _percentile(vals, 95.0) if vals else None,
+            "p99_ms": _percentile(vals, 99.0) if vals else None,
+            "req_s": len(self._done) / span,
+            "queue_depth": self._depth,
+            "admitted": len(self._admit),
+            "oldest_admit_age_s": (now - self._admit[0]) if self._admit else None,
+            "reject_rate": (len(self._reject) / offered) if offered else 0.0,
+            "span_s": span,
+        }
+
+    def window(self) -> dict:
+        """Current rolling-window statistics (prunes, does not evaluate)."""
+        with self._lock:
+            return self._window_locked(self._clock())
+
+    # -- state machine -----------------------------------------------------
+
+    def _level(self, w: dict) -> int:
+        t = self.targets
+        f = t.overload_factor
+        hard = soft = False
+        for ceil_ms, got in ((t.p95_ms, w["p95_ms"]), (t.p99_ms, w["p99_ms"])):
+            if ceil_ms is not None and got is not None:
+                hard = hard or got > ceil_ms * f
+                soft = soft or got > ceil_ms
+        if t.min_req_s is not None and w["admitted"] > 0:
+            # Cold-start guard: a just-admitted request makes req_s read 0
+            # until something completes, which is not starvation. Judge the
+            # throughput floor only once demand has been visible for a full
+            # expected service interval (1/min_req_s, capped at the window)
+            # — after that, zero completions IS a stall.
+            age = w["oldest_admit_age_s"]
+            grace = min(1.0 / t.min_req_s, t.window_s)
+            if age is not None and age >= grace:
+                hard = hard or w["req_s"] < t.min_req_s / f
+                soft = soft or w["req_s"] < t.min_req_s
+        if t.max_queue_depth is not None:
+            hard = hard or w["queue_depth"] > t.max_queue_depth
+        if t.max_reject_rate is not None:
+            hard = hard or w["reject_rate"] > t.max_reject_rate
+        return 2 if hard else (1 if soft else 0)
+
+    def _evaluate_locked(self) -> int:
+        now = self._clock()
+        w = self._window_locked(now)
+        level = self._level(w)
+        if level == self._state:
+            self._pending_level = None
+        else:
+            if self._pending_level != level:
+                self._pending_level, self._pending_since = level, now
+            hold = (
+                self.targets.trip_s
+                if level > self._state
+                else self.targets.clear_s
+            )
+            if now - self._pending_since >= hold:
+                self._transitions.append(
+                    {
+                        "t_s": now - self._t0,
+                        "from": STATES[self._state],
+                        "to": STATES[level],
+                    }
+                )
+                self._state = level
+                self._state_since = now
+                self._pending_level = None
+                if self._gauges is not None:
+                    self._gauges["transitions"].inc(
+                        to=STATES[level], **self._labels
+                    )
+        if self._gauges is not None:
+            gs = self._gauges
+            gs["state"].set(float(self._state), **self._labels)
+            gs["req_s"].set(w["req_s"], **self._labels)
+            gs["depth"].set(float(w["queue_depth"]), **self._labels)
+            gs["reject"].set(w["reject_rate"], **self._labels)
+            if w["p95_ms"] is not None:
+                gs["p95"].set(w["p95_ms"], **self._labels)
+            if w["p99_ms"] is not None:
+                gs["p99"].set(w["p99_ms"], **self._labels)
+        return self._state
+
+    def evaluate(self) -> str:
+        """Re-evaluate now (pollers get recovery without new traffic)."""
+        with self._lock:
+            return STATES[self._evaluate_locked()]
+
+    @property
+    def state(self) -> str:
+        return STATES[self._state]
+
+    def transitions(self) -> list[dict]:
+        with self._lock:
+            return list(self._transitions)
+
+    # -- export surfaces ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-friendly full picture: state + window + targets + history.
+
+        This is what ``/slo`` serves and what ``RenderServer.stats()``
+        embeds under ``"slo"``.
+        """
+        with self._lock:
+            self._evaluate_locked()
+            now = self._clock()
+            return {
+                "state": STATES[self._state],
+                "state_id": self._state,
+                "state_age_s": now - self._state_since,
+                "window": self._window_locked(now),
+                "targets": {
+                    k: v
+                    for k, v in dataclasses.asdict(self.targets).items()
+                    if v is not None
+                },
+                "transitions": list(self._transitions),
+            }
+
+    def healthz(self) -> tuple[bool, dict]:
+        """Liveness summary for ``/healthz``: healthy unless overloaded.
+
+        ``degraded`` still reports healthy=True — the server is serving,
+        just out of SLO; load balancers should stop sending traffic only
+        on overload. The body carries the state either way.
+        """
+        with self._lock:
+            self._evaluate_locked()
+            w = self._window_locked(self._clock())
+            return self._state < 2, {
+                "status": STATES[self._state],
+                "ok": self._state < 2,
+                "queue_depth": w["queue_depth"],
+                "window_p95_ms": w["p95_ms"],
+                "window_req_s": w["req_s"],
+            }

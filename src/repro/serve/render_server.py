@@ -76,6 +76,7 @@ from repro.core.multicam import (
 )
 from repro.core.scene import SceneTree, build_scene_tree
 from repro.obs.metrics import DEFAULT_LATENCY_BUCKETS_MS, Registry
+from repro.obs.slo import SLOMonitor, SLOTargets
 from repro.obs.tracing import Tracer, span
 
 MODES = ("continuous", "microbatch")
@@ -183,6 +184,15 @@ class RenderServer:
         counter at assignment — load the saved trace in Perfetto to see
         admission waits, step packing, and the dispatch-ahead-of-harvest
         overlap. ``None`` (default) is a zero-cost no-op.
+      slo: optional live SLO monitoring (``repro.obs.slo``). Pass
+        :class:`~repro.obs.slo.SLOTargets` to have the server build an
+        :class:`~repro.obs.slo.SLOMonitor` on its own registry, or a
+        prebuilt monitor to share one across surfaces (e.g. with
+        ``serve_metrics(..., slo=monitor)`` for ``/healthz`` + ``/slo``).
+        The server feeds it admission/completion/rejection events and
+        per-request latencies; the rolling-window health state appears
+        under ``stats()["slo"]`` and as ``slo_*`` gauges. ``None``
+        (default) is a zero-cost no-op.
     """
 
     def __init__(
@@ -198,6 +208,7 @@ class RenderServer:
         mode: str = "continuous",
         registry: Registry | None = None,
         tracer: Tracer | None = None,
+        slo: SLOTargets | SLOMonitor | None = None,
     ):
         if mode not in MODES:
             raise ValueError(f"mode={mode!r} not in {MODES}")
@@ -249,6 +260,12 @@ class RenderServer:
         # used to append to — memory is O(ring_size) for the lifetime.
         self.registry = registry if registry is not None else Registry()
         self.tracer = tracer
+        # SLOTargets -> build a monitor on this server's registry (gauges
+        # ride the same /metrics exposition); a prebuilt SLOMonitor is
+        # adopted as-is so one monitor can back serve_metrics' /healthz.
+        if isinstance(slo, SLOTargets):
+            slo = SLOMonitor(slo, registry=self.registry, mode=self.mode)
+        self.slo: SLOMonitor | None = slo
         self._lat = self.registry.histogram(
             "render_server_latency_ms",
             "Request latency, enqueue to result available (ms)",
@@ -360,6 +377,8 @@ class RenderServer:
         key = (camera.width, camera.height)
         if key not in self._sentinels:
             self._rejected_total.inc()
+            if self.slo is not None:
+                self.slo.note_reject()
             raise ValueError(
                 f"request size {key} not in the server's static bucket set "
                 f"{self.buckets} (one compiled executable per bucket; pass "
@@ -371,6 +390,13 @@ class RenderServer:
                 raise RuntimeError("server not started")
             self._queue.put(req)
         self._requests_total.inc()
+        if self.slo is not None:
+            # Queue-depth accounting rides the future's own lifecycle: the
+            # done callback fires on result, exception, AND cancel, so the
+            # admitted count can never leak a phantom depth unit no matter
+            # which path resolves the request.
+            self.slo.note_admit()
+            req.future.add_done_callback(lambda _f: self.slo.note_done())
         return req.future
 
     def render(self, camera: Camera) -> RenderResult:
@@ -394,7 +420,9 @@ class RenderServer:
         O(ring), never O(requests). ``memory`` reports the resident
         model's footprint (bytes by field, compression ratio) when the
         server holds a :class:`SceneTree`; ``None`` when serving a raw
-        cloud.
+        cloud. ``slo`` carries the live monitor's ``snapshot()`` (state,
+        rolling window, transition history) when one is attached; ``None``
+        otherwise — same-schema either way so pollers never KeyError.
         """
         lat = self._lat.summary()
         bs = self._batch.summary()
@@ -412,6 +440,7 @@ class RenderServer:
             "mean_batch_size": mean_bs,
             "occupancy": mean_bs / self.max_batch,
             "memory": self.memory_stats(),
+            "slo": self.slo.snapshot() if self.slo is not None else None,
         }
 
     # -- continuous scheduler ---------------------------------------------
@@ -523,7 +552,10 @@ class RenderServer:
         n = len(step.lanes)
         self._batch.observe(n)
         for lane in step.lanes:
-            self._lat.observe((t_done - lane.req.t_enqueue) * 1e3)
+            lat_ms = (t_done - lane.req.t_enqueue) * 1e3
+            self._lat.observe(lat_ms)
+            if self.slo is not None:
+                self.slo.observe_latency(lat_ms)
         if self.tracer is not None:
             self._trace_step(step, t_done)
         for lane in step.lanes:
@@ -710,7 +742,10 @@ class RenderServer:
         t_done = time.perf_counter()
         self._batch.observe(len(live))
         for r in live:
-            self._lat.observe((t_done - r.t_enqueue) * 1e3)
+            lat_ms = (t_done - r.t_enqueue) * 1e3
+            self._lat.observe(lat_ms)
+            if self.slo is not None:
+                self.slo.observe_latency(lat_ms)
         for i, r in enumerate(live):
             if not r.future.done():
                 r.future.set_result(

@@ -385,12 +385,13 @@ class TestServerObservability:
         with srv:
             [f.result(timeout=120) for f in map(srv.submit, cams)]
         stats = srv.stats()
-        # the pre-registry stats() schema, pinned
+        # the stats() schema, pinned (pre-registry keys + PR 10's "slo")
         assert set(stats) == {
             "mode", "requests", "batches", "compile_ms", "latency_ms_p50",
             "latency_ms_p95", "latency_ms_mean", "mean_batch_size",
-            "occupancy", "memory",
+            "occupancy", "memory", "slo",
         }
+        assert stats["slo"] is None  # no monitor attached -> same schema
         assert idle_keys == set(stats)
         assert stats["requests"] == 5
         assert stats["latency_ms_p95"] >= stats["latency_ms_p50"] > 0.0

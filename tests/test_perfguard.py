@@ -1,0 +1,372 @@
+"""tools/perfguard: declarative perf-regression gating over BENCH files.
+
+Unit-tests the decision core (dotted-path resolution with dots *inside*
+keys, median/MAD noise margins, absolute vs relative checks, profile
+gating) and then pins the CLI end-to-end the way CI runs it: a passing
+fixture bench exits 0, a bench with serving req/s degraded 40%% exits 1
+and emits the GitHub error annotation, and ``update-baseline`` writes a
+provenance-stamped baseline. Fixture benches are built *from the shipped
+pyproject budgets* so these tests keep pinning whatever budget set the
+repo actually declares.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))  # `tools` package lives at the repo root
+
+from tools.perfguard.bench import (  # noqa: E402
+    build_baseline,
+    latest_bench,
+    load_baseline,
+    provenance_meta,
+    write_baseline,
+)
+from tools.perfguard.budgets import (  # noqa: E402
+    Budget,
+    evaluate_budget,
+    evaluate_budgets,
+    mad,
+    median,
+    resolve_metric,
+)
+from tools.perfguard.config import load_config  # noqa: E402
+
+# -- robust statistics -----------------------------------------------------
+
+
+class TestStats:
+    def test_median(self):
+        assert median([3.0]) == 3.0
+        assert median([1.0, 9.0, 2.0]) == 2.0
+        assert median([1.0, 2.0, 3.0, 10.0]) == 2.5
+        with pytest.raises(ValueError):
+            median([])
+
+    def test_mad_ignores_one_outlier(self):
+        # One wild trial moves neither the median nor the MAD much — the
+        # whole reason the noise margin uses the robust pair.
+        clean = [10.0, 10.1, 9.9, 10.05, 9.95]
+        dirty = clean[:-1] + [30.0]
+        assert median(dirty) == pytest.approx(median(clean), rel=0.01)
+        assert mad(dirty) < 0.2
+
+
+# -- dotted-path resolution ------------------------------------------------
+
+
+class TestResolveMetric:
+    TREE = {
+        "bench_serving": {
+            "scheduler_sweep": {
+                "1.5x_capacity": {"continuous_speedup": 1.2},
+                "burst": {"continuous_speedup": 1.1},
+            },
+            "server": {"req_s": 13.0},
+        }
+    }
+
+    def test_plain_path(self):
+        assert resolve_metric(self.TREE, "bench_serving.server.req_s") == 13.0
+
+    def test_dots_inside_keys(self):
+        # "1.5x_capacity" contains dots: naive split(".") can't address it.
+        assert (
+            resolve_metric(
+                self.TREE,
+                "bench_serving.scheduler_sweep.1.5x_capacity.continuous_speedup",
+            )
+            == 1.2
+        )
+
+    def test_longest_key_wins(self):
+        tree = {"a": {"b": {"c": 1.0}}, "a.b": {"c": 2.0}}
+        assert resolve_metric(tree, "a.b.c") == 2.0
+
+    def test_missing_returns_none(self):
+        assert resolve_metric(self.TREE, "bench_serving.nope") is None
+        assert resolve_metric(self.TREE, "bench_serving.server.req_s.deeper") is None
+
+
+# -- budget evaluation -----------------------------------------------------
+
+
+def _budget(**kw) -> Budget:
+    kw.setdefault("name", "b")
+    kw.setdefault("metric", "m")
+    return Budget(**kw)
+
+
+class TestEvaluateBudget:
+    def test_absolute_floor_and_ceiling(self):
+        b = _budget(min=1.5, relative=False)
+        assert evaluate_budget(b, {"m": 2.0}, None, profile_match=True).status == "pass"
+        r = evaluate_budget(b, {"m": 1.0}, None, profile_match=True)
+        assert r.status == "regress" and "absolute floor" in r.message
+        b = _budget(max=0.45, better="lower", relative=False)
+        r = evaluate_budget(b, {"m": 0.5}, None, profile_match=True)
+        assert r.status == "regress" and "absolute ceiling" in r.message
+
+    def test_relative_band_and_improve(self):
+        base = {"median": 10.0, "mad": 0.0}
+        b = _budget(rel_tolerance=0.25, mad_k=3.0)
+        ok = evaluate_budget(b, {"m": 8.0}, base, profile_match=True)
+        assert ok.status == "pass"  # within 25%
+        bad = evaluate_budget(b, {"m": 7.0}, base, profile_match=True)
+        assert bad.status == "regress" and bad.failed
+        up = evaluate_budget(b, {"m": 13.0}, base, profile_match=True)
+        assert up.status == "improve" and not up.failed
+
+    def test_better_lower_mirrors(self):
+        base = {"median": 100.0, "mad": 0.0}
+        b = _budget(better="lower", rel_tolerance=0.25)
+        assert evaluate_budget(b, {"m": 120.0}, base, profile_match=True).status == "pass"
+        assert (
+            evaluate_budget(b, {"m": 130.0}, base, profile_match=True).status
+            == "regress"
+        )
+        assert (
+            evaluate_budget(b, {"m": 70.0}, base, profile_match=True).status
+            == "improve"
+        )
+
+    def test_mad_widens_noisy_margin(self):
+        # rel_tolerance alone would flag 25%: a noisy baseline (MAD 2.0,
+        # mad_k 3) widens the band to +-6 around median 10 -> 5.0 passes.
+        noisy = {"median": 10.0, "mad": 2.0}
+        b = _budget(rel_tolerance=0.25, mad_k=3.0)
+        assert evaluate_budget(b, {"m": 5.0}, noisy, profile_match=True).status == "pass"
+        assert (
+            evaluate_budget(b, {"m": 3.0}, noisy, profile_match=True).status
+            == "regress"
+        )
+
+    def test_trial_list_reduces_to_median(self):
+        b = _budget(min=1.0, relative=False)
+        r = evaluate_budget(b, {"m": [0.5, 2.0, 3.0]}, None, profile_match=True)
+        assert r.status == "pass" and r.value == 2.0 and r.n_samples == 3
+
+    def test_missing_metric(self):
+        r = evaluate_budget(_budget(), {}, None, profile_match=True)
+        assert r.status == "missing" and r.failed
+        r = evaluate_budget(_budget(required=False), {}, None, profile_match=True)
+        assert r.status == "skipped" and not r.failed
+
+    def test_profile_mismatch_downgrades_to_absolute(self):
+        base = {"median": 10.0, "mad": 0.0}
+        b = _budget(min=1.0)
+        # 50% below baseline, but the baseline came from another profile:
+        # only the absolute floor applies.
+        r = evaluate_budget(b, {"m": 5.0}, base, profile_match=False)
+        assert r.status == "pass" and "profile differs" in r.message
+
+    def test_profiles_filter_in_evaluate_budgets(self):
+        budgets = [
+            _budget(name="any", min=0.0, relative=False),
+            _budget(name="full-only", min=0.0, relative=False, profiles=("full",)),
+        ]
+        results = evaluate_budgets(budgets, {"m": 1.0}, None, profile="tiny")
+        assert [r.budget.name for r in results] == ["any"]
+
+    def test_github_annotation_format(self):
+        r = evaluate_budget(_budget(min=5.0, relative=False), {"m": 1.0}, None,
+                            profile_match=True)
+        line = r.github()
+        assert line.startswith("::error title=perfguard[b]::")
+        assert "\n" not in line
+
+
+class TestBudgetFromTable:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="metric"):
+            Budget.from_table("x", {}, default_mad_k=3, default_rel_tolerance=0.25)
+        with pytest.raises(ValueError, match="better"):
+            Budget.from_table(
+                "x", {"metric": "m", "better": "sideways"},
+                default_mad_k=3, default_rel_tolerance=0.25,
+            )
+        with pytest.raises(ValueError, match="unknown"):
+            Budget.from_table(
+                "x", {"metric": "m", "typo": 1},
+                default_mad_k=3, default_rel_tolerance=0.25,
+            )
+
+    def test_defaults_flow_from_config(self):
+        b = Budget.from_table(
+            "x", {"metric": "m"}, default_mad_k=4.0, default_rel_tolerance=0.1
+        )
+        assert b.mad_k == 4.0 and b.rel_tolerance == 0.1
+
+
+# -- config + bench IO against the real repo -------------------------------
+
+
+class TestRepoConfig:
+    def test_shipped_budgets_parse(self):
+        # Pins the py3.10 mini-TOML path: floats, booleans, lists, and the
+        # [tool.perfguard.budgets.NAME] sub-table shape all round-trip.
+        cfg = load_config(REPO)
+        names = {b.name for b in cfg["budgets"]}
+        assert {"serving-req-s", "serving-p95-ms", "fused-speedup-500k",
+                "quant-byte-ratio"} <= names
+        by_name = {b.name: b for b in cfg["budgets"]}
+        assert by_name["quant-byte-ratio"].better == "lower"
+        assert by_name["quant-byte-ratio"].max == 0.45
+        assert by_name["serving-req-s"].profiles == ("tiny",)
+        assert by_name["serving-req-s"].rel_tolerance == 0.3
+        assert by_name["serving-occupancy"].relative is False
+        assert cfg["mad_k"] == 3.0
+
+    def test_latest_bench_orders_by_pr_number(self, tmp_path):
+        for name in ("BENCH_PR2.json", "BENCH_PR10.json", "BENCH_PR9.json"):
+            (tmp_path / name).write_text("{}")
+        assert latest_bench(tmp_path, "BENCH_PR*.json").name == "BENCH_PR10.json"
+        assert latest_bench(tmp_path, "nope*.json") is None
+
+    def test_provenance_meta_shape(self):
+        meta = provenance_meta(trials=3, profile="tiny", root=REPO)
+        assert meta["schema_version"] == 1
+        assert meta["trials"] == 3 and meta["profile"] == "tiny"
+        assert set(meta) >= {"git_sha", "date", "hostname"}
+
+    def test_baseline_roundtrip(self, tmp_path):
+        budgets = [_budget(name="x", metric="a.b")]
+        bench = {"a": {"b": [1.0, 2.0, 3.0]},
+                 "_meta": {"profile": "tiny", "trials": 3}}
+        doc = build_baseline(budgets, bench, source="BENCH_X.json", root=REPO)
+        assert doc["budgets"]["x"]["median"] == 2.0
+        assert doc["budgets"]["x"]["n"] == 3
+        assert doc["_meta"]["profile"] == "tiny"
+        assert doc["_meta"]["source"] == "BENCH_X.json"
+        path = tmp_path / "baseline.json"
+        write_baseline(path, doc)
+        assert load_baseline(path)["budgets"]["x"]["samples"] == [1.0, 2.0, 3.0]
+        assert load_baseline(tmp_path / "absent.json") is None
+        (tmp_path / "bad.json").write_text("[]")
+        with pytest.raises(ValueError, match="update-baseline"):
+            load_baseline(tmp_path / "bad.json")
+
+
+# -- CLI end-to-end (subprocess, from the repo root, shipped budgets) ------
+
+
+def _tiny_bench(req_s: float = 20.0, p95_ms: float = 900.0) -> dict:
+    """A fixture bench covering every tiny-profile shipped budget, with
+    samples jittered ~1%% so baseline MAD is realistic but small."""
+    jitter = lambda x: [x, x * 1.01, x * 0.99]  # noqa: E731
+    return {
+        "_meta": {
+            "schema_version": 1, "git_sha": "fixture", "date": "d",
+            "hostname": "h", "trials": 3, "profile": "tiny",
+        },
+        "bench_serving": {
+            "paths": {
+                "binned": {"batched": {"8": {"speedup_vs_sequential": jitter(1.0)}}}
+            },
+            "scheduler_sweep": {"1.5x_capacity": {"continuous_speedup": jitter(1.05)}},
+            "server": {
+                "req_s": jitter(req_s),
+                "occupancy": 1.0,
+                "latency_ms_p95": jitter(p95_ms),
+            },
+        },
+    }
+
+
+def _run_cli(*argv: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-m", "tools.perfguard", *argv],
+        cwd=REPO, capture_output=True, text=True, timeout=120,
+    )
+
+
+class TestCLI:
+    def test_committed_state_passes_its_own_budgets(self):
+        # The repo must always pass its own shipped gates: newest committed
+        # BENCH file + committed baseline + shipped budgets -> exit 0.
+        proc = _run_cli("check")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "0 regressed" in proc.stderr
+
+    def test_fresh_baseline_then_pass_then_regression(self, tmp_path):
+        bench = tmp_path / "bench.json"
+        baseline = tmp_path / "baseline.json"
+        bench.write_text(json.dumps(_tiny_bench()))
+
+        up = _run_cli(
+            "update-baseline", "--bench", str(bench), "--baseline", str(baseline)
+        )
+        assert up.returncode == 0, up.stderr
+        doc = json.loads(baseline.read_text())
+        assert doc["_meta"]["profile"] == "tiny"
+        assert doc["_meta"]["source"] == "bench.json"
+        assert doc["_meta"]["git_sha"] != "unknown"  # stamped from this repo
+        assert "serving-req-s" in doc["budgets"]
+
+        ok = _run_cli("check", "--bench", str(bench), "--baseline", str(baseline))
+        assert ok.returncode == 0, ok.stdout + ok.stderr
+
+        # The acceptance fixture: fused req/s down 40% MUST flag, with a
+        # GitHub error annotation naming the budget.
+        degraded = tmp_path / "degraded.json"
+        degraded.write_text(json.dumps(_tiny_bench(req_s=20.0 * 0.6)))
+        bad = _run_cli(
+            "check", "--bench", str(degraded), "--baseline", str(baseline),
+            "--format", "github",
+        )
+        assert bad.returncode == 1
+        assert "::error title=perfguard[serving-req-s]::" in bad.stdout
+        assert "1 regressed" in bad.stderr
+
+    def test_p95_regression_flags_too(self, tmp_path):
+        bench = tmp_path / "bench.json"
+        baseline = tmp_path / "baseline.json"
+        bench.write_text(json.dumps(_tiny_bench()))
+        _run_cli("update-baseline", "--bench", str(bench), "--baseline", str(baseline))
+        slow = tmp_path / "slow.json"
+        # p95 is better=lower with a 60% tolerance: a 2x blowup must flag.
+        slow.write_text(json.dumps(_tiny_bench(p95_ms=900.0 * 2.0)))
+        bad = _run_cli("check", "--bench", str(slow), "--baseline", str(baseline))
+        assert bad.returncode == 1
+        assert "serving-p95-ms" in bad.stdout
+
+    def test_missing_required_metric_fails(self, tmp_path):
+        bench = tmp_path / "bench.json"
+        doc = _tiny_bench()
+        del doc["bench_serving"]["server"]["occupancy"]
+        bench.write_text(json.dumps(doc))
+        proc = _run_cli("check", "--bench", str(bench))
+        assert proc.returncode == 1
+        assert "serving-occupancy" in proc.stdout
+
+    def test_list_budgets(self):
+        proc = _run_cli("list-budgets")
+        assert proc.returncode == 0
+        assert "serving-req-s" in proc.stdout
+        assert "bench_serving.server.req_s" in proc.stdout
+
+
+@pytest.mark.slow
+def test_full_pipeline_tiny_bench_then_check(tmp_path):
+    """The CI perfguard job end-to-end: a real --tiny bench run, then the
+    gate — fresh measurements on this machine must pass the shipped
+    absolute budgets (relative checks engage only against the committed
+    tiny baseline when profiles match)."""
+    out = tmp_path / "BENCH_tiny.json"
+    bench = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--tiny", "--out", str(out)],
+        cwd=REPO, capture_output=True, text=True, timeout=1800,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+    )
+    assert bench.returncode == 0, bench.stdout[-2000:] + bench.stderr[-2000:]
+    doc = json.loads(out.read_text())
+    assert doc["_meta"]["profile"] == "tiny"
+    proc = _run_cli("check", "--bench", str(out), "--format", "github")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

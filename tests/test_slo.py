@@ -1,0 +1,332 @@
+"""repro.obs.slo: rolling-window SLO monitor + overload state machine.
+
+Load-bearing contracts pinned here:
+
+* the stdlib windowed percentile equals ``np.percentile`` (linear
+  interpolation) exactly, over every window size that matters;
+* the hysteresis schedule is deterministic under a scripted clock:
+  ``ok -> degraded -> overloaded -> ok`` exactly when ``trip_s`` /
+  ``clear_s`` say so, a sub-``trip_s`` spike never escalates, and the
+  queue-depth ledger (admit minus done) can't leak through cancel or
+  exception paths because the server hangs it off the future's own done
+  callback;
+* ``/healthz`` + ``/slo`` are served live next to ``/metrics`` on the
+  same ``serve_metrics`` handle (503 exactly while overloaded), and the
+  in-use-port / port-0 behaviors of that handle are explicit.
+"""
+
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import RenderConfig, look_at_camera, orbit_cameras, random_gaussians
+from repro.obs.metrics import Registry, serve_metrics, validate_prometheus
+from repro.obs.slo import SLOMonitor, SLOTargets, _percentile
+from repro.serve import RenderServer
+
+SIZE = 32
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _monitor(targets: SLOTargets, **kw) -> tuple[SLOMonitor, FakeClock]:
+    clk = FakeClock()
+    return SLOMonitor(targets, clock=clk, **kw), clk
+
+
+# -- window math -----------------------------------------------------------
+
+
+class TestWindowMath:
+    @pytest.mark.parametrize("n", [1, 2, 3, 5, 19, 20, 50, 100])
+    @pytest.mark.parametrize("q", [50.0, 95.0, 99.0])
+    def test_percentile_matches_numpy(self, n, q):
+        rng = np.random.default_rng(n)
+        vals = sorted(rng.exponential(100.0, size=n).tolist())
+        assert _percentile(vals, q) == pytest.approx(
+            float(np.percentile(vals, q)), abs=1e-9, rel=1e-12
+        )
+
+    def test_windowed_p95_equals_numpy_after_pruning(self):
+        m, clk = _monitor(SLOTargets(p95_ms=1e9, window_s=10.0))
+        # 40 observations, one per 0.5s: only the last 10s count (horizon
+        # inclusive -> 21 events: t in [10.0, 20.0]).
+        lats = [float(i) for i in range(40)]
+        for lat in lats:
+            clk.t += 0.5
+            m.observe_latency(lat)
+        w = m.window()
+        live = lats[-21:]  # exactly the un-pruned tail
+        assert w["n_latency"] == len(live)
+        assert w["p95_ms"] == pytest.approx(float(np.percentile(live, 95)))
+        assert w["p50_ms"] == pytest.approx(float(np.percentile(live, 50)))
+
+    def test_req_s_uses_elapsed_capped_span(self):
+        m, clk = _monitor(SLOTargets(window_s=30.0))
+        clk.t = 2.0
+        m.note_admit(4)
+        m.note_done(4)
+        # Monitor is 2s old: rate divides by true age, not the 30s window.
+        assert m.window()["req_s"] == pytest.approx(4 / 2.0)
+
+    def test_reject_rate_over_offered(self):
+        m, clk = _monitor(SLOTargets())
+        m.note_admit(3)
+        m.note_reject(1)
+        assert m.window()["reject_rate"] == pytest.approx(0.25)
+        assert m.window()["queue_depth"] == 3
+
+
+# -- state machine ---------------------------------------------------------
+
+TARGETS = SLOTargets(
+    p95_ms=100.0,
+    max_queue_depth=10.0,
+    overload_factor=2.0,
+    window_s=60.0,
+    trip_s=1.0,
+    clear_s=2.0,
+)
+
+
+class TestStateMachine:
+    def test_scripted_hysteresis_full_cycle(self):
+        m, clk = _monitor(TARGETS)
+        assert m.state == "ok"
+        # Soft breach (p95 over 100, under 200) sustained past trip_s.
+        m.observe_latency(150.0)
+        assert m.state == "ok"  # pressure noted, hold not yet elapsed
+        clk.t = 0.5
+        m.observe_latency(150.0)
+        assert m.state == "ok"
+        clk.t = 1.1
+        m.observe_latency(150.0)
+        assert m.state == "degraded"
+        # Hard breach (p95 over 2x the target) sustained past trip_s.
+        clk.t = 1.2
+        m.observe_latency(400.0)
+        assert m.state == "degraded"
+        clk.t = 2.3
+        m.observe_latency(400.0)
+        assert m.state == "overloaded"
+        # Recovery: window drains, calm must hold clear_s, then a direct
+        # overloaded -> ok jump (no forced pass through degraded).
+        clk.t = 70.0
+        assert m.evaluate() == "overloaded"
+        clk.t = 71.9
+        assert m.evaluate() == "overloaded"
+        clk.t = 72.1
+        assert m.evaluate() == "ok"
+        assert [(t["from"], t["to"]) for t in m.transitions()] == [
+            ("ok", "degraded"),
+            ("degraded", "overloaded"),
+            ("overloaded", "ok"),
+        ]
+
+    def test_sub_trip_spike_never_escalates(self):
+        m, clk = _monitor(TARGETS)
+        m.note_admit(20)  # depth 20 > 10: hard pressure...
+        assert m.state == "ok"
+        clk.t = 0.5  # ...but gone before trip_s elapses
+        m.note_done(20)
+        clk.t = 5.0
+        assert m.evaluate() == "ok"
+        assert m.transitions() == []
+
+    def test_cold_start_grace_on_throughput_floor(self):
+        # A just-admitted first request reads req_s=0; that must not trip
+        # the min_req_s floor until a full expected service interval of
+        # demand (1/min_req_s) has elapsed with nothing completing.
+        m, clk = _monitor(SLOTargets(min_req_s=1.0, window_s=60.0, trip_s=0.0))
+        m.note_admit()
+        assert m.state == "ok"
+        clk.t = 0.9
+        assert m.evaluate() == "ok"  # still inside the grace interval
+        clk.t = 1.1
+        assert m.evaluate() == "overloaded"  # 0 req/s past grace IS a stall
+
+    def test_idle_monitor_is_healthy(self):
+        m, clk = _monitor(SLOTargets(min_req_s=5.0, p95_ms=10.0))
+        clk.t = 100.0
+        assert m.evaluate() == "ok"
+        healthy, doc = m.healthz()
+        assert healthy and doc["status"] == "ok"
+
+    def test_gauges_and_transition_counter_exported(self):
+        reg = Registry()
+        clk = FakeClock()
+        m = SLOMonitor(
+            SLOTargets(max_queue_depth=2.0, trip_s=0.0, clear_s=1.0),
+            registry=reg, clock=clk, mode="continuous",
+        )
+        m.note_admit(5)
+        assert m.state == "overloaded"
+        text = reg.render_prometheus()
+        validate_prometheus(text)
+        assert 'slo_state{mode="continuous"} 2' in text
+        assert "slo_queue_depth" in text and "slo_state_transitions_total" in text
+
+    def test_targets_validation(self):
+        with pytest.raises(ValueError):
+            SLOTargets(overload_factor=0.5)
+        with pytest.raises(ValueError):
+            SLOTargets(window_s=0.0)
+
+
+# -- HTTP surfaces ---------------------------------------------------------
+
+
+def _get(port: int, path: str):
+    try:
+        with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}{path}", timeout=10
+        ) as r:
+            return r.status, r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read()
+
+
+class TestEndpoints:
+    def test_healthz_slo_metrics_served_together(self):
+        reg = Registry()
+        clk = FakeClock()
+        m = SLOMonitor(
+            SLOTargets(max_queue_depth=2.0, trip_s=0.0, clear_s=0.5),
+            registry=reg, clock=clk,
+        )
+        srv = serve_metrics(reg, slo=m)
+        try:
+            code, body = _get(srv.port, "/metrics")
+            assert code == 200 and b"slo_state" in body
+            code, body = _get(srv.port, "/healthz")
+            assert code == 200 and json.loads(body)["status"] == "ok"
+            # Overload -> /healthz flips to 503, /slo stays 200 and says why.
+            m.note_admit(5)
+            code, body = _get(srv.port, "/healthz")
+            assert code == 503 and json.loads(body)["ok"] is False
+            code, body = _get(srv.port, "/slo")
+            doc = json.loads(body)
+            assert code == 200 and doc["state"] == "overloaded"
+            assert doc["window"]["queue_depth"] == 5
+            assert doc["targets"]["max_queue_depth"] == 2.0
+            # Drain + clear_s: pollers observe recovery with no new traffic.
+            m.note_done(5)
+            clk.t = 1.0
+            code, body = _get(srv.port, "/healthz")
+            assert code == 200 and json.loads(body)["status"] == "ok"
+            code, _ = _get(srv.port, "/nope")
+            assert code == 404
+        finally:
+            srv.shutdown()
+
+    def test_no_slo_404s_health_endpoints(self):
+        srv = serve_metrics(Registry())
+        try:
+            assert _get(srv.port, "/metrics")[0] == 200
+            assert _get(srv.port, "/healthz")[0] == 404
+            assert _get(srv.port, "/slo")[0] == 404
+        finally:
+            srv.shutdown()
+
+    def test_port_zero_reports_bound_port(self):
+        srv = serve_metrics(Registry(), port=0)
+        try:
+            assert isinstance(srv.port, int) and srv.port > 0
+            assert srv.port == srv.server_address[1]
+            assert _get(srv.port, "/metrics")[0] == 200
+        finally:
+            srv.shutdown()
+
+    def test_port_in_use_raises_naming_the_port(self):
+        srv = serve_metrics(Registry())
+        try:
+            with pytest.raises(OSError, match=str(srv.port)):
+                serve_metrics(Registry(), port=srv.port)
+        finally:
+            srv.shutdown()
+
+
+# -- RenderServer integration ---------------------------------------------
+
+
+def _tiny_server(**kw) -> RenderServer:
+    model = random_gaussians(jax.random.PRNGKey(0), 64, extent=1.5)
+    cfg = RenderConfig(raster_path="binned", tile_capacity=64, early_exit=False)
+    return RenderServer(
+        model, cfg, width=SIZE, height=SIZE, max_batch=4, **kw
+    )
+
+
+class TestRenderServerIntegration:
+    def test_targets_build_monitor_and_stats_carry_snapshot(self):
+        srv = _tiny_server(slo=SLOTargets(max_queue_depth=64.0, p95_ms=60_000.0))
+        cams = orbit_cameras(6, radius=5.0, width=SIZE, height=SIZE)
+        with srv:
+            [f.result(timeout=120) for f in map(srv.submit, cams)]
+        snap = srv.stats()["slo"]
+        assert snap["state"] == "ok"
+        assert snap["window"]["n_latency"] == 6
+        assert snap["window"]["queue_depth"] == 0  # every admit was resolved
+        # Latencies feed both the histogram and the SLO window.
+        assert snap["window"]["p95_ms"] > 0.0
+        # The monitor's gauges landed in the *server's* registry.
+        assert "slo_state" in srv.registry.render_prometheus()
+
+    def test_reject_and_cancel_paths_keep_the_ledger_exact(self):
+        srv = _tiny_server(slo=SLOTargets(max_queue_depth=64.0))
+        cam = look_at_camera(
+            (0.0, 1.0, -5.0), (0.0, 0.0, 0.0), width=SIZE, height=SIZE
+        )
+        bad = look_at_camera(
+            (0.0, 1.0, -5.0), (0.0, 0.0, 0.0), width=SIZE * 2, height=SIZE * 2
+        )
+        with srv:
+            with pytest.raises(ValueError):
+                srv.submit(bad)  # size outside the bucket set
+            futs = [srv.submit(cam) for _ in range(4)]
+            [f.result(timeout=120) for f in futs]
+        w = srv.slo.window()
+        assert w["queue_depth"] == 0
+        assert w["reject_rate"] == pytest.approx(1 / 5)
+        # A future cancelled before it ever ran still settles its depth
+        # unit through the done callback.
+        from concurrent.futures import Future
+
+        m, _ = _monitor(SLOTargets())
+        f = Future()
+        m.note_admit()
+        f.add_done_callback(lambda _f: m.note_done())
+        assert m.window()["queue_depth"] == 1
+        f.cancel()
+        assert m.window()["queue_depth"] == 0
+
+    def test_prebuilt_monitor_shared_with_endpoint(self):
+        reg = Registry()
+        m = SLOMonitor(
+            SLOTargets(max_queue_depth=64.0), registry=reg, mode="continuous"
+        )
+        srv = _tiny_server(registry=reg, slo=m)
+        assert srv.slo is m  # adopted, not wrapped
+        http = serve_metrics(reg, slo=m)
+        try:
+            cams = orbit_cameras(4, radius=5.0, width=SIZE, height=SIZE)
+            with srv:
+                [f.result(timeout=120) for f in map(srv.submit, cams)]
+                code, body = _get(http.port, "/slo")
+                assert code == 200
+                assert json.loads(body)["window"]["n_latency"] == 4
+                assert _get(http.port, "/healthz")[0] == 200
+        finally:
+            http.shutdown()

@@ -1,0 +1,41 @@
+"""perfguard — declarative perf-regression gating over the BENCH trajectory.
+
+The repo's analog of the paper's headline claim (a measured 226x
+throughput increase) is the ``BENCH_PR*.json`` trajectory; perfguard is
+what *enforces* it. Budgets are declared in ``[tool.perfguard]`` tables
+in pyproject.toml as dotted metric paths into the BENCH schema with
+absolute floors/ceilings (req/s >=, p95 <=, byte_ratio <=, psnr_db >=)
+and relative-to-baseline tolerances. Detection is noise-aware: metrics
+may carry multiple trials (``benchmarks/run.py --tiny --trials N``),
+perfguard compares *medians* and widens the relative threshold by a
+MAD-scaled noise term so 2-core-CPU jitter doesn't flake CI.
+
+``python -m tools.perfguard check`` loads the latest BENCH results plus
+the committed, provenance-stamped ``perfguard-baseline.json`` and reports
+pass/regress/improve per budget (``--format github`` emits Actions
+annotations); ``update-baseline`` rolls the baseline forward deliberately.
+
+Dependency-free (stdlib only) — the sibling of ``tools.reprolint``, and
+the static half of the observability story whose live half is
+``repro.obs.slo`` (DESIGN.md §13).
+"""
+
+from tools.perfguard.budgets import (
+    Budget,
+    BudgetResult,
+    evaluate_budgets,
+    mad,
+    median,
+    resolve_metric,
+)
+from tools.perfguard.config import load_config
+
+__all__ = [
+    "Budget",
+    "BudgetResult",
+    "evaluate_budgets",
+    "load_config",
+    "mad",
+    "median",
+    "resolve_metric",
+]

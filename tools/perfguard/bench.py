@@ -1,0 +1,137 @@
+"""BENCH/baseline file IO + provenance stamping.
+
+The bench side of the contract: ``benchmarks/run.py`` writes
+``BENCH_*.json`` files whose top level carries a ``_meta`` table —
+``{git_sha, date, schema_version, hostname, trials, profile}`` — so every
+number in the trajectory (and every baseline derived from one) says where
+it came from. Old BENCH files without ``_meta`` still load: they default
+to ``profile="full"``, ``trials=1``.
+
+The baseline side: ``perfguard-baseline.json`` is the committed document
+``{_meta, budgets: {name: {metric, median, mad, n, samples}}}`` that
+``check`` compares against and ``update-baseline`` rolls forward.
+"""
+
+from __future__ import annotations
+
+import datetime
+import glob
+import json
+import os
+import re
+import socket
+import subprocess
+from pathlib import Path
+from typing import Sequence
+
+from tools.perfguard.budgets import Budget, mad, median, resolve_metric, _samples
+
+SCHEMA_VERSION = 1
+_PR_RE = re.compile(r"BENCH_PR(\d+)\.json$")
+
+
+def git_sha(root: Path | str = ".") -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.fspath(root), capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def provenance_meta(
+    *, trials: int, profile: str, root: Path | str = "."
+) -> dict:
+    """The ``_meta`` table stamped into BENCH files and baselines."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": git_sha(root),
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "hostname": socket.gethostname(),
+        "trials": int(trials),
+        "profile": profile,
+    }
+
+
+def latest_bench(root: Path, pattern: str) -> Path | None:
+    """Newest trajectory file by PR number (``BENCH_PR8`` > ``BENCH_PR2``);
+    non-PR-numbered matches sort last by name."""
+    paths = glob.glob(os.fspath(Path(root) / pattern))
+    if not paths:
+        return None
+
+    def key(p: str):
+        m = _PR_RE.search(p)
+        return (1, int(m.group(1)), p) if m else (0, 0, p)
+
+    return Path(max(paths, key=key))
+
+
+def load_bench(path: Path) -> dict:
+    with open(path) as f:
+        bench = json.load(f)
+    if not isinstance(bench, dict):
+        raise ValueError(f"{path}: bench file must hold a JSON object")
+    return bench
+
+
+def bench_profile(bench: dict) -> str:
+    return (bench.get("_meta") or {}).get("profile", "full")
+
+
+def load_baseline(path: Path) -> dict | None:
+    if not Path(path).exists():
+        return None
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "budgets" not in doc:
+        raise ValueError(
+            f"{path}: baseline must hold {{_meta, budgets}} (regenerate "
+            "with `python -m tools.perfguard update-baseline`)"
+        )
+    return doc
+
+
+def build_baseline(
+    budgets: Sequence[Budget],
+    bench: dict,
+    *,
+    source: str,
+    root: Path | str = ".",
+) -> dict:
+    """Capture the current bench medians as the new baseline document.
+
+    Only budgets whose metric resolves in ``bench`` get entries; the rest
+    stay unpinned (their relative check reports "no baseline entry" until
+    a bench run covering them is rolled forward).
+    """
+    meta = (bench.get("_meta") or {})
+    entries: dict[str, dict] = {}
+    for b in budgets:
+        raw = resolve_metric(bench, b.metric)
+        samples = _samples(raw) if raw is not None else None
+        if samples is None:
+            continue
+        entries[b.name] = {
+            "metric": b.metric,
+            "median": median(samples),
+            "mad": mad(samples),
+            "n": len(samples),
+            "samples": samples,
+        }
+    doc_meta = provenance_meta(
+        trials=int(meta.get("trials", 1)),
+        profile=meta.get("profile", "full"),
+        root=root,
+    )
+    doc_meta["source"] = source
+    doc_meta["bench_git_sha"] = meta.get("git_sha", "unknown")
+    doc_meta["bench_date"] = meta.get("date", "unknown")
+    return {"_meta": doc_meta, "budgets": entries}
+
+
+def write_baseline(path: Path, doc: dict) -> None:
+    Path(path).write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")

@@ -1,0 +1,303 @@
+"""Budget model + evaluation: the noise-aware regression decision.
+
+One :class:`Budget` pins one dotted metric path in the BENCH schema. Two
+independent checks apply, and *either* failing flags a regression:
+
+* **absolute** — ``min`` / ``max`` bounds on the measured median. These
+  encode the claims the repo has already banked (fused >= 1.5x unfused,
+  byte_ratio <= 0.45, PSNR >= 40 dB) and hold on any machine.
+* **relative** — the median must stay within a tolerance band of the
+  committed baseline median. The band is widened by the baseline's noise:
+  ``margin = max(rel_tolerance * |baseline|, mad_k * MAD(baseline
+  trials))`` so a metric whose trial-to-trial jitter exceeds the
+  percentage tolerance is judged against its own measured spread (median
+  + MAD are the robust pair — one outlier trial on a noisy 2-core
+  container moves neither). Relative checks only run when the bench and
+  baseline were produced by the same *profile* (tiny vs full) — medians
+  from different scales are not comparable, so a mismatch downgrades the
+  budget to its absolute bounds instead of flaking.
+
+A measured value may be a single scalar (one trial) or a list (the
+``--trials N`` schema); evaluation always reduces to ``median(samples)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+# Budget statuses, in severity order. "missing" (a required metric absent
+# from the bench file) and "regress" both fail the check; everything else
+# passes. "improve" is informational: the metric beat the baseline by more
+# than the noise margin — a candidate for `update-baseline`.
+FAIL_STATUSES = ("regress", "missing")
+STATUSES = ("pass", "improve", "regress", "missing", "skipped")
+
+
+def median(xs: Sequence[float]) -> float:
+    s = sorted(float(x) for x in xs)
+    n = len(s)
+    if n == 0:
+        raise ValueError("median of empty sample set")
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def mad(xs: Sequence[float]) -> float:
+    """Median absolute deviation — the robust spread of the trial set."""
+    m = median(xs)
+    return median([abs(float(x) - m) for x in xs])
+
+
+def resolve_metric(tree: Any, path: str) -> Any:
+    """Resolve a dotted path, tolerating dots *inside* keys.
+
+    BENCH keys like ``"1.5x_capacity"`` contain dots, so a naive
+    ``path.split(".")`` cannot address them. Resolution is greedy: at each
+    dict level, any key that is a prefix of the remaining path (on a dot
+    boundary) is tried, longest first. Returns None when nothing matches.
+    """
+    if path == "":
+        return tree
+    if not isinstance(tree, dict):
+        return None
+    keys = [k for k in tree if path == k or path.startswith(k + ".")]
+    for k in sorted(keys, key=len, reverse=True):
+        rest = path[len(k):].lstrip(".")
+        found = resolve_metric(tree[k], rest)
+        if found is not None:
+            return found
+    return None
+
+
+def _samples(value: Any) -> list[float] | None:
+    """Scalar or trial-list -> list of finite floats; None if not numeric."""
+    if isinstance(value, bool):
+        return None
+    if isinstance(value, (int, float)):
+        vals = [float(value)]
+    elif isinstance(value, list) and value and all(
+        isinstance(v, (int, float)) and not isinstance(v, bool) for v in value
+    ):
+        vals = [float(v) for v in value]
+    else:
+        return None
+    return vals if all(math.isfinite(v) for v in vals) else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """One declarative perf budget over a dotted BENCH metric path."""
+
+    name: str
+    metric: str
+    better: str = "higher"  # "higher" | "lower"
+    min: float | None = None
+    max: float | None = None
+    rel_tolerance: float = 0.25
+    mad_k: float = 3.0
+    relative: bool = True  # False = absolute bounds only (scale-invariant)
+    required: bool = True  # missing metric fails (vs skipped)
+    profiles: tuple[str, ...] = ("tiny", "full")
+
+    @classmethod
+    def from_table(
+        cls,
+        name: str,
+        table: dict,
+        *,
+        default_mad_k: float,
+        default_rel_tolerance: float,
+    ) -> "Budget":
+        if "metric" not in table:
+            raise ValueError(f"budget {name!r}: missing required key 'metric'")
+        better = table.get("better", "higher")
+        if better not in ("higher", "lower"):
+            raise ValueError(
+                f"budget {name!r}: better={better!r} not in ('higher', 'lower')"
+            )
+        profiles = tuple(table.get("profiles", ("tiny", "full")))
+        unknown = set(table) - {
+            "metric", "better", "min", "max", "rel_tolerance", "mad_k",
+            "relative", "required", "profiles",
+        }
+        if unknown:
+            raise ValueError(
+                f"budget {name!r}: unknown key(s) {sorted(unknown)}"
+            )
+        return cls(
+            name=name,
+            metric=str(table["metric"]),
+            better=better,
+            min=float(table["min"]) if "min" in table else None,
+            max=float(table["max"]) if "max" in table else None,
+            rel_tolerance=float(
+                table.get("rel_tolerance", default_rel_tolerance)
+            ),
+            mad_k=float(table.get("mad_k", default_mad_k)),
+            relative=bool(table.get("relative", True)),
+            required=bool(table.get("required", True)),
+            profiles=profiles,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetResult:
+    """Outcome of one budget against one bench file (+ optional baseline)."""
+
+    budget: Budget
+    status: str  # one of STATUSES
+    message: str
+    value: float | None = None  # measured median
+    n_samples: int = 0
+    baseline_value: float | None = None  # baseline median
+    threshold: float | None = None  # the relative bound that applied
+
+    @property
+    def failed(self) -> bool:
+        return self.status in FAIL_STATUSES
+
+    def text(self) -> str:
+        mark = {
+            "pass": "ok  ", "improve": "UP  ", "regress": "FAIL",
+            "missing": "FAIL", "skipped": "skip",
+        }[self.status]
+        return f"[{mark}] {self.budget.name:28s} {self.message}"
+
+    def github(self) -> str:
+        """GitHub Actions workflow-command annotation (one line)."""
+        level = "error" if self.failed else "notice"
+        msg = (
+            self.message.replace("%", "%25")
+            .replace("\r", "%0D")
+            .replace("\n", "%0A")
+        )
+        return f"::{level} title=perfguard[{self.budget.name}]::{msg}"
+
+
+def _fmt(x: float | None) -> str:
+    if x is None:
+        return "—"
+    if x == 0 or 1e-3 <= abs(x) < 1e6:
+        return f"{x:.4g}"
+    return f"{x:.3e}"
+
+
+def evaluate_budget(
+    budget: Budget,
+    bench: dict,
+    baseline_entry: dict | None,
+    *,
+    profile_match: bool,
+) -> BudgetResult:
+    """Evaluate one budget. ``baseline_entry`` is the committed
+    ``{median, mad, samples}`` record for this budget (None = no baseline
+    yet); ``profile_match`` gates the relative check (see module doc)."""
+    raw = resolve_metric(bench, budget.metric)
+    samples = _samples(raw) if raw is not None else None
+    if samples is None:
+        status = "missing" if budget.required else "skipped"
+        return BudgetResult(
+            budget, status,
+            f"metric {budget.metric!r} absent from bench results"
+            + ("" if budget.required else " (optional)"),
+        )
+    med = median(samples)
+    n = len(samples)
+    meas = f"{budget.metric} = {_fmt(med)} (median of {n})"
+
+    # Absolute bounds first: they hold on any machine and any baseline.
+    if budget.min is not None and med < budget.min:
+        return BudgetResult(
+            budget, "regress",
+            f"{meas} below absolute floor {_fmt(budget.min)}",
+            value=med, n_samples=n, threshold=budget.min,
+        )
+    if budget.max is not None and med > budget.max:
+        return BudgetResult(
+            budget, "regress",
+            f"{meas} above absolute ceiling {_fmt(budget.max)}",
+            value=med, n_samples=n, threshold=budget.max,
+        )
+
+    if not budget.relative:
+        return BudgetResult(
+            budget, "pass", f"{meas} within absolute bounds",
+            value=med, n_samples=n,
+        )
+    if baseline_entry is None:
+        return BudgetResult(
+            budget, "pass",
+            f"{meas} — no baseline entry; absolute bounds only "
+            "(run `update-baseline` to pin one)",
+            value=med, n_samples=n,
+        )
+    if not profile_match:
+        return BudgetResult(
+            budget, "pass",
+            f"{meas} — baseline profile differs from bench profile; "
+            "absolute bounds only",
+            value=med, n_samples=n,
+        )
+
+    base_med = float(baseline_entry["median"])
+    base_mad = float(baseline_entry.get("mad", 0.0))
+    margin = max(budget.rel_tolerance * abs(base_med), budget.mad_k * base_mad)
+    sign = 1.0 if budget.better == "higher" else -1.0
+    # better=higher: regress below base-margin, improve above base+margin;
+    # better=lower is the mirror image.
+    worst_ok = base_med - sign * margin
+    regressed = sign * med < sign * worst_ok
+    improved = sign * med > sign * (base_med + sign * margin)
+    ctx = (
+        f"baseline {_fmt(base_med)} (MAD {_fmt(base_mad)}), "
+        f"margin {_fmt(margin)}"
+    )
+    if regressed:
+        return BudgetResult(
+            budget, "regress",
+            f"{meas} regressed past {_fmt(worst_ok)}: {ctx}",
+            value=med, n_samples=n, baseline_value=base_med,
+            threshold=worst_ok,
+        )
+    if improved:
+        return BudgetResult(
+            budget, "improve",
+            f"{meas} beats baseline by more than the noise margin: {ctx} "
+            "— consider `update-baseline`",
+            value=med, n_samples=n, baseline_value=base_med,
+            threshold=worst_ok,
+        )
+    return BudgetResult(
+        budget, "pass", f"{meas} within margin of {ctx}",
+        value=med, n_samples=n, baseline_value=base_med, threshold=worst_ok,
+    )
+
+
+def evaluate_budgets(
+    budgets: Sequence[Budget],
+    bench: dict,
+    baseline: dict | None,
+    *,
+    profile: str,
+) -> list[BudgetResult]:
+    """Evaluate every budget whose ``profiles`` admits ``profile``.
+
+    ``baseline`` is the full baseline document (``{_meta, budgets}``);
+    relative checks engage only when its ``_meta.profile`` matches the
+    bench profile.
+    """
+    base_budgets = (baseline or {}).get("budgets", {})
+    base_profile = ((baseline or {}).get("_meta") or {}).get("profile")
+    out = []
+    for b in budgets:
+        if profile not in b.profiles:
+            continue
+        out.append(
+            evaluate_budget(
+                b, bench, base_budgets.get(b.name),
+                profile_match=(base_profile == profile),
+            )
+        )
+    return out

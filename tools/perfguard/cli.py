@@ -1,0 +1,146 @@
+"""Command line: ``python -m tools.perfguard <check|update-baseline|list-budgets>``.
+
+``check`` exits 0 only when no budget regressed (or is missing while
+required); ``update-baseline`` rolls the committed baseline forward
+*deliberately* — it is a reviewed action, never something CI does for you
+(DESIGN.md §13 has the when-to-roll-forward policy).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.perfguard import bench as bench_io
+from tools.perfguard.budgets import evaluate_budgets
+from tools.perfguard.config import load_config
+
+
+def _load(args) -> tuple[dict, dict, Path]:
+    root = Path(args.root).resolve()
+    cfg = load_config(root)
+    if args.bench:
+        bench_path = Path(args.bench)
+    else:
+        bench_path = bench_io.latest_bench(root, cfg["bench_glob"])
+        if bench_path is None:
+            raise SystemExit(
+                f"perfguard: no bench results matching {cfg['bench_glob']!r} "
+                f"under {root} (run `python -m benchmarks.run [--tiny]` or "
+                "pass --bench)"
+            )
+    bench = bench_io.load_bench(bench_path)
+    return cfg, bench, bench_path
+
+
+def cmd_check(args) -> int:
+    cfg, bench, bench_path = _load(args)
+    baseline_path = Path(args.root).resolve() / (args.baseline or cfg["baseline"])
+    baseline = bench_io.load_baseline(baseline_path)
+    profile = bench_io.bench_profile(bench)
+    results = evaluate_budgets(
+        cfg["budgets"], bench, baseline, profile=profile
+    )
+    failed = [r for r in results if r.failed]
+    improved = [r for r in results if r.status == "improve"]
+    if args.format == "github":
+        for r in results:
+            if r.failed or r.status == "improve":
+                print(r.github())
+    else:
+        for r in results:
+            print(r.text())
+    meta = bench.get("_meta") or {}
+    print(
+        f"perfguard: {len(results)} budget(s) against {bench_path.name} "
+        f"(profile={profile}, trials={meta.get('trials', 1)}, "
+        f"sha={meta.get('git_sha', 'unknown')}) — "
+        f"{len(failed)} regressed, {len(improved)} improved"
+        + ("" if baseline else "; no baseline file — absolute bounds only"),
+        file=sys.stderr,
+    )
+    return 1 if failed else 0
+
+
+def cmd_update_baseline(args) -> int:
+    cfg, bench, bench_path = _load(args)
+    root = Path(args.root).resolve()
+    baseline_path = root / (args.baseline or cfg["baseline"])
+    doc = bench_io.build_baseline(
+        cfg["budgets"], bench, source=bench_path.name, root=root
+    )
+    bench_io.write_baseline(baseline_path, doc)
+    meta = doc["_meta"]
+    print(
+        f"perfguard: wrote {len(doc['budgets'])} baseline entr(ies) to "
+        f"{baseline_path} (profile={meta['profile']}, "
+        f"trials={meta['trials']}, sha={meta['git_sha']})",
+        file=sys.stderr,
+    )
+    return 0
+
+
+def cmd_list_budgets(args) -> int:
+    cfg = load_config(Path(args.root).resolve())
+    for b in cfg["budgets"]:
+        bounds = []
+        if b.min is not None:
+            bounds.append(f">= {b.min:g}")
+        if b.max is not None:
+            bounds.append(f"<= {b.max:g}")
+        if b.relative:
+            bounds.append(
+                f"within {b.rel_tolerance:.0%} (or {b.mad_k:g}*MAD) of baseline"
+            )
+        print(
+            f"{b.name:28s} {b.metric}  [{b.better}] "
+            f"{'; '.join(bounds) or 'no bounds'}  profiles={list(b.profiles)}"
+        )
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.perfguard",
+        description="Declarative perf-regression gating over BENCH_*.json.",
+    )
+    ap.add_argument(
+        "--root", default=".",
+        help="repo root (pyproject.toml location; default: cwd)",
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument(
+        "--bench", default=None,
+        help="bench results file (default: newest bench_glob match by PR "
+        "number)",
+    )
+    common.add_argument(
+        "--baseline", default=None,
+        help="baseline file (default: [tool.perfguard] baseline)",
+    )
+
+    p = sub.add_parser(
+        "check", parents=[common],
+        help="evaluate every budget; exit 1 on any regression",
+    )
+    p.add_argument(
+        "--format", choices=("text", "github"), default="text",
+        help="output format (github = Actions error/notice annotations)",
+    )
+    p.set_defaults(func=cmd_check)
+
+    p = sub.add_parser(
+        "update-baseline", parents=[common],
+        help="pin current bench medians as the new baseline (deliberate, "
+        "reviewed)",
+    )
+    p.set_defaults(func=cmd_update_baseline)
+
+    p = sub.add_parser("list-budgets", help="print the configured budgets")
+    p.set_defaults(func=cmd_list_budgets)
+
+    args = ap.parse_args(argv)
+    return args.func(args)

@@ -1,0 +1,75 @@
+"""``[tool.perfguard]`` configuration: harness knobs + budget tables.
+
+Budgets live in pyproject.toml so a new benchmark registers its floors in
+the same review diff that adds the numbers (DESIGN.md §13):
+
+.. code-block:: toml
+
+    [tool.perfguard]
+    baseline = "perfguard-baseline.json"
+    bench_glob = "BENCH_PR*.json"
+    mad_k = 3.0           # default noise widening: k * MAD(baseline trials)
+    rel_tolerance = 0.25  # default relative-to-baseline tolerance
+
+    [tool.perfguard.budgets.serving-req-s]
+    metric = "bench_serving.server.req_s"  # dotted path into the BENCH json
+    better = "higher"                      # or "lower" (p95, byte_ratio)
+    min = 1.0                              # absolute floor (max = ceiling)
+    rel_tolerance = 0.3                    # override the default
+    profiles = ["tiny"]                    # bench profiles this applies to
+    relative = true                        # false = absolute bounds only
+
+Parsing reuses reprolint's TOML-subset reader (tomllib on >=3.11, the
+mini parser on the 3.10 CI floor) via its ``prefix`` parameter — one
+stdlib-only parser shared by both tools.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any
+
+from tools.perfguard.budgets import Budget
+from tools.reprolint.config import _read_sections
+
+SECTION_PREFIX = "tool.perfguard"
+
+DEFAULTS: dict[str, Any] = {
+    "baseline": "perfguard-baseline.json",
+    "bench_glob": "BENCH_PR*.json",
+    "mad_k": 3.0,
+    "rel_tolerance": 0.25,
+}
+
+
+def load_config(root: Path) -> dict[str, Any]:
+    """Read ``[tool.perfguard]`` (+ budget sub-tables) from pyproject.toml.
+
+    Returns ``{baseline, bench_glob, mad_k, rel_tolerance,
+    budgets: list[Budget]}``; budgets inherit the top-level ``mad_k`` /
+    ``rel_tolerance`` unless their table overrides them.
+    """
+    cfg: dict[str, Any] = dict(DEFAULTS)
+    cfg["budgets"] = []
+    pyproject = Path(root) / "pyproject.toml"
+    if not pyproject.exists():
+        return cfg
+    sections = _read_sections(pyproject.read_text(), SECTION_PREFIX)
+    top = sections.get(SECTION_PREFIX, {})
+    for key in ("baseline", "bench_glob", "mad_k", "rel_tolerance"):
+        if key in top:
+            cfg[key] = top[key]
+    budget_prefix = SECTION_PREFIX + ".budgets."
+    for name in sorted(sections):
+        if not name.startswith(budget_prefix):
+            continue
+        table = sections[name]
+        cfg["budgets"].append(
+            Budget.from_table(
+                name[len(budget_prefix):],
+                table,
+                default_mad_k=float(cfg["mad_k"]),
+                default_rel_tolerance=float(cfg["rel_tolerance"]),
+            )
+        )
+    return cfg

@@ -3,9 +3,13 @@
 Uses :mod:`tomllib` when available (Python >= 3.11) and falls back to a
 deliberately tiny TOML-subset reader on 3.10 (the container/CI floor).
 The subset covers exactly what reprolint's own tables use: ``[a.b.c]``
-headers, string / bool / int values, and (possibly multiline) arrays of
-strings. Unknown sections are skipped wholesale, so the rest of
+headers, string / bool / int / float values, and (possibly multiline)
+arrays of strings. Unknown sections are skipped wholesale, so the rest of
 pyproject.toml can use any TOML it likes.
+
+``_read_sections`` is shared with the sibling ``tools.perfguard`` (whose
+``[tool.perfguard]`` budget tables use the same subset plus floats) via
+the ``prefix`` parameter — one parser, two stdlib-only tools.
 """
 
 from __future__ import annotations
@@ -46,7 +50,9 @@ def rule_table(cfg: dict[str, Any], rule: str) -> dict[str, Any]:
     return cfg.get("rules", {}).get(rule, {})
 
 
-def _read_sections(text: str) -> dict[str, dict[str, Any]]:
+def _read_sections(
+    text: str, prefix: str = SECTION_PREFIX
+) -> dict[str, dict[str, Any]]:
     try:
         import tomllib  # Python >= 3.11
 
@@ -55,7 +61,7 @@ def _read_sections(text: str) -> dict[str, dict[str, Any]]:
         _flatten(data, "", out)
         return out
     except ModuleNotFoundError:
-        return _mini_toml(text)
+        return _mini_toml(text, prefix)
 
 
 def _flatten(node: Any, prefix: str, out: dict[str, dict[str, Any]]) -> None:
@@ -75,7 +81,9 @@ _HEADER = re.compile(r"^\[([A-Za-z0-9_.\-\"]+)\]\s*(?:#.*)?$")
 _KEYVAL = re.compile(r"^([A-Za-z0-9_\-]+)\s*=\s*(.*)$")
 
 
-def _mini_toml(text: str) -> dict[str, dict[str, Any]]:
+def _mini_toml(
+    text: str, prefix: str = SECTION_PREFIX
+) -> dict[str, dict[str, Any]]:
     sections: dict[str, dict[str, Any]] = {}
     current: dict[str, Any] | None = None
     lines = text.splitlines()
@@ -88,7 +96,7 @@ def _mini_toml(text: str) -> dict[str, dict[str, Any]]:
         m = _HEADER.match(line)
         if m:
             name = m.group(1).replace('"', "")
-            if name == SECTION_PREFIX or name.startswith(SECTION_PREFIX + "."):
+            if name == prefix or name.startswith(prefix + "."):
                 current = sections.setdefault(name, {})
             else:
                 current = None
@@ -139,6 +147,10 @@ def _parse_value(raw: str) -> Any:
         return raw == "true"
     try:
         return int(raw)
+    except ValueError:
+        pass
+    try:
+        return float(raw)
     except ValueError:
         return raw
 
